@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: timing, CSV emission."""
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+
+OUT_DIR = os.environ.get("BENCH_OUT", "results")
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall time of fn(*args) (block_until_ready'd)."""
+    import jax
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2], r
+
+
+def emit(name: str, rows: list[dict]):
+    """Print a CSV block and save it under results/."""
+    if not rows:
+        print(f"# {name}: no rows")
+        return
+    keys = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    print(f"# --- {name} ---")
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys, restval="")
+        w.writeheader()
+        w.writerows(rows)

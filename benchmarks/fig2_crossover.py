@@ -1,0 +1,49 @@
+"""Paper Figure 2: Cov vs Obs runtime as n grows (fixed p).
+
+Measured single-process runtimes of both variants on CPU-sized problems
+plus the analytic Lemma-3.1/3.5 model evaluated at the PAPER's scale
+(p=40k, 16 nodes) so the crossover structure is visible at both scales.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import graphs
+from repro.core.costmodel import EDISON, Machine, ProblemShape, cov_costs, \
+    obs_costs
+from repro.core.prox import fit_reference
+
+from .common import emit, timeit
+
+
+def run():
+    rows = []
+    p = 192
+    for n in [48, 96, 192, 384, 768, 1536]:
+        prob = graphs.make_problem("chain", p=p, n=n, seed=0)
+        t_cov, r_cov = timeit(
+            lambda: fit_reference(jnp.asarray(prob.s), 0.15, 0.05,
+                                  tol=1e-5, max_iters=150), repeats=2)
+        t_obs, r_obs = timeit(
+            lambda: fit_reference(jnp.asarray(prob.x), 0.15, 0.05,
+                                  variant="obs", tol=1e-5, max_iters=150),
+            repeats=2)
+        rows.append({
+            "p": p, "n": n,
+            "t_cov_s": round(t_cov, 4), "t_obs_s": round(t_obs, 4),
+            "iters_cov": int(r_cov.iters), "iters_obs": int(r_obs.iters),
+            "cov_faster": t_cov < t_obs,
+        })
+    emit("fig2_crossover_measured", rows)
+
+    # analytic overlay at paper scale (p=40k, 16 nodes, Edison constants)
+    arows = []
+    for n in [100, 200, 400, 800, 1600, 3200, 6400, 12800]:
+        shape = ProblemShape(p=40000, n=n, d=4.0, s=20, t=8.0)
+        tc = cov_costs(shape, 32, 1, 1, EDISON).total
+        to = obs_costs(shape, 32, 1, 1, EDISON).total
+        arows.append({"p": 40000, "n": n, "model_t_cov_s": round(tc, 2),
+                      "model_t_obs_s": round(to, 2),
+                      "cov_faster": tc < to})
+    emit("fig2_crossover_model", arows)
+    return rows + arows

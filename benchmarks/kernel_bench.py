@@ -1,0 +1,80 @@
+"""Pallas kernel microbenchmarks: interpret-mode allclose + flop/byte
+accounting per kernel configuration (the wall times are CPU-interpret
+and NOT indicative of TPU speed — the flop/byte model is the artifact)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import emit, timeit
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # fused prox: one pass of p^2 state + stats vs 3 separate passes
+    for p in [256, 512]:
+        z = rng.standard_normal((p, p)).astype(np.float32)
+        mask = np.eye(p, dtype=np.float32)
+        out, *stats = ops.fused_prox_stats(jnp.asarray(z),
+                                           jnp.asarray(mask), 0.3)
+        r = ref.fused_prox_stats(jnp.asarray(z), jnp.asarray(mask), 0.3)
+        ok = bool(np.allclose(np.asarray(out), np.asarray(r[0]),
+                              rtol=1e-5))
+        rows.append({"kernel": "fused_prox", "shape": f"{p}x{p}",
+                     "allclose": ok,
+                     "bytes_one_pass": 2 * 4 * p * p,
+                     "bytes_unfused_3pass": 6 * 4 * p * p})
+
+    # block-sparse matmul: flops saved vs dense at various block density
+    p, m, bs = 512, 256, 64
+    for density in [0.1, 0.3, 1.0]:
+        a = rng.standard_normal((p, p)).astype(np.float32)
+        keep = rng.random((p // bs, p // bs)) < density
+        for r_ in range(p // bs):
+            for c_ in range(p // bs):
+                if not keep[r_, c_]:
+                    a[r_ * bs:(r_ + 1) * bs, c_ * bs:(c_ + 1) * bs] = 0
+        vals, rowi, coli = ref.dense_to_block_csr(a, bs)
+        b = rng.standard_normal((p, m)).astype(np.float32)
+        out = ops.blocksparse_matmul(jnp.asarray(vals), jnp.asarray(rowi),
+                                     jnp.asarray(coli), jnp.asarray(b))
+        ok = bool(np.allclose(np.asarray(out), a @ b, rtol=1e-4,
+                              atol=1e-4))
+        dense_flops = 2 * p * p * m
+        sparse_flops = 2 * vals.shape[0] * bs * bs * m
+        rows.append({"kernel": "blocksparse_matmul",
+                     "shape": f"{p}x{p}@{p}x{m}",
+                     "allclose": ok,
+                     "block_density": density,
+                     "flops_dense": dense_flops,
+                     "flops_sparse": sparse_flops,
+                     "flop_saving": round(1 - sparse_flops / dense_flops,
+                                          3)})
+
+    # flash attention: O(L^2) bytes (naive) vs O(L*block) VMEM footprint
+    for L, window in [(256, None), (512, 128)]:
+        B, H, D = 1, 4, 64
+        q = rng.standard_normal((B, H, L, D)).astype(np.float32)
+        k = rng.standard_normal((B, H, L, D)).astype(np.float32)
+        v = rng.standard_normal((B, H, L, D)).astype(np.float32)
+        o = ops.flash_attention(jnp.asarray(q), jnp.asarray(k),
+                                jnp.asarray(v), window=window,
+                                block_q=128, block_k=128)
+        r = ref.attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          window=window)
+        ok = bool(np.allclose(np.asarray(o), np.asarray(r), rtol=2e-3,
+                              atol=2e-3))
+        naive = 4 * B * H * L * L
+        flash = 4 * B * H * L * 128 * 2
+        skipped = 0.0 if window is None else 1 - min(1.0, window * 2 / L)
+        rows.append({"kernel": "flash_attention", "shape": f"L={L}",
+                     "allclose": ok, "window": window or 0,
+                     "logits_bytes_naive": naive,
+                     "vmem_bytes_flash": flash,
+                     "tile_skip_frac": round(skipped, 3)})
+    emit("kernel_bench", rows)
+    return rows

@@ -1,0 +1,46 @@
+"""LM-zoo roofline table: reads the dry-run records (results/*.jsonl)
+and renders the §Roofline table; falls back to the analytic model when
+no dry-run artifact exists yet."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def load_records():
+    import repro.configs as C
+    recs = {}
+    for path in sorted(glob.glob(os.path.join("results", "dryrun*.jsonl"))):
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                recs[(C.canon(r["arch"]), r["shape"], r["mesh"])] = r
+    valid = {(C.canon(a), s) for a, s in C.cells()}
+    return [r for k, r in recs.items() if (k[0], k[1]) in valid]
+
+
+def run():
+    recs = load_records()
+    if not recs:
+        print("# no dry-run records yet — run "
+              "`python -m repro.launch.dryrun --all --out "
+              "results/dryrun_baseline.jsonl` first")
+        return []
+    rows = []
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "t_compute_ms": round(1e3 * r["t_compute"], 2),
+            "t_memory_ms": round(1e3 * r["t_memory"], 2),
+            "t_collective_ms": round(1e3 * r["t_collective"], 2),
+            "dominant": r["dominant"],
+            "useful_frac": round(r["useful_frac"], 3),
+            "mfu_at_bound_pct": round(100 * r["mfu_at_bound"], 2),
+            "fits_hbm": r["fits_hbm"],
+            "bytes_per_dev_gb": round(r["total_bytes_per_dev"] / 1e9, 2),
+        })
+    emit("lm_roofline", rows)
+    return rows

@@ -1,0 +1,42 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,table1]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = ["fig2_crossover", "fig3_replication", "fig4_scaling",
+           "table1_recovery", "kernel_bench", "lm_roofline"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else MODULES
+    failures = []
+    for name in names:
+        full = [m for m in MODULES if m.startswith(name)]
+        for mod_name in full or [name]:
+            print(f"\n==== benchmarks.{mod_name} ====")
+            t0 = time.time()
+            try:
+                mod = __import__(f"benchmarks.{mod_name}",
+                                 fromlist=["run"])
+                mod.run()
+                print(f"# {mod_name} done in {time.time()-t0:.1f}s")
+            except Exception:
+                traceback.print_exc()
+                failures.append(mod_name)
+    if failures:
+        print(f"\nFAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with the full production loop (checkpointing, heartbeat, straggler
+monitor, deterministic data pipeline).
+
+  PYTHONPATH=src python examples/lm_train.py [--steps 300]
+
+The model is a scaled-down h2o-danube (same family: GQA + SWA + SwiGLU).
+Loss must drop well below the uniform baseline ln(vocab).
+"""
+import argparse
+import math
+import tempfile
+
+import repro.configs as C
+from repro.train.loop import TrainerConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    # ~100M params: 12L x 512d x 8H, vocab 32000
+    cfg = C.get("h2o-danube-1.8b").with_(
+        name="danube-100m", n_layers=12, d_model=512, n_heads=8, n_kv=4,
+        d_ff=1536, window=256, remat=False, n_micro=1, dtype="float32")
+    n = cfg.param_count()
+    print(f"model: {cfg.name}, {n/1e6:.1f}M params")
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="lm_train_ckpt_")
+    tc = TrainerConfig(seq_len=256, global_batch=8, steps=args.steps,
+                       peak_lr=1e-3, warmup=30, ckpt_dir=ckpt_dir,
+                       ckpt_every=100, log_every=20,
+                       heartbeat_path=f"{ckpt_dir}/heartbeat.json")
+    res = train(cfg, tc)
+    uniform = math.log(cfg.vocab)
+    print(f"\nloss: {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+          f"(uniform baseline {uniform:.3f})")
+    assert res.losses[-1] < res.losses[0] - 0.5, "training did not learn"
+    print(f"checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Render the §Roofline markdown table from results/dryrun*.jsonl
+(later files override earlier ones per (arch, shape, mesh) cell)."""
+import glob
+import json
+import sys
+
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import repro.configs as C  # noqa: E402
+
+recs = {}
+src = {}
+for path in sorted(glob.glob("results/dryrun*.jsonl")):
+    for line in open(path):
+        r = json.loads(line)
+        key = (C.canon(r["arch"]), r["shape"], r["mesh"])
+        recs[key] = r
+        src[key] = os.path.basename(path)
+
+valid = {(C.canon(a), s) for a, s in C.cells()}
+
+print("| arch | shape | mesh | compute ms | memory ms | coll ms | "
+      "dominant | bound s | useful | MFU@bound | fits HBM | GB/dev |")
+print("|---|---|---|---:|---:|---:|---|---:|---:|---:|---|---:|")
+nfit = 0
+shown = 0
+for (a, s, m), r in sorted(recs.items()):
+    if (C.canon(a), s) not in valid:
+        continue
+    shown += 1
+    nfit += bool(r["fits_hbm"])
+    print(f"| {a} | {s} | {m} | {1e3*r['t_compute']:.1f} | "
+          f"{1e3*r['t_memory']:.1f} | {1e3*r['t_collective']:.1f} | "
+          f"{r['dominant']} | {r['bound_s']:.2f} | "
+          f"{r['useful_frac']:.2f} | {100*r['mfu_at_bound']:.1f}% | "
+          f"{'Y' if r['fits_hbm'] else 'N'} | "
+          f"{r['total_bytes_per_dev']/1e9:.1f} |")
+print(f"\n{shown} cells shown, {nfit} fit 16 GB HBM", file=sys.stderr)

@@ -1,0 +1,8 @@
+"""Communication-avoiding distributed linear algebra (paper Algorithm 4).
+
+``grid``        — 1.5D processor-grid index math and ppermute permutations.
+``matmul1p5d``  — shard_map 1.5D matmuls (gather & reduce flavors) and the
+                  replication-aware distributed transposes (Lemma 3.2).
+``collectives`` — compressed gradient collectives (beyond-paper).
+"""
+from . import grid, matmul1p5d  # noqa: F401

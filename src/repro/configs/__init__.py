@@ -1,0 +1,110 @@
+"""Assigned architecture configs (+ the paper's own HP-CONCORD configs).
+
+``get(name)`` returns the full-size ModelConfig; ``get_smoke(name)`` a
+reduced same-family config for CPU smoke tests.  ``input_specs`` builds
+ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "h2o_danube_1p8b",
+    "qwen2p5_3b",
+    "gemma2_27b",
+    "qwen1p5_110b",
+    "mixtral_8x22b",
+    "olmoe_1b_7b",
+    "chameleon_34b",
+    "mamba2_130m",
+    "zamba2_7b",
+    "whisper_small",
+]
+
+ALIASES = {
+    "h2o-danube-1.8b": "h2o_danube_1p8b",
+    "qwen2.5-3b": "qwen2p5_3b",
+    "gemma2-27b": "gemma2_27b",
+    "qwen1.5-110b": "qwen1p5_110b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "chameleon-34b": "chameleon_34b",
+    "mamba2-130m": "mamba2_130m",
+    "zamba2-7b": "zamba2_7b",
+    "whisper-small": "whisper_small",
+}
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def canon(name: str) -> str:
+    return ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+
+
+def get(name: str):
+    mod = importlib.import_module(f".{canon(name)}", __package__)
+    return mod.CONFIG
+
+
+def get_smoke(name: str):
+    mod = importlib.import_module(f".{canon(name)}", __package__)
+    return mod.SMOKE
+
+
+def long_context_ok(cfg) -> bool:
+    """True iff the arch has a sub-quadratic decode memory/compute path:
+    SSM state, hybrid, or uniform sliding-window attention."""
+    return cfg.family in ("ssm", "hybrid") or bool(cfg.window)
+
+
+def cells(include_long_skips: bool = False):
+    """Yield every (arch, shape) cell per the assignment."""
+    for a in ARCHS:
+        cfg = get(a)
+        for s in SHAPES:
+            if s == "long_500k" and not long_context_ok(cfg) \
+                    and not include_long_skips:
+                continue
+            yield a, s
+
+
+def input_specs(cfg, shape_name: str):
+    """ShapeDtypeStruct stand-ins for one dry-run cell (no allocation).
+
+    train   -> {"batch": Batch}                    lowers train_step
+    prefill -> {"tokens", "frames"?, "cache"}      lowers prefill
+    decode  -> {"token", "step", "cache"}          lowers decode_step
+    """
+    import jax
+    import jax.numpy as jnp
+    from ..models import lm, transformer as T
+
+    sh = SHAPES[shape_name]
+    B, Lseq = sh["global_batch"], sh["seq_len"]
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    def tok(b, l):
+        return sds((b, l), i32)
+
+    if sh["kind"] == "train":
+        frames = (sds((B, cfg.enc_len, cfg.d_model), jnp.dtype(cfg.dtype))
+                  if cfg.enc_dec else None)
+        return {"kind": "train",
+                "batch": lm.Batch(tokens=tok(B, Lseq), targets=tok(B, Lseq),
+                                  frames=frames)}
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, B, Lseq))
+    if sh["kind"] == "prefill":
+        frames = (sds((B, cfg.enc_len, cfg.d_model), jnp.dtype(cfg.dtype))
+                  if cfg.enc_dec else None)
+        return {"kind": "prefill", "tokens": tok(B, Lseq),
+                "frames": frames, "cache": cache,
+                "batch_size": B, "seq_len": Lseq}
+    return {"kind": "decode", "token": sds((B,), i32),
+            "step": sds((), i32), "cache": cache,
+            "batch_size": B, "seq_len": Lseq}

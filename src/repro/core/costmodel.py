@@ -1,0 +1,171 @@
+"""Analytic cost model for HP-CONCORD (paper Lemmas 3.1-3.5) + auto-tuner.
+
+T = F*gamma + L*alpha + W*beta  with machine constants gamma (s/flop),
+alpha (s/message) and beta (s/word).
+
+TPU v5e constants (the repo's target part):
+  * 197 TFLOP/s bf16 per chip  -> gamma = 1/197e12 (bf16), fp32 ~ x2
+  * 819 GB/s HBM bandwidth
+  * ~50 GB/s per ICI link; a ppermute "message" occupies one link for
+    (words*bytes)/50e9 s; per-round launch overhead ~1us.
+
+On TPU the paper's per-message latency alpha is the per-round collective
+launch overhead; the ring shift of Algorithm 4 maps to lax.ppermute over
+neighbor links, so bandwidth is per-link (not bisection).
+
+The tuner enumerates feasible (c_X, c_Omega) pairs (divisors of P with
+c_X*c_Omega <= P) under the memory caps M_Cov/M_Obs (paper Sec. 3) and
+returns the variant+replication with the lowest modeled time — this is the
+paper's main "communication-avoiding" decision procedure, exposed as a
+first-class feature (used by the estimator and by benchmarks/fig3).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Iterable
+
+
+@dataclass(frozen=True)
+class Machine:
+    """Machine-dependent constants (per chip)."""
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12        # bf16 FLOP/s
+    hbm_bw: float = 819e9             # bytes/s
+    link_bw: float = 50e9             # bytes/s per ICI link
+    msg_overhead: float = 1e-6        # s per collective round (alpha)
+    hbm_bytes: float = 16e9           # HBM capacity per chip
+    word_bytes: int = 4               # fp32 words for Omega/S/X
+
+    @property
+    def gamma(self) -> float:
+        return 1.0 / self.peak_flops
+
+    @property
+    def beta(self) -> float:
+        return self.word_bytes / self.link_bw
+
+    @property
+    def alpha(self) -> float:
+        return self.msg_overhead
+
+
+EDISON = Machine(
+    name="edison_xc30",
+    peak_flops=460.8e9,     # 2x12 cores x 2.4GHz x 8 flops (per node)
+    hbm_bw=100e9,
+    link_bw=8e9,            # Aries per-direction
+    msg_overhead=2e-6,
+    hbm_bytes=64e9,
+    word_bytes=8,           # paper ran double precision
+)
+
+
+@dataclass(frozen=True)
+class ProblemShape:
+    p: int                  # dimensions
+    n: int                  # samples
+    d: float                # avg nnz per row of Omega across iterations
+    s: int = 30             # proximal-gradient iterations
+    t: float = 10.0         # avg line-search trials per outer iteration
+
+
+@dataclass
+class CostBreakdown:
+    variant: str
+    c_x: int
+    c_omega: int
+    flops: float
+    messages: float
+    words: float
+    mem_words: float
+    t_compute: float = 0.0
+    t_latency: float = 0.0
+    t_bandwidth: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.t_compute + self.t_latency + self.t_bandwidth
+
+
+def _q(P: int, c_x: int, c_omega: int) -> float:
+    return max(P / c_x**2, P / c_omega**2)
+
+
+def cov_costs(shape: ProblemShape, P: int, c_x: int, c_omega: int,
+              m: Machine) -> CostBreakdown:
+    """Lemma 3.4/3.5 (Cov): F, L, W and T for given replication factors."""
+    p, n, d, s, t = shape.p, shape.n, shape.d, shape.s, shape.t
+    Q = _q(P, c_x, c_omega)
+    lg = math.log2(max(Q, 2))
+    F = 2 * n * p**2 + 2 * d * p**2 * (s * t + 1)
+    L = P / c_x**2 + s * t * P / (c_x * c_omega) + lg
+    W = n * p / c_x + s * t * d * p / c_x + p**2 * (c_x * c_omega / P) * Q * lg
+    M = c_omega * d * p + 3 * c_x * p**2          # per paper Sec 3 (total words)
+    cb = CostBreakdown("cov", c_x, c_omega, F, L, W, M)
+    # Lemma 3.4 counts messages/words along the critical path (per processor),
+    # so T = (F/P)*gamma + L*alpha + W*beta directly (paper Lemma 3.5).
+    cb.t_compute = F / P * m.gamma
+    cb.t_latency = L * m.alpha
+    cb.t_bandwidth = W * m.beta
+    return cb
+
+
+def obs_costs(shape: ProblemShape, P: int, c_x: int, c_omega: int,
+              m: Machine) -> CostBreakdown:
+    """Lemma 3.4/3.5 (Obs)."""
+    p, n, d, s, t = shape.p, shape.n, shape.d, shape.s, shape.t
+    Q = _q(P, c_x, c_omega)
+    lg = math.log2(max(Q, 2))
+    F = 2 * n * p**2 * s + 2 * d * n * p * (s * t + 1)
+    L = s * (t + 1) * P / (c_omega * c_x) + lg
+    W = s * (t + 1) * n * p / c_omega + p**2 * (c_x * c_omega / P) * Q * lg
+    M = 2 * c_x * n * p + c_omega * (d * p + n * p + 2 * p**2)
+    cb = CostBreakdown("obs", c_x, c_omega, F, L, W, M)
+    cb.t_compute = F / P * m.gamma
+    cb.t_latency = L * m.alpha
+    cb.t_bandwidth = W * m.beta
+    return cb
+
+
+def cov_is_cheaper(shape: ProblemShape) -> bool:
+    """Lemma 3.1 crossover: Cov wins iff d/p < (n/(p-n)) * (1/t)."""
+    p, n, d, t = shape.p, shape.n, shape.d, shape.t
+    if n >= p:
+        return True
+    return (d / p) < (n / (p - n)) / t
+
+
+def _divisors(P: int) -> list[int]:
+    return [c for c in range(1, P + 1) if P % c == 0]
+
+
+def enumerate_configs(shape: ProblemShape, P: int, m: Machine,
+                      variants: Iterable[str] = ("cov", "obs")
+                      ) -> list[CostBreakdown]:
+    """All feasible (variant, c_x, c_omega) under replication & memory caps."""
+    out = []
+    mem_cap_words = m.hbm_bytes / m.word_bytes * P   # aggregate capacity
+    for c_x in _divisors(P):
+        for c_omega in _divisors(P):
+            if c_x * c_omega > P:
+                continue
+            for v in variants:
+                fn = cov_costs if v == "cov" else obs_costs
+                cb = fn(shape, P, c_x, c_omega, m)
+                if cb.mem_words <= mem_cap_words:
+                    out.append(cb)
+    return out
+
+
+def tune(shape: ProblemShape, P: int, m: Machine | None = None,
+         variants: Iterable[str] = ("cov", "obs")) -> CostBreakdown:
+    """Pick the best (variant, c_x, c_omega) for the problem — the paper's
+    cost-model-driven configuration choice."""
+    m = m or Machine()
+    configs = enumerate_configs(shape, P, m, variants)
+    if not configs:
+        raise ValueError(
+            f"no feasible replication config for p={shape.p} on P={P} "
+            f"(need more chips: min aggregate memory ~{3*shape.p**2} words)")
+    return min(configs, key=lambda cb: cb.total)

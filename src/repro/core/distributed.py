@@ -1,0 +1,411 @@
+"""Distributed HP-CONCORD drivers (paper Algorithms 2 and 3).
+
+Both variants run the *entire* proximal-gradient solve (outer loop + line
+search) inside one ``shard_map`` over the 1.5D grid mesh, so the whole fit
+lowers to a single XLA program with the communication-avoiding collectives
+(ring ppermutes, team allgathers/psums, replication-aware transposes)
+inlined.  The control flow is the generic ``prox_gradient`` loop from
+``core.prox``; only the ``VariantOps`` bundle differs:
+
+  Cov  (Algorithm 2) — per-device state is an X-like column panel.
+    aux_of  : W = Omega @ S          1.5D gather-rotation of Omega
+                                     (stored as the local transpose of the
+                                     column panel — valid because the
+                                     iterates are symmetric; this is the
+                                     paper's Figure-1 "local transpose")
+    grad_of : W^T via the replication-aware distributed transpose
+    S = X^T X / n is computed ONCE up front by rotating X^T (line 2).
+
+  Obs  (Algorithm 3) — per-device state is an Omega-like row block.
+    aux_of  : Y = Omega @ X^T        1.5D reduce-rotation of X^T
+    grad_of : Z = Y @ X / n          1.5D gather-rotation of X,
+              Z^T via the distributed transpose
+    S is never formed.
+
+Padding.  The layouts need p divisible by P.  We pad to p' = pad_p(p) and
+*freeze* the padded coordinates: the padded diagonal starts at 1 and its
+gradient is masked to zero, off-block entries are zero and stay zero
+because the padded block of S (resp. the padded columns of X) is zero, so
+the real (p x p) block of every iterate is EXACTLY the unpadded iterate.
+The ridge term subtracts the constant contributed by the frozen diagonal
+so reported objectives match the reference solver.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..comm import matmul1p5d as mm
+from ..comm.grid import Grid1p5D
+from .costmodel import Machine, ProblemShape, tune
+from .prox import ProxResult, VariantOps, guard_nonpos_diag, prox_gradient
+
+SPEC_XCOL = mm.SPEC_XCOL
+SPEC_OM = mm.SPEC_OM
+
+
+class FitResult(NamedTuple):
+    omega: jax.Array
+    iters: jax.Array
+    ls_total: jax.Array
+    converged: jax.Array
+    g_final: jax.Array
+    variant: str
+    grid: Grid1p5D
+
+
+# ---------------------------------------------------------------------------
+# local-layout helpers (run inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _block_x():
+    """X-like block index t = i*c_omega + j of this device."""
+    return lax.axis_index("i") * lax.axis_size("j") + lax.axis_index("j")
+
+
+def _block_om():
+    """Omega-like block index u = i*c_x + k of this device."""
+    return lax.axis_index("i") * lax.axis_size("k") + lax.axis_index("k")
+
+
+def _eye_panel_x(p_pad: int, blk: int, dtype):
+    """Local X-like column panel of the identity: ones at (t*blk + r, r)."""
+    t = _block_x()
+    rows = jnp.arange(p_pad)[:, None]
+    cols = jnp.arange(blk)[None, :]
+    return (rows == t * blk + cols).astype(dtype)
+
+
+def _eye_rows_om(p_pad: int, blk: int, dtype):
+    """Local Omega-like row block of the identity: ones at (r, u*blk + r)."""
+    u = _block_om()
+    rows = jnp.arange(blk)[:, None]
+    cols = jnp.arange(p_pad)[None, :]
+    return (cols == u * blk + rows).astype(dtype)
+
+
+def _diag_mask_panel_x(p_pad: int, blk: int, p_real: int, dtype):
+    """(diag mask, frozen-padded-diag mask) for an X-like column panel."""
+    t = _block_x()
+    rows = jnp.arange(p_pad)[:, None]
+    cols = jnp.arange(blk)[None, :]
+    gcol = t * blk + cols
+    on_diag = (rows == gcol).astype(dtype)
+    padded = (rows == gcol) & (gcol >= p_real)
+    return on_diag, padded.astype(dtype)
+
+
+def _diag_mask_rows_om(p_pad: int, blk: int, p_real: int, dtype):
+    u = _block_om()
+    rows = jnp.arange(blk)[:, None]
+    cols = jnp.arange(p_pad)[None, :]
+    grow = u * blk + rows
+    on_diag = (cols == grow).astype(dtype)
+    padded = (cols == grow) & (grow >= p_real)
+    return on_diag, padded.astype(dtype)
+
+
+def _local_diag_panel_x(panel, blk):
+    """Extract this panel's diagonal entries: panel[t*blk + r, r]."""
+    t = _block_x()
+    r = jnp.arange(blk)
+    rows3 = lax.dynamic_slice_in_dim(panel, t * blk, blk, axis=0)
+    return rows3[r, r]
+
+
+def _local_diag_rows_om(rows_blk, blk):
+    """Extract diagonal entries of an Omega-like row block: rows[r, u*blk+r]."""
+    u = _block_om()
+    r = jnp.arange(blk)
+    cols3 = lax.dynamic_slice_in_dim(rows_blk, u * blk, blk, axis=1)
+    return cols3[r, r]
+
+
+def _psum_x(v):
+    """Global sum of a per-X-block quantity (blocks indexed by (i, j))."""
+    return lax.psum(v, ("i", "j"))
+
+
+def _psum_om(v):
+    return lax.psum(v, ("i", "k"))
+
+
+def _pmin_x(v):
+    return lax.pmin(v, ("i", "j"))
+
+
+def _pmin_om(v):
+    return lax.pmin(v, ("i", "k"))
+
+
+# ---------------------------------------------------------------------------
+# Cov variant (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def _cov_local_ops(grid: Grid1p5D, p_pad: int, p_real: int, lam2, dtype,
+                   use_pallas: bool = False) -> VariantOps:
+    blk = p_pad // grid.n_x
+    n_pad_diag = p_pad - p_real
+
+    def aux_of(omega_panel, data):
+        # Figure 1: local transpose converts the column panel to the row
+        # block the rotation consumes (iterates are symmetric).
+        omega_rows = omega_panel.T
+        return mm.omega_s_local(omega_rows, data["s"], grid, canonical="xlike")
+
+    def g_of(omega_panel, w_panel, data):
+        diag = _local_diag_panel_x(omega_panel, blk)
+        logdet = -_psum_x(jnp.sum(jnp.log(jnp.maximum(diag, 1e-30))))
+        quad = 0.5 * _psum_x(jnp.sum(w_panel * omega_panel))
+        ridge = 0.5 * lam2 * (
+            _psum_x(jnp.sum(omega_panel * omega_panel)) - n_pad_diag)
+        g = logdet + quad + ridge
+        return guard_nonpos_diag(g, _pmin_x(jnp.min(diag)))
+
+    def grad_of(omega_panel, w_panel, data):
+        wt_panel = mm.transpose_xlike_local(w_panel, grid)
+        diag = _local_diag_panel_x(omega_panel, blk)
+        diag_mask, pad_mask = _diag_mask_panel_x(p_pad, blk, p_real, dtype)
+        t = _block_x()
+        inv = jnp.zeros((p_pad, blk), dtype)
+        inv = lax.dynamic_update_slice_in_dim(
+            inv, jnp.diag(1.0 / diag), t * blk, axis=0)
+        grad = -inv + 0.5 * (w_panel + wt_panel) + lam2 * omega_panel
+        return grad * (1.0 - pad_mask)            # freeze padded diagonal
+
+    def dot(a, b):
+        return _psum_x(jnp.sum(a * b))
+
+    def prox(z, alpha, data):
+        diag_mask, _ = _diag_mask_panel_x(p_pad, blk, p_real, dtype)
+        if use_pallas:
+            from ..kernels import ops as kops
+            return kops.fused_prox(z, diag_mask, alpha)
+        st = jnp.sign(z) * jnp.maximum(jnp.abs(z) - alpha, 0.0)
+        return st * (1.0 - diag_mask) + z * diag_mask
+
+    return VariantOps(aux_of, g_of, grad_of, dot, prox)
+
+
+# ---------------------------------------------------------------------------
+# Obs variant (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+def _obs_local_ops(grid: Grid1p5D, p_pad: int, p_real: int, n: int, lam2,
+                   dtype, use_pallas: bool = False) -> VariantOps:
+    blk = p_pad // grid.n_om
+    n_pad_diag = p_pad - p_real
+
+    def aux_of(omega_rows, data):
+        xt_loc = data["x"].T                      # local transpose
+        return mm.omega_xt_local(omega_rows, xt_loc, grid)   # Y, unnormalized
+
+    def g_of(omega_rows, y_rows, data):
+        diag = _local_diag_rows_om(omega_rows, blk)
+        logdet = -_psum_om(jnp.sum(jnp.log(jnp.maximum(diag, 1e-30))))
+        quad = 0.5 * _psum_om(jnp.sum(y_rows * y_rows)) / n
+        ridge = 0.5 * lam2 * (
+            _psum_om(jnp.sum(omega_rows * omega_rows)) - n_pad_diag)
+        g = logdet + quad + ridge
+        return guard_nonpos_diag(g, _pmin_om(jnp.min(diag)))
+
+    def grad_of(omega_rows, y_rows, data):
+        z = mm.y_x_local(y_rows, data["x"], grid, scale=1.0 / n)
+        zt = mm.transpose_omegalike_local(z, grid)
+        diag = _local_diag_rows_om(omega_rows, blk)
+        diag_mask, pad_mask = _diag_mask_rows_om(p_pad, blk, p_real, dtype)
+        u = _block_om()
+        inv = jnp.zeros((blk, p_pad), dtype)
+        inv = lax.dynamic_update_slice_in_dim(
+            inv, jnp.diag(1.0 / diag), u * blk, axis=1)
+        grad = -inv + 0.5 * (z + zt) + lam2 * omega_rows
+        return grad * (1.0 - pad_mask)
+
+    def dot(a, b):
+        return _psum_om(jnp.sum(a * b))
+
+    def prox(z, alpha, data):
+        diag_mask, _ = _diag_mask_rows_om(p_pad, blk, p_real, dtype)
+        if use_pallas:
+            from ..kernels import ops as kops
+            return kops.fused_prox(z, diag_mask, alpha)
+        st = jnp.sign(z) * jnp.maximum(jnp.abs(z) - alpha, 0.0)
+        return st * (1.0 - diag_mask) + z * diag_mask
+
+    return VariantOps(aux_of, g_of, grad_of, dot, prox)
+
+
+# ---------------------------------------------------------------------------
+# shard_map drivers
+# ---------------------------------------------------------------------------
+
+def _scalar_specs():
+    return ProxResult(omega=None, iters=P(), ls_total=P(), converged=P(),
+                      g_final=P(), delta_final=P())
+
+
+def fit_cov(
+    s: jax.Array,
+    lam1: float,
+    lam2: float = 0.0,
+    *,
+    grid: Grid1p5D,
+    mesh=None,
+    tol: float = 1e-5,
+    max_iters: int = 500,
+    max_ls: int = 30,
+    warm_start_tau: bool = False,
+    use_pallas: bool = False,
+) -> FitResult:
+    """Distributed Cov solve (Algorithm 2). ``s`` is the (p, p) sample cov."""
+    if grid.c_x != grid.c_omega:
+        raise ValueError("Cov keeps Omega in the X-like layout: c_x == c_omega")
+    mesh = mesh or grid.make_mesh()
+    p = s.shape[0]
+    p_pad = grid.pad_p(p)
+    dtype = s.dtype
+    if p_pad != p:
+        s = jnp.pad(s, ((0, p_pad - p), (0, p_pad - p)))
+    blk = p_pad // grid.n_x
+    ops = _cov_local_ops(grid, p_pad, p, jnp.asarray(lam2, dtype), dtype,
+                         use_pallas)
+
+    def local(s_panel):
+        omega0 = _eye_panel_x(p_pad, blk, dtype)
+        return prox_gradient(
+            omega0, {"s": s_panel}, ops, lam1=lam1, tol=tol,
+            max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau)
+
+    specs = _scalar_specs()._replace(omega=SPEC_XCOL)
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL,),
+                       out_specs=ProxResult(*specs), check_vma=False)
+    with jax.set_mesh(mesh):
+        res = jax.jit(fn)(s)
+    return FitResult(res.omega[:p, :p], res.iters, res.ls_total,
+                     res.converged, res.g_final, "cov", grid)
+
+
+def fit_obs(
+    x: jax.Array,
+    lam1: float,
+    lam2: float = 0.0,
+    *,
+    grid: Grid1p5D,
+    mesh=None,
+    tol: float = 1e-5,
+    max_iters: int = 500,
+    max_ls: int = 30,
+    warm_start_tau: bool = False,
+    use_pallas: bool = False,
+) -> FitResult:
+    """Distributed Obs solve (Algorithm 3). ``x`` is the (n, p) data matrix."""
+    mesh = mesh or grid.make_mesh()
+    n, p = x.shape
+    p_pad = grid.pad_p(p)
+    dtype = x.dtype
+    if p_pad != p:
+        x = jnp.pad(x, ((0, 0), (0, p_pad - p)))
+    blk = p_pad // grid.n_om
+    ops = _obs_local_ops(grid, p_pad, p, n, jnp.asarray(lam2, dtype), dtype,
+                         use_pallas)
+
+    def local(x_loc):
+        omega0 = _eye_rows_om(p_pad, blk, dtype)
+        return prox_gradient(
+            omega0, {"x": x_loc}, ops, lam1=lam1, tol=tol,
+            max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau)
+
+    specs = _scalar_specs()._replace(omega=SPEC_OM)
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL,),
+                       out_specs=ProxResult(*specs), check_vma=False)
+    with jax.set_mesh(mesh):
+        res = jax.jit(fn)(x)
+    return FitResult(res.omega[:p, :p], res.iters, res.ls_total,
+                     res.converged, res.g_final, "obs", grid)
+
+
+# ---------------------------------------------------------------------------
+# High-level estimator — the paper's cost-model-driven front door
+# ---------------------------------------------------------------------------
+
+def estimate_density(p: int, n: int, lam1: float) -> float:
+    """Crude prior for d (avg nnz/row of the iterates) used by the tuner
+    before any fit exists: heavier penalty -> sparser iterates."""
+    return float(min(p, max(2.0, 0.05 * p / max(lam1, 1e-2))))
+
+
+def fit(
+    x: jax.Array | None = None,
+    s: jax.Array | None = None,
+    *,
+    lam1: float,
+    lam2: float = 0.0,
+    variant: str = "auto",
+    n_devices: int | None = None,
+    c_x: int | None = None,
+    c_omega: int | None = None,
+    machine: Machine | None = None,
+    n_samples: int | None = None,
+    **kw,
+) -> FitResult:
+    """Fit HP-CONCORD, choosing variant and replication by the cost model
+    (paper Lemmas 3.1-3.5) unless pinned by the caller.
+
+    Pass ``x`` (n, p) to allow either variant, or only ``s`` (p, p) to force
+    Cov. ``c_x``/``c_omega`` pin the replication factors (e.g. for the
+    Figure-3 sweep); otherwise the tuner picks them.
+    """
+    if x is None and s is None:
+        raise ValueError("pass x or s")
+    P_ = n_devices or len(jax.devices())
+    p = (x if x is not None else s).shape[-1]
+    n = x.shape[0] if x is not None else (n_samples or p)
+    m = machine or Machine()
+    shape = ProblemShape(p=p, n=n, d=estimate_density(p, n, lam1))
+
+    if variant == "auto":
+        variants = ("cov", "obs") if x is not None else ("cov",)
+        best = tune(shape, P_, m, variants)
+        variant = best.variant
+        c_x = c_x if c_x is not None else best.c_x
+        c_omega = c_omega if c_omega is not None else best.c_omega
+    c_x = c_x or 1
+    c_omega = c_omega or 1
+    if variant == "cov":
+        c_omega = c_x  # Cov keeps Omega X-like
+        if P_ % (c_x * c_omega):
+            c_x = c_omega = 1
+        grid = Grid1p5D(P_, c_x, c_omega)
+        s_mat = s if s is not None else (x.T @ x) / n
+        return fit_cov(s_mat, lam1, lam2, grid=grid, **kw)
+    grid = Grid1p5D(P_, c_x, c_omega)
+    if x is None:
+        raise ValueError("Obs variant requires the data matrix x")
+    return fit_obs(x, lam1, lam2, grid=grid, **kw)
+
+
+def fit_path(
+    x: jax.Array,
+    lam1_grid,
+    lam2: float = 0.0,
+    *,
+    variant: str = "obs",
+    grid: Grid1p5D | None = None,
+    **kw,
+) -> list[FitResult]:
+    """Fit a path of estimates over a lam1 grid (the paper's Section-5
+    tuning-parameter sweep). Runs coarse-to-fine so sparser fits come first."""
+    P_ = len(jax.devices())
+    grid = grid or Grid1p5D(P_, 1, 1)
+    out = []
+    for lam1 in sorted(lam1_grid, reverse=True):
+        fn = fit_obs if variant == "obs" else fit_cov
+        data = x if variant == "obs" else (x.T @ x) / x.shape[0]
+        out.append(fn(data, lam1, lam2, grid=grid, **kw))
+    return out

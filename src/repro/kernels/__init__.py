@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots (+ pure-jnp oracles).
+
+``softthresh``          — fused prox update + objective reductions.
+``blocksparse_matmul``  — block-CSR x dense (TPU-native sparse-dense).
+``flash_attention``     — GQA/causal/SWA/softcap flash attention.
+``ops``                 — jit'd wrappers (interpret=True on CPU).
+``ref``                 — oracles the kernels are sweep-tested against.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,36 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a real TPU set ``repro.kernels.ops.INTERPRET = False`` (or pass
+``interpret=False``); this container is CPU-only so interpret mode is the
+default, executing the kernel bodies in Python for correctness validation.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import blocksparse_matmul as _bsmm
+from . import flash_attention as _fa
+from . import softthresh as _st
+
+# Interpret unless we are actually on TPU.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def fused_prox(z, diag_mask, alpha, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _st.fused_prox(z, diag_mask, alpha, **kw)
+
+
+def fused_prox_stats(z, diag_mask, alpha, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _st.fused_prox_stats(z, diag_mask, alpha, **kw)
+
+
+def blocksparse_matmul(values, row_idx, col_idx, b, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _bsmm.blocksparse_matmul(values, row_idx, col_idx, b, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _fa.flash_attention(q, k, v, **kw)

@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are sweep-tested
+against (tests/test_kernels.py, interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# fused prox (softthresh.py)
+# ---------------------------------------------------------------------------
+
+def fused_prox(z: jax.Array, diag_mask: jax.Array, alpha) -> jax.Array:
+    """Soft-threshold off-diagonal entries, pass the diagonal through."""
+    st = jnp.sign(z) * jnp.maximum(jnp.abs(z) - alpha, 0.0)
+    return st * (1.0 - diag_mask) + z * diag_mask
+
+
+def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha):
+    """Prox + the objective reduction pieces in one logical pass.
+
+    Returns (out, logdet, l1_offdiag, sumsq, min_diag) where
+      logdet     = sum over diag of log(out)
+      l1_offdiag = sum over off-diag of |out|
+      sumsq      = ||out||_F^2
+      min_diag   = min over diag of out  (positivity guard)
+    """
+    out = fused_prox(z, diag_mask, alpha)
+    d = diag_mask > 0
+    logdet = jnp.sum(jnp.where(d, jnp.log(jnp.maximum(out, 1e-30)), 0.0))
+    l1 = jnp.sum(jnp.where(d, 0.0, jnp.abs(out)))
+    sumsq = jnp.sum(out * out)
+    min_diag = jnp.min(jnp.where(d, out, jnp.inf))
+    return out, logdet, l1, sumsq, min_diag
+
+
+# ---------------------------------------------------------------------------
+# block-sparse x dense matmul (blocksparse_matmul.py)
+# ---------------------------------------------------------------------------
+
+def block_csr_to_dense(values: jax.Array, row_idx: jax.Array,
+                       col_idx: jax.Array, p: int) -> jax.Array:
+    """Materialize a block-CSR matrix (nb, bs, bs) into dense (p, p)."""
+    bs = values.shape[1]
+    dense = jnp.zeros((p, p), values.dtype)
+
+    def body(i, d):
+        r, c = row_idx[i], col_idx[i]
+        return jax.lax.dynamic_update_slice(d, values[i], (r * bs, c * bs))
+
+    return jax.lax.fori_loop(0, values.shape[0], body, dense)
+
+
+def blocksparse_matmul(values, row_idx, col_idx, b, p: int):
+    """A @ B with A given in block-CSR coordinates."""
+    return block_csr_to_dense(values, row_idx, col_idx, p) @ b
+
+
+def dense_to_block_csr(a: np.ndarray, bs: int, *, tol: float = 0.0):
+    """Host-side: dense (p, p) -> (values, row_idx, col_idx) keeping only
+    nonzero bs x bs tiles. Every block-row gets at least one (zero) block so
+    the kernel's accumulation-initialization logic always fires."""
+    a = np.asarray(a)
+    p = a.shape[0]
+    nbr = p // bs
+    vals, rows, cols = [], [], []
+    for r in range(nbr):
+        found = False
+        for c in range(nbr):
+            blk = a[r * bs:(r + 1) * bs, c * bs:(c + 1) * bs]
+            if np.abs(blk).max() > tol:
+                vals.append(blk)
+                rows.append(r)
+                cols.append(c)
+                found = True
+        if not found:
+            vals.append(np.zeros((bs, bs), a.dtype))
+            rows.append(r)
+            cols.append(r)
+    return (np.stack(vals), np.asarray(rows, np.int32),
+            np.asarray(cols, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# flash attention (flash_attention.py)
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None,
+              scale=None):
+    """Reference multi-head attention with GQA, causal/sliding-window masks
+    and logit soft-capping.
+
+    q: (B, Hq, Lq, D); k, v: (B, Hkv, Lkv, D) with Hkv | Hq.
+    window: sliding-window size (attend to keys in (qpos-window, qpos]).
+    softcap: gemma2-style cap*tanh(logits/cap).
+    """
+    B, Hq, Lq, D = q.shape
+    Hkv, Lkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(q.dtype)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kq) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Lq)[:, None] + (Lkv - Lq)   # align ends (decode-friendly)
+    kpos = jnp.arange(Lkv)[None, :]
+    mask = jnp.ones((Lq, Lkv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vq)

@@ -1,0 +1,8 @@
+"""Launchers: production mesh, multi-pod dry-run, roofline derivation,
+train/serve/solve CLIs.
+
+NOTE: ``dryrun`` must be executed as a fresh process (it sets XLA_FLAGS
+for 512 placeholder devices before importing jax); do not import it from
+an already-initialized jax process.
+"""
+from . import mesh, roofline  # noqa: F401

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax initialization).
+
+Target part: TPU v5e pods, 16x16 = 256 chips per pod; the multi-pod mesh
+adds a leading "pod" axis (2 pods = 512 chips) used as pure data
+parallelism (DCI-connected pods should not carry TP/EP traffic).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh with Auto axis types (tests / examples)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(*, max_devices: int | None = None):
+    """Small mesh over whatever devices exist (CPU tests): picks the
+    largest (data, model) factorization."""
+    n = len(jax.devices())
+    if max_devices:
+        n = min(n, max_devices)
+    model = 1
+    for m in (8, 4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,197 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on the
+TARGET part (TPU v5e):
+
+    compute    = per_device_HLO_flops / peak_flops
+    memory     = per_device_HLO_bytes / hbm_bw
+    collective = sum over collective ops of wire_bytes / link_bw
+
+``cost_analysis()`` reports the per-device partitioned program, so the
+chips term is already folded in.  Collective bytes are parsed from the
+optimized (post-SPMD) HLO text; per-op wire-byte conventions (ring
+algorithms over ICI):
+
+    all-gather         (n-1)/n * result_bytes
+    reduce-scatter     (n-1)/n * operand_bytes
+    all-reduce         2 (n-1)/n * operand_bytes   (RS + AG)
+    all-to-all         (n-1)/n * operand_bytes
+    collective-permute operand_bytes
+
+n is taken from the op's replica-group size.  Link bandwidth is per-chip
+aggregate ICI (v5e: ~50 GB/s/link; a 2D-torus chip has multiple links,
+we charge the single busiest link, i.e. worst case serialization).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# v5e target constants (also in core/costmodel.py Machine)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    result_bytes: dict = field(default_factory=dict)
+    wire_bytes: float = 0.0
+
+    def add(self, kind: str, rbytes: int, group_n: int):
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+        self.result_bytes[kind] = self.result_bytes.get(kind, 0) + rbytes
+        frac = (group_n - 1) / group_n if group_n > 1 else 0.0
+        if kind == "all-gather":
+            # result is the gathered (large) buffer; each link carries
+            # (n-1)/n of it but per-device INPUT is result/n
+            self.wire_bytes += frac * rbytes
+        elif kind == "reduce-scatter":
+            # result is the scattered (small) buffer; operand = n * result
+            self.wire_bytes += frac * rbytes * group_n
+        elif kind == "all-reduce":
+            self.wire_bytes += 2 * frac * rbytes
+        elif kind == "all-to-all":
+            self.wire_bytes += frac * rbytes
+        elif kind == "collective-permute":
+            self.wire_bytes += rbytes
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        rbytes = _shape_bytes(type_str)
+        g = _GROUPS_RE.search(line)
+        if g:
+            group_n = len([x for x in g.group(1).split(",") if x.strip()])
+        else:
+            g2 = _GROUPS_V2_RE.search(line)
+            group_n = int(g2.group(2)) if g2 else 2
+        stats.add(kind, rbytes, group_n)
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device HLO bytes accessed
+    wire_bytes: float            # per-device collective bytes on the wire
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float           # 6 N D useful flops (per device)
+    coll_counts: dict = field(default_factory=dict)
+    mem_stats: dict = field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound(self) -> float:
+        """Roofline lower bound on step time: overlapping compute/memory/
+        collective perfectly, time = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS — how much of compiled compute is
+        forward/backward matmul work (catches remat/dispatch waste)."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def mfu_at_bound(self) -> float:
+        """Model-flops utilization if the step ran exactly at the
+        roofline bound — the 'roofline fraction' we report."""
+        return (self.model_flops / PEAK_FLOPS) / self.bound \
+            if self.bound else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "dominant": self.dominant, "bound_s": self.bound,
+            "useful_frac": self.useful_fraction,
+            "mfu_at_bound": self.mfu_at_bound,
+            **{f"n_{k}": v for k, v in self.coll_counts.items()},
+        }
+
+
+def model_flops_per_step(cfg, shape_kind: str, seq_len: int,
+                         global_batch: int, n_devices: int) -> float:
+    """6*N*D for training (fwd+bwd), 2*N_active per generated/processed
+    token for inference, per device."""
+    n_active = cfg.param_count(active_only=True)
+    if shape_kind == "train":
+        tokens = seq_len * global_batch
+        total = 6.0 * n_active * tokens
+    elif shape_kind == "prefill":
+        tokens = seq_len * global_batch
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * global_batch
+    return total / n_devices
+
+
+def build_roofline(arch: str, shape: str, mesh_name: str, cfg, kind: str,
+                   seq_len: int, global_batch: int, n_devices: int,
+                   cost: dict, mem_stats, hlo_text: str) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collectives(hlo_text)
+    mf = model_flops_per_step(cfg, kind, seq_len, global_batch, n_devices)
+    ms = {}
+    if mem_stats is not None:
+        ms = {"args_gb": mem_stats.argument_size_in_bytes / 1e9,
+              "out_gb": mem_stats.output_size_in_bytes / 1e9,
+              "temp_gb": mem_stats.temp_size_in_bytes / 1e9}
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name,
+        flops=flops, hbm_bytes=hbm, wire_bytes=colls.wire_bytes,
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=hbm / HBM_BW,
+        t_collective=colls.wire_bytes / LINK_BW,
+        model_flops=mf,
+        coll_counts=colls.counts,
+        mem_stats=ms,
+    )

@@ -1,0 +1,71 @@
+"""Serving launcher: batched prefill + greedy decode loop.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
+      --smoke --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import configs as C
+from ..models import lm, transformer as T
+from .mesh import make_host_mesh
+
+
+def serve_batch(cfg, params, prompts, gen: int, max_len: int,
+                frames=None):
+    """Greedy-decode ``gen`` tokens for a batch of prompts."""
+    B, Lp = prompts.shape
+    cache = T.init_cache(cfg, B, max_len)
+    prefill = jax.jit(lm.make_prefill(cfg, max_len))
+    decode = jax.jit(lm.make_decode_step(cfg), donate_argnums=(1,))
+    if cfg.enc_dec:
+        cache, logits = prefill(params, cache, prompts, frames)
+    else:
+        cache, logits = prefill(params, cache, prompts)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    for i in range(gen - 1):
+        cache, tok = decode(params, cache, tok,
+                            jnp.asarray(Lp + i, jnp.int32))
+        out.append(tok)
+    return jnp.stack(out, axis=1)                  # (B, gen)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = C.get_smoke(args.arch) if args.smoke else C.get(args.arch)
+    max_len = args.prompt_len + args.gen
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed),
+                           max_len=max_len)
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+    frames = (jnp.zeros((args.batch, cfg.enc_len, cfg.d_model),
+                        jnp.dtype(cfg.dtype)) if cfg.enc_dec else None)
+    t0 = time.time()
+    toks = serve_batch(cfg, params, prompts, args.gen, max_len,
+                       frames=frames)
+    dt = time.time() - t0
+    n = args.batch * args.gen
+    print(f"generated {n} tokens in {dt:.2f}s "
+          f"({n / dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(toks[0][:16]))
+    return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Training launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+      --smoke --steps 200 --seq-len 512 --batch 8 --ckpt-dir /tmp/ckpt
+
+``--smoke`` selects the reduced config (CPU-runnable); without it the
+full config is used (expects a real TPU slice; mesh from --mesh).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from .. import configs as C
+from ..train.loop import TrainerConfig, train
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--heartbeat", default="")
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "pod", "multipod", "none"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = C.get_smoke(args.arch) if args.smoke else C.get(args.arch)
+    mesh = None
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    elif args.mesh == "pod":
+        mesh = make_production_mesh()
+    elif args.mesh == "multipod":
+        mesh = make_production_mesh(multi_pod=True)
+
+    tc = TrainerConfig(
+        seq_len=args.seq_len, global_batch=args.batch, n_micro=args.micro,
+        steps=args.steps, peak_lr=args.lr, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, heartbeat_path=args.heartbeat,
+        seed=args.seed)
+    res = train(cfg, tc, mesh=mesh)
+    print(f"done: {res.final_step} steps, "
+          f"loss {res.losses[0]:.4f} -> {res.losses[-1]:.4f}, "
+          f"preempted={res.preempted}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""LM-zoo substrate: configs, layers, SSM, assembly, train/serve steps."""
+from . import config, layers, lm, ssm, transformer  # noqa: F401
+from .config import ModelConfig  # noqa: F401

@@ -1,0 +1,270 @@
+"""Model configuration + logical->mesh sharding rules for the LM zoo.
+
+One ``ModelConfig`` describes every assigned architecture (dense GQA
+transformers, MoE, early-fusion VLM, Mamba2 SSM, Zamba2 hybrid, Whisper
+enc-dec).  Sharding is expressed with LOGICAL axis names which a
+``ShardingRules`` table maps to physical mesh axes; a dimension that does
+not divide its mapped mesh axes falls back to replication automatically,
+so one rule set covers e.g. kv_heads=2 and kv_heads=32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# logical axes
+# ---------------------------------------------------------------------------
+# batch   — global batch            -> ("pod", "data") (DP)
+# embed   — d_model                 -> "data"  (FSDP shards weights on embed)
+# heads   — attention heads / d_ff  -> "model" (TP)
+# kv      — kv heads                -> "model"
+# vocab   — vocabulary              -> "model"
+# expert  — MoE experts             -> "model" (EP) or None (TP-in-expert)
+# seq     — sequence                -> None in train; "model" for SP decode
+# layers / conv / state / none      -> replicated
+
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "q_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "expert_mlp": (),       # d_ff inside an expert; EP archs keep it local
+    "capacity": ("pod", "data"),  # MoE dispatch-buffer slot axis
+    "seq": (),
+    # decode KV-cache sequence axis: sequence-parallel fallback — takes the
+    # first axis (pod > data > model) not already used by batch/kv-heads
+    "kv_seq": ("pod", "data", "model"),
+    "layers": (),
+    "none": (),
+}
+
+VOCAB_PAD = 256  # embedding tables padded so "vocab" shards over any axis
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | vlm | ssm | hybrid | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None  # default d_model // n_heads
+    # attention flavor
+    qkv_bias: bool = False
+    window: int | None = None            # uniform sliding window
+    local_global: bool = False           # gemma2 alternating local/global
+    local_window: int = 4096
+    softcap: float | None = None         # gemma2 logit softcapping
+    final_softcap: float | None = None   # gemma2 final-logit softcap
+    rope_theta: float = 10_000.0
+    # MLP flavor
+    mlp: str = "swiglu"                  # swiglu | gelu
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    expert_sharding: str = "ep"          # "ep": experts over model;
+                                         # "tp": d_ff_expert over model;
+                                         # "ep_virtual": each expert split
+                                         #   into `virtual_split` f-slices
+                                         #   that dispatch as independent
+                                         #   experts (exact decomposition,
+                                         #   no within-expert all-reduce)
+    virtual_split: int = 2
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    ssm_ngroups: int = 1
+    ssm_chunk: int = 256
+    # hybrid (zamba2): one shared attention block every `shared_every` layers
+    shared_every: int = 0
+    # enc-dec (whisper)
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    enc_len: int = 1500                  # stub frontend frame count
+    # norms / misc
+    norm: str = "rmsnorm"                # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    post_norm: bool = False              # gemma2 post-attn/ffn norms
+    tie_embeddings: bool = True
+    # numerics / perf knobs
+    dtype: str = "bfloat16"              # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: bool = True
+    remat_group: int = 0                 # >1: two-level remat — checkpoint
+                                         # groups of layers AND each layer
+                                         # (sqrt-remat: saved carries drop
+                                         # from n_layers to n_layers/group)
+    attention_impl: str = "chunked"      # chunked (mea) | ref | flash
+    attn_chunk: int = 1024               # kv-chunk of the mea attention
+    scan_layers: bool = True             # False: unroll (flop measurement)
+    n_micro: int = 1                     # microbatch accumulation steps
+    prefill_chunk: int = 0               # chunked prefill segment (0 = off)
+    # beyond-paper knobs
+    ca_lm_head: bool = False             # route lm_head through 1.5D matmul
+    loss_chunk: int = 0                  # chunked-vocab loss (0 = off)
+    sharding_overrides: dict = field(default_factory=dict)
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def vocab_pad(self) -> int:
+        """Embedding-table rows, padded so the vocab axis always shards
+        (padded logit lanes are masked to -inf in lm_head)."""
+        return -(-self.vocab // VOCAB_PAD) * VOCAB_PAD
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def n_experts_disp(self) -> int:
+        """Expert count seen by dispatch/buffers (virtual splits count)."""
+        if self.expert_sharding == "ep_virtual":
+            return self.n_experts * self.virtual_split
+        return self.n_experts
+
+    @property
+    def d_ff_expert_disp(self) -> int:
+        if self.expert_sharding == "ep_virtual":
+            return self.d_ff_expert // self.virtual_split
+        return self.d_ff_expert
+
+    def rules(self) -> dict[str, tuple[str, ...]]:
+        r = dict(DEFAULT_RULES)
+        r.update(self.sharding_overrides)
+        if self.n_experts and self.expert_sharding == "tp":
+            r["expert"] = ()
+            r["expert_mlp"] = ("model",)
+        return r
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- parameter count (for 6ND model flops) ---------------------------
+    def param_count(self, *, active_only: bool = False) -> int:
+        d, L = self.d_model, self.n_layers
+        hd, Hq, Hkv = self.hd, self.n_heads, self.n_kv
+        n = self.vocab * d                      # embeddings
+        if not self.tie_embeddings:
+            n += self.vocab * d
+        if self.family == "ssm":
+            return n + L * self._ssm_block_params()
+        per_attn = d * (Hq * hd) + 2 * d * (Hkv * hd) + (Hq * hd) * d
+        mlp_mult = 3 if self.mlp == "swiglu" else 2
+        per_dense_mlp = mlp_mult * d * self.d_ff if self.d_ff else 0
+        per_expert = mlp_mult * d * self.d_ff_expert
+        if self.family == "hybrid":
+            n_shared = self.n_layers // max(self.shared_every, 1)
+            n += L * self._ssm_block_params()
+            n += per_attn + per_dense_mlp       # ONE shared block
+            return n
+        if self.enc_dec:
+            n += self.n_enc_layers * (per_attn + per_dense_mlp)
+            n += L * (2 * per_attn + per_dense_mlp)   # self + cross attn
+            return n
+        if self.n_experts:
+            e = self.top_k if active_only else self.n_experts
+            n += L * (per_attn + e * per_expert + d * self.n_experts)
+            return n
+        n += L * (per_attn + per_dense_mlp)
+        return n
+
+    def _ssm_block_params(self) -> int:
+        d, di, ns = self.d_model, self.d_inner, self.ssm_state
+        g, hd_ = self.ssm_ngroups, self.ssm_headdim
+        nh = self.ssm_nheads
+        in_proj = d * (2 * di + 2 * g * ns + nh)
+        conv = self.ssm_conv * (di + 2 * g * ns)
+        out_proj = di * d
+        return in_proj + conv + out_proj + 2 * nh + di
+
+
+# ---------------------------------------------------------------------------
+# logical specs -> physical NamedSharding
+# ---------------------------------------------------------------------------
+
+def _fits(size: int, axes: tuple[str, ...], mesh: Mesh) -> bool:
+    n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return n > 0 and size % n == 0
+
+
+def logical_to_spec(logical: Sequence[str], shape: Sequence[int], mesh: Mesh,
+                    rules: dict[str, tuple[str, ...]]) -> P:
+    """Map logical axis names to a PartitionSpec, dropping any mapping the
+    dimension size cannot honor and never using a mesh axis twice."""
+    used: set[str] = set()
+    out = []
+    for name, size in zip(logical, shape):
+        axes = tuple(a for a in rules.get(name, ())
+                     if a in mesh.shape and a not in used)
+        placed = False
+        # longest usable prefix of the mapped axes, then single axes
+        for k in range(len(axes), 0, -1):
+            cand = axes[:k]
+            if _fits(size, cand, mesh):
+                out.append(cand if len(cand) > 1 else cand[0])
+                used.update(cand)
+                placed = True
+                break
+        if not placed:
+            for a in axes:
+                if size % mesh.shape[a] == 0:
+                    out.append(a)
+                    used.add(a)
+                    placed = True
+                    break
+        if not placed:
+            out.append(None)
+    return P(*out)
+
+
+def constrain(x, logical: Sequence[str], rules: dict):
+    """with_sharding_constraint against the ambient mesh (set_mesh
+    context); a NO-OP when no mesh is active (single-device tests) or
+    when a dimension cannot honor its mapping (auto fallback)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh.empty or not mesh.shape:
+        return x
+    spec = logical_to_spec(logical, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def tree_shardings(logical_tree, shape_tree, mesh: Mesh,
+                   rules: dict[str, tuple[str, ...]]):
+    """Build a NamedSharding pytree from a logical-axes pytree."""
+    return jax.tree.map(
+        lambda lg, sh: NamedSharding(
+            mesh, logical_to_spec(lg, sh.shape, mesh, rules)),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, str) for e in x),
+    )

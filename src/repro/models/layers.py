@@ -1,0 +1,653 @@
+"""LM-zoo building blocks: norms, RoPE, GQA attention (causal / sliding
+window / softcap / qk-norm), SwiGLU & GELU MLPs, and top-k MoE with
+scatter-based expert-parallel dispatch.
+
+Parameters are plain dict pytrees built from *schemas*: each schema entry
+is ``name -> (shape, logical_axes, init_scale)`` so the parameter tree,
+its logical-sharding tree, and its initializer never drift apart.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig, constrain
+
+# ---------------------------------------------------------------------------
+# schema machinery
+# ---------------------------------------------------------------------------
+
+def build_params(schema: dict, key, dtype):
+    out = {}
+    names = sorted(schema)
+    keys = jax.random.split(key, len(names))
+    for k_, name in zip(keys, names):
+        shape, _, scale = schema[name]
+        if scale == 0.0:
+            out[name] = jnp.zeros(shape, dtype)
+        elif scale == 1.0 and len(shape) <= 1:
+            out[name] = jnp.ones(shape, dtype)
+        else:
+            out[name] = (jax.random.normal(k_, shape) * scale).astype(dtype)
+    return out
+
+
+def build_logical(schema: dict):
+    return {name: tuple(spec[1]) for name, spec in schema.items()}
+
+
+def stack_schema(schema: dict, n: int):
+    """Add a scanned leading `layers` dimension to every entry."""
+    return {name: ((n,) + tuple(shape), ("layers",) + tuple(lg), scale)
+            for name, (shape, lg, scale) in schema.items()}
+
+
+def fan_in(*dims):
+    return 1.0 / math.sqrt(dims[0])
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(dt)
+
+
+def layernorm(x, scale, bias, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps) * scale + bias
+    return y.astype(dt)
+
+
+def norm_schema(cfg: ModelConfig, prefix: str):
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {f"{prefix}_scale": ((d,), ("none",), 1.0),
+                f"{prefix}_bias": ((d,), ("none",), 0.0)}
+    return {f"{prefix}_scale": ((d,), ("none",), 0.0)}  # rms: 1 + scale
+
+
+def apply_norm(cfg: ModelConfig, p, prefix: str, x):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p[f"{prefix}_scale"], p[f"{prefix}_bias"],
+                         cfg.norm_eps)
+    return rmsnorm(x, p[f"{prefix}_scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta):
+    """x: (..., L, H, hd); positions: (..., L)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None, None] * freq  # (L, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], -1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_schema(cfg: ModelConfig, prefix: str = "attn"):
+    d, hd, Hq, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv
+    s = {
+        f"{prefix}_wq": ((d, Hq * hd), ("embed", "q_heads"), fan_in(d)),
+        f"{prefix}_wk": ((d, Hkv * hd), ("embed", "kv"), fan_in(d)),
+        f"{prefix}_wv": ((d, Hkv * hd), ("embed", "kv"), fan_in(d)),
+        f"{prefix}_wo": ((Hq * hd, d), ("q_heads", "embed"), fan_in(Hq * hd)),
+    }
+    if cfg.qkv_bias:
+        s[f"{prefix}_bq"] = ((Hq * hd,), ("q_heads",), 0.0)
+        s[f"{prefix}_bk"] = ((Hkv * hd,), ("kv",), 0.0)
+        s[f"{prefix}_bv"] = ((Hkv * hd,), ("kv",), 0.0)
+    if getattr(cfg, "qk_norm", False) or cfg.family == "vlm":
+        s[f"{prefix}_qnorm"] = ((hd,), ("none",), 0.0)
+        s[f"{prefix}_knorm"] = ((hd,), ("none",), 0.0)
+    return s
+
+
+def _mask_logits(logits, qpos, kpos, *, causal, window):
+    """window may be a traced per-layer scalar; 0/None => no window."""
+    mask = kpos >= 0
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        w = jnp.asarray(window)
+        no_win = w <= 0
+        mask = mask & (no_win | (kpos[None, :] > qpos[:, None] - w))
+    return jnp.where(mask[None, None], logits, -1e30)
+
+
+# ---------------------------------------------------------------------------
+# memory-efficient attention (flash semantics in pure XLA, custom VJP)
+# ---------------------------------------------------------------------------
+#
+# The Pallas kernel (kernels/flash_attention.py) is the TPU hot-path; this
+# is its XLA-native twin used where pallas cannot compile (CPU dry-run) and
+# as the scan-over-kv-chunks formulation XLA fuses well.  The custom VJP is
+# what keeps the backward pass O(L * chunk) memory: without it, jax's scan
+# AD would store every chunk's probabilities and regress to O(L^2).
+
+def _softcap_fwd(s, softcap):
+    if softcap is None:
+        return s, None
+    t = jnp.tanh(s / softcap)
+    return softcap * t, t
+
+
+def _mea_mask(qpos, kpos, causal, window):
+    m = kpos[None, :] >= 0
+    if causal:
+        m = m & (kpos[None, :] <= qpos[:, None])
+    w = jnp.asarray(window)
+    m = m & ((w <= 0) | (kpos[None, :] > qpos[:, None] - w))
+    return m                                            # (Lq, Ck)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def mea_attention(q, k, v, qpos, kpos, window, causal, scale,
+                  softcap, chunk):
+    """q: (B,H,Lq,D); k,v: (B,H,Lk,D); qpos: (Lq,); kpos: (Lk,).
+    window: int32 scalar ARRAY (may be traced, e.g. gemma2's scanned
+    per-layer pattern); <= 0 means no window.
+    """
+    out, _ = _mea_fwd_impl(q, k, v, qpos, kpos, window, causal,
+                           scale, softcap, chunk)
+    return out
+
+
+def _mea_fwd_impl(q, k, v, qpos, kpos, window, causal, scale, softcap,
+                  chunk):
+    B, H, Lq, D = q.shape
+    Lk = k.shape[2]
+    nc = max(1, Lk // chunk)
+    ck = Lk // nc
+    qf = q.astype(jnp.float32)
+    ks = k.astype(jnp.float32).reshape(B, H, nc, ck, D).transpose(2, 0, 1, 3, 4)
+    vs = v.astype(jnp.float32).reshape(B, H, nc, ck, D).transpose(2, 0, 1, 3, 4)
+    kps = kpos.reshape(nc, ck)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, kpc = xs
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc) * scale
+        s, _ = _softcap_fwd(s, softcap)
+        s = jnp.where(_mea_mask(qpos, kpc, causal, window)[None, None],
+                      s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vc)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Lq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Lq), jnp.float32)
+    a0 = jnp.zeros((B, H, Lq, D), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (ks, vs, kps))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+def _mea_vjp_fwd(q, k, v, qpos, kpos, window, causal, scale, softcap,
+                 chunk):
+    out, lse = _mea_fwd_impl(q, k, v, qpos, kpos, window, causal, scale,
+                             softcap, chunk)
+    return out, (q, k, v, qpos, kpos, window, out, lse)
+
+
+def _mea_vjp_bwd(causal, scale, softcap, chunk, res, dout):
+    q, k, v, qpos, kpos, window, out, lse = res
+    B, H, Lq, D = q.shape
+    Lk = k.shape[2]
+    nc = max(1, Lk // chunk)
+    ck = Lk // nc
+    qf = q.astype(jnp.float32)
+    dof = dout.astype(jnp.float32)
+    delta = jnp.sum(dof * out.astype(jnp.float32), axis=-1)   # (B,H,Lq)
+    ks = k.astype(jnp.float32).reshape(B, H, nc, ck, D).transpose(2, 0, 1, 3, 4)
+    vs = v.astype(jnp.float32).reshape(B, H, nc, ck, D).transpose(2, 0, 1, 3, 4)
+    kps = kpos.reshape(nc, ck)
+
+    def body(dq, xs):
+        kc, vc, kpc = xs
+        s_raw = jnp.einsum("bhqd,bhkd->bhqk", qf, kc) * scale
+        s, t = _softcap_fwd(s_raw, softcap)
+        s = jnp.where(_mea_mask(qpos, kpc, causal, window)[None, None],
+                      s, -1e30)
+        p = jnp.exp(s - lse[..., None])                  # exact probs
+        dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vc)
+        ds = p * (dp - delta[..., None])
+        if softcap is not None:
+            ds = ds * (1.0 - t * t)                      # d tanh
+        dv_c = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+        dk_c = jnp.einsum("bhqk,bhqd->bhkd", ds, qf) * scale
+        dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds, kc) * scale
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, H, Lq, D), jnp.float32)
+    dq, (dks, dvs) = lax.scan(body, dq0, (ks, vs, kps))
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(B, H, Lk, D)
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(B, H, Lk, D)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None, None)
+
+
+mea_attention.defvjp(_mea_vjp_fwd, _mea_vjp_bwd)
+
+
+def attention(cfg: ModelConfig, p, x, positions, *, prefix="attn",
+              causal=True, window=None, cache=None, kv_x=None,
+              fresh_kv=True):
+    """GQA attention. x: (B, L, d). positions: (L,) absolute positions.
+
+    cache: None (training / encoder) or a dict
+      {k: (B, Hkv, W, hd), v: ..., pos: (W,) int32} — ring-buffered keys.
+      Returns (out, new_cache).
+    kv_x: cross-attention source (B, Lkv, d) (whisper decoder).
+    """
+    B, L, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv
+    dt = x.dtype
+    q = x @ p[f"{prefix}_wq"].astype(dt)
+    src = kv_x if kv_x is not None else x
+    k = src @ p[f"{prefix}_wk"].astype(dt)
+    v = src @ p[f"{prefix}_wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p[f"{prefix}_bq"].astype(dt)
+        k = k + p[f"{prefix}_bk"].astype(dt)
+        v = v + p[f"{prefix}_bv"].astype(dt)
+    rules = cfg.rules()
+    q = constrain(q.reshape(B, L, Hq, hd),
+                  ("batch", "seq", "q_heads", "none"), rules)
+    Lk = src.shape[1]
+    k = constrain(k.reshape(B, Lk, Hkv, hd),
+                  ("batch", "seq", "kv", "none"), rules)
+    v = constrain(v.reshape(B, Lk, Hkv, hd),
+                  ("batch", "seq", "kv", "none"), rules)
+    if f"{prefix}_qnorm" in p:
+        q = rmsnorm(q, p[f"{prefix}_qnorm"], cfg.norm_eps)
+        k = rmsnorm(k, p[f"{prefix}_knorm"], cfg.norm_eps)
+    if kv_x is None and cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = q.transpose(0, 2, 1, 3)                       # (B, Hq, L, hd)
+    k = k.transpose(0, 2, 1, 3)                       # (B, Hkv, Lk, hd)
+    v = v.transpose(0, 2, 1, 3)
+
+    scale = getattr(cfg, "query_scale", None) or hd ** -0.5
+    group = Hq // Hkv
+    win_arr = jnp.asarray(0 if window is None else window, jnp.int32)
+
+    new_cache = None
+    if cache is not None and kv_x is None:
+        W = cache["k"].shape[2]
+        slots = positions % W
+        ck = cache["k"].at[:, :, slots].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, :, slots].set(v.astype(cache["v"].dtype))
+        cpos = cache["pos"].at[slots].set(positions)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        if L == 1:
+            # decode: grouped attention over the ring cache (kv_seq may be
+            # sequence-parallel-sharded; heads stay grouped to avoid a
+            # group-repeat of the whole cache)
+            kc, vc, kpos = ck.astype(dt), cv.astype(dt), cpos
+            qg = q.reshape(B, Hkv, group, L, hd)
+            logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kc,
+                                preferred_element_type=jnp.float32) * scale
+            if cfg.softcap is not None:
+                logits = cfg.softcap * jnp.tanh(logits / cfg.softcap)
+            logits = _mask_logits(
+                logits.reshape(B, Hq, L, -1), positions, kpos,
+                causal=causal, window=window,
+            ).reshape(B, Hkv, group, L, -1)
+            probs = jax.nn.softmax(logits, axis=-1).astype(dt)
+            out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vc)
+            out = out.reshape(B, Hq, L, hd)
+            out = out.transpose(0, 2, 1, 3).reshape(B, L, -1)
+            out = out @ p[f"{prefix}_wo"].astype(dt)
+            return constrain(out, ("batch", "seq", "none"), rules), new_cache
+        # prefill (L > 1):
+        #  * fresh_kv=True — single-shot prefill: the fresh k/v ARE the
+        #    whole history; fall through to the training formulation
+        #    (exact, and a window-sized ring may already have dropped
+        #    interior keys mid-write, so the cache must not be read).
+        #  * fresh_kv=False — CHUNKED prefill: attend against the full
+        #    updated cache (ring width is window + prefill_chunk so no
+        #    key a query still needs is overwritten); invalid slots
+        #    carry pos = -1 and are masked inside mea.
+        if not fresh_kv:
+            kc, vc, cp = ck.astype(dt), cv.astype(dt), cpos
+            if group > 1:
+                kc = jnp.repeat(kc, group, axis=1)
+                vc = jnp.repeat(vc, group, axis=1)
+            kc = constrain(kc, ("batch", "q_heads", "kv_seq", "none"),
+                           rules)
+            vc = constrain(vc, ("batch", "q_heads", "kv_seq", "none"),
+                           rules)
+            chunk = _pick_chunk(kc.shape[2], cfg.attn_chunk)
+            out = mea_attention(q, kc, vc, positions, cp, win_arr, causal,
+                                scale, cfg.softcap, chunk)
+            out = out.astype(dt).transpose(0, 2, 1, 3).reshape(B, L, -1)
+            out = out @ p[f"{prefix}_wo"].astype(dt)
+            out = constrain(out, ("batch", "seq", "none"), rules)
+            return out, new_cache
+
+    kpos = positions if kv_x is None else jnp.arange(Lk)
+    qpos = positions
+
+    # repeat kv-heads up to q-heads: keeps every operand sharded on the
+    # head axis over "model" (the grouped einsum forced XLA to all-gather
+    # the (B,H,L,L) logits; see EXPERIMENTS.md §Perf iteration 1)
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    k = constrain(k, ("batch", "q_heads", "seq", "none"), rules)
+    v = constrain(v, ("batch", "q_heads", "seq", "none"), rules)
+
+    if cfg.attention_impl == "chunked":
+        chunk = _pick_chunk(Lk, cfg.attn_chunk)
+        out = mea_attention(q, k, v, qpos, kpos, win_arr,
+                            causal and kv_x is None, scale, cfg.softcap,
+                            chunk)
+    else:
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                            preferred_element_type=jnp.float32) * scale
+        if cfg.softcap is not None:
+            logits = cfg.softcap * jnp.tanh(logits / cfg.softcap)
+        logits = _mask_logits(logits, qpos, kpos,
+                              causal=causal and kv_x is None, window=window)
+        probs = jax.nn.softmax(logits, axis=-1).astype(dt)
+        out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    out = out.astype(dt).transpose(0, 2, 1, 3).reshape(B, L, -1)
+    out = out @ p[f"{prefix}_wo"].astype(dt)
+    out = constrain(out, ("batch", "seq", "none"), rules)
+    return out, new_cache
+
+
+def _pick_chunk(lk: int, target: int) -> int:
+    """Largest divisor of lk that is <= target."""
+    c = min(target, lk)
+    while lk % c:
+        c -= 1
+    return max(c, 1)
+
+
+def attention_flash(cfg: ModelConfig, p, x, positions, *, prefix="attn",
+                    causal=True, window=None):
+    """Training-path attention routed through the Pallas flash kernel
+    (static window only)."""
+    from ..kernels import ops as kops
+    B, L, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv
+    dt = x.dtype
+    q = (x @ p[f"{prefix}_wq"].astype(dt)).reshape(B, L, Hq, hd)
+    k = (x @ p[f"{prefix}_wk"].astype(dt)).reshape(B, L, Hkv, hd)
+    v = (x @ p[f"{prefix}_wv"].astype(dt)).reshape(B, L, Hkv, hd)
+    if cfg.qkv_bias:
+        q = q + p[f"{prefix}_bq"].astype(dt).reshape(Hq, hd)
+        k = k + p[f"{prefix}_bk"].astype(dt).reshape(Hkv, hd)
+        v = v + p[f"{prefix}_bv"].astype(dt).reshape(Hkv, hd)
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    out = kops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal,
+        window=int(window) if window else None,
+        softcap=cfg.softcap)
+    out = out.transpose(0, 2, 1, 3).reshape(B, L, -1)
+    return out @ p[f"{prefix}_wo"].astype(dt), None
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_schema(cfg: ModelConfig, prefix: str = "mlp", d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {
+            f"{prefix}_wg": ((d, f), ("embed", "mlp"), fan_in(d)),
+            f"{prefix}_wu": ((d, f), ("embed", "mlp"), fan_in(d)),
+            f"{prefix}_wd": ((f, d), ("mlp", "embed"), fan_in(f)),
+        }
+    return {
+        f"{prefix}_wu": ((d, f), ("embed", "mlp"), fan_in(d)),
+        f"{prefix}_bu": ((f,), ("mlp",), 0.0),
+        f"{prefix}_wd": ((f, d), ("mlp", "embed"), fan_in(f)),
+        f"{prefix}_bd": ((d,), ("none",), 0.0),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p, x, prefix: str = "mlp"):
+    dt = x.dtype
+    rules = cfg.rules()
+    hidden_lg = ("batch", "seq", "mlp")
+    if cfg.mlp == "swiglu":
+        g = jax.nn.silu(constrain(x @ p[f"{prefix}_wg"].astype(dt),
+                                  hidden_lg, rules))
+        u = constrain(x @ p[f"{prefix}_wu"].astype(dt), hidden_lg, rules)
+        out = (g * u) @ p[f"{prefix}_wd"].astype(dt)
+    else:
+        h = jax.nn.gelu(constrain(x @ p[f"{prefix}_wu"].astype(dt),
+                                  hidden_lg, rules)
+                        + p[f"{prefix}_bu"].astype(dt))
+        out = h @ p[f"{prefix}_wd"].astype(dt) + p[f"{prefix}_bd"].astype(dt)
+    return constrain(out, ("batch", "seq", "none"), rules)
+
+
+# ---------------------------------------------------------------------------
+# MoE (token-choice top-k, scatter-based expert-parallel dispatch)
+# ---------------------------------------------------------------------------
+
+def moe_schema(cfg: ModelConfig, prefix: str = "moe"):
+    d = cfg.d_model
+    # weights stored at DISPATCH granularity: with "ep_virtual" each
+    # expert is split into virtual_split f-slices that behave as
+    # independent experts (y = x Wg1 Wd1 + x Wg2 Wd2 is exact)
+    E, f = cfg.n_experts_disp, cfg.d_ff_expert_disp
+    return {
+        f"{prefix}_router": ((d, cfg.n_experts), ("embed", "expert"),
+                             fan_in(d)),
+        f"{prefix}_wg": ((E, d, f), ("expert", "embed", "expert_mlp"),
+                         fan_in(d)),
+        f"{prefix}_wu": ((E, d, f), ("expert", "embed", "expert_mlp"),
+                         fan_in(d)),
+        f"{prefix}_wd": ((E, f, d), ("expert", "expert_mlp", "embed"),
+                         fan_in(f)),
+    }
+
+
+CAPACITY_QUANTUM = 4096  # divisible by any (pod x data) shard count
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor
+                      / cfg.n_experts))
+    q = CAPACITY_QUANTUM if n_tokens >= CAPACITY_QUANTUM else 128
+    return max(q, -(-c // q) * q)
+
+
+def positions_in_expert(flat_ids: jax.Array, n_experts: int,
+                        block: int = 256) -> jax.Array:
+    """Position of each assignment within its expert (stable order).
+
+    A flat jnp.cumsum over millions of rows is costed (and on some
+    backends executed) quadratically; this hierarchical version does the
+    intra-block prefix sums as a lower-triangular MATMUL (MXU-friendly)
+    and a cheap cumsum only over block counts.
+    """
+    n = flat_ids.shape[0]
+    nb = -(-n // block)
+    pad = nb * block - n
+    ids = jnp.pad(flat_ids, (0, pad), constant_values=n_experts)
+    onehot = jax.nn.one_hot(ids.reshape(nb, block), n_experts,
+                            dtype=jnp.float32)               # (nb, bs, E)
+    tri = jnp.tril(jnp.ones((block, block), jnp.float32))
+    intra = jnp.einsum("qk,nke->nqe", tri, onehot)           # inclusive
+    counts = jnp.sum(onehot, axis=1)                         # (nb, E)
+    offsets = jnp.cumsum(counts, axis=0) - counts            # exclusive
+    pos = offsets[:, None, :] + intra - 1.0                  # (nb, bs, E)
+    picked = jnp.take_along_axis(
+        pos.reshape(nb * block, n_experts),
+        jnp.clip(ids, 0, n_experts - 1).reshape(-1, 1), axis=1)[:, 0]
+    return picked[:n].astype(jnp.int32)
+
+
+def _moe_dispatch_local(cfg: ModelConfig, xt, router, c_loc: int,
+                        rank, n_shards: int, t_global: int):
+    """Per-data-shard dispatch: router -> top-k -> local positions ->
+    local scatter into this shard's capacity slice.  Runs either inside
+    shard_map (sharded over the batch axes) or plainly on one device."""
+    dt = xt.dtype
+    E, K = cfg.n_experts, cfg.top_k
+    t_loc, d = xt.shape
+    logits = (xt @ router.astype(dt)).astype(jnp.float32)
+    gate_vals, ids = lax.top_k(logits, K)
+    gates = jax.nn.softmax(gate_vals, axis=-1)
+
+    # load-balance aux (Switch-style); local sums -> global means
+    probs = jax.nn.softmax(logits, axis=-1)
+    sel = jnp.sum(jax.nn.one_hot(ids, E, dtype=jnp.float32), axis=1)
+    me_sum = jnp.sum(probs, axis=0)
+    ce_sum = jnp.sum(sel, axis=0)
+
+    if cfg.expert_sharding == "ep_virtual":
+        # expand each assignment to its virtual f-slices; same gate on
+        # every slice (their partial outputs sum to the expert output)
+        v = cfg.virtual_split
+        ids = (ids[..., None] * v +
+               jnp.arange(v, dtype=ids.dtype)).reshape(t_loc, K * v)
+        gates = jnp.repeat(gates, v, axis=-1)
+        E, K = E * v, K * v
+
+    flat_ids = ids.reshape(-1)
+    pos = positions_in_expert(flat_ids, E)
+    keep = pos < c_loc
+    slot = jnp.where(keep, flat_ids * c_loc + pos, E * c_loc)
+    xr = jnp.repeat(xt, K, axis=0)
+    buf = jnp.zeros((E * c_loc + 1, d), dt).at[slot].add(xr)
+    buf = buf[:-1].reshape(E, c_loc, d)
+    return buf, slot, gates, keep, (me_sum, ce_sum)
+
+
+def _moe_combine_local(out_e_loc, slot, gates, keep, K: int):
+    """Per-data-shard combine: by construction each shard's tokens were
+    scattered into ITS OWN capacity slice, so the gather is local."""
+    E, c_loc, d = out_e_loc.shape
+    flat = out_e_loc.reshape(E * c_loc, d)
+    g = flat[jnp.minimum(slot, E * c_loc - 1)]
+    g = g * (gates.reshape(-1)[:, None] * keep[:, None]).astype(flat.dtype)
+    return jnp.sum(g.reshape(-1, K, d), axis=1)          # (T_loc, d)
+
+
+def apply_moe(cfg: ModelConfig, p, x, prefix: str = "moe"):
+    """x: (B, L, d). Token-choice top-k with capacity + dropping.
+
+    The dispatch (router/top-k/positions/scatter) runs PER DATA SHARD
+    inside shard_map — a global scatter across shards forces XLA to
+    replicate-and-all-reduce the whole (E, C, d) buffer (measured 64 GB
+    per step for mixtral; see EXPERIMENTS.md §Perf).  The expert matmuls
+    stay in pjit-land on the (E, C[data-sharded], d) buffer: "ep" archs
+    shard E over "model" (expert parallelism), "tp" archs shard d_ff
+    over "model" with the expert weights explicitly all-gathered over
+    "data" (weights move, not the much larger activations).
+    Returns (out, aux_loss).
+    """
+    B, L, d = x.shape
+    dt = x.dtype
+    E, K = cfg.n_experts, cfg.top_k
+    E_disp = cfg.n_experts_disp
+    K_comb = K * (cfg.virtual_split
+                  if cfg.expert_sharding == "ep_virtual" else 1)
+    T = B * L
+    rules = cfg.rules()
+    xt = x.reshape(T, d)
+    router = p[f"{prefix}_router"]
+
+    mesh = jax.sharding.get_abstract_mesh()
+    batch_rule = rules.get("batch", ("pod", "data"))
+    data_axes = tuple(a for a in batch_rule
+                      if not mesh.empty and a in mesh.shape)
+    n_shards = 1
+    for a in data_axes:
+        n_shards *= mesh.shape[a]
+    C_g = moe_capacity(cfg, T)
+    c_loc = C_g // n_shards
+    sharded = bool(data_axes) and T % n_shards == 0 and C_g % n_shards == 0
+
+    if sharded:
+        from jax.sharding import PartitionSpec as P
+
+        def disp(xt_loc, router_f):
+            buf, slot, gates, keep, (me_s, ce_s) = _moe_dispatch_local(
+                cfg, xt_loc, router_f, c_loc, 0, n_shards, T)
+            me_s = lax.psum(me_s, data_axes)
+            ce_s = lax.psum(ce_s, data_axes)
+            return buf, slot, gates, keep, me_s, ce_s
+
+        buf, slot, gates, keep, me_s, ce_s = jax.shard_map(
+            disp, mesh=mesh,
+            in_specs=(P(data_axes, None), P(None, None)),
+            out_specs=(P(None, data_axes, None), P(data_axes),
+                       P(data_axes, None), P(data_axes), P(None), P(None)),
+            check_vma=False,
+        )(xt, router)
+    else:
+        buf, slot, gates, keep, (me_s, ce_s) = _moe_dispatch_local(
+            cfg, xt, router, C_g, 0, 1, T)
+        c_loc = C_g
+    aux = E * jnp.sum((me_s / T) * (ce_s / T))
+
+    buf = constrain(buf, ("expert", "capacity", "none"), rules)
+    wg, wu, wd = (p[f"{prefix}_wg"], p[f"{prefix}_wu"], p[f"{prefix}_wd"])
+    if cfg.expert_sharding == "tp":
+        # gather the WEIGHTS over the fsdp axis (not the activations)
+        wlg = ("expert", "none", "expert_mlp")
+        wg = constrain(wg, wlg, rules)
+        wu = constrain(wu, wlg, rules)
+        wd = constrain(wd, ("expert", "expert_mlp", "none"), rules)
+    wg, wu, wd = wg.astype(dt), wu.astype(dt), wd.astype(dt)
+    hid_lg = ("expert", "capacity", "expert_mlp")
+    h = jax.nn.silu(constrain(
+        jnp.einsum("ecd,edf->ecf", buf, wg), hid_lg, rules)) * \
+        constrain(jnp.einsum("ecd,edf->ecf", buf, wu), hid_lg, rules)
+    out_e = constrain(jnp.einsum("ecf,efd->ecd", h, wd),
+                      ("expert", "capacity", "none"), rules)  # (E, C, d)
+
+    if sharded:
+        from jax.sharding import PartitionSpec as P
+        out = jax.shard_map(
+            partial(_moe_combine_local, K=K_comb), mesh=mesh,
+            in_specs=(P(None, data_axes, None), P(data_axes),
+                      P(data_axes, None), P(data_axes)),
+            out_specs=P(data_axes, None),
+            check_vma=False,
+        )(out_e, slot, gates, keep)
+    else:
+        out = _moe_combine_local(out_e, slot, gates, keep, K_comb)
+    return out.reshape(B, L, d), aux

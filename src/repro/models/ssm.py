@@ -1,0 +1,214 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked-scan training path,
+O(1)-state decode path, and a naive recurrent oracle for tests.
+
+Shapes follow the Mamba2 paper: d_inner = expand * d_model, heads
+nh = d_inner / headdim, per-head state size N = ssm_state, B/C shared
+across heads in ssm_ngroups groups.  The chunked algorithm splits L into
+chunks of Q tokens; intra-chunk terms are a masked quadratic form (maps
+onto the MXU), inter-chunk terms are a length-L/Q scan over the running
+state h: (nh, hp, N) — this is what makes long_500k decode O(1) in
+sequence length.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig, constrain
+from .layers import fan_in, rmsnorm
+
+
+def ssm_schema(cfg: ModelConfig, prefix: str = "ssm"):
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, ns, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = di + 2 * g * ns
+    return {
+        f"{prefix}_in": ((d, 2 * di + 2 * g * ns + nh),
+                         ("embed", "heads"), fan_in(d)),
+        f"{prefix}_conv": ((cfg.ssm_conv, conv_dim), ("none", "heads"),
+                           fan_in(cfg.ssm_conv)),
+        f"{prefix}_conv_b": ((conv_dim,), ("heads",), 0.0),
+        f"{prefix}_alog": ((nh,), ("none",), 1.0),     # A = -exp(alog)
+        f"{prefix}_dtb": ((nh,), ("none",), 0.0),      # dt bias
+        f"{prefix}_d": ((nh,), ("none",), 1.0),        # skip D
+        f"{prefix}_gnorm": ((di,), ("none",), 0.0),    # gated RMSNorm
+        f"{prefix}_out": ((di, d), ("heads", "embed"), fan_in(di)),
+    }
+
+
+def _split_in(cfg: ModelConfig, zxbcdt):
+    di = cfg.d_inner
+    g, ns, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * g * ns]
+    dt = zxbcdt[..., -nh:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, *, state=None):
+    """Depthwise causal conv over time. xbc: (B, L, C); w: (K, C).
+
+    state: (B, K-1, C) previous inputs (decode); returns (out, new_state).
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (K - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)            # (B, L+K-1, C)
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i] for i in range(K)) + b
+    new_state = full[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k]."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, *, chunk: int, h0=None):
+    """SSD forward. x: (B, L, nh, hp); dt: (B, L, nh) (post-softplus);
+    a: (nh,) negative; b, c: (B, L, g, N).  Returns (y, h_last) with
+    h_last: (B, nh, hp, N).
+    """
+    B, L, nh, hp = x.shape
+    g, N = b.shape[2], b.shape[3]
+    Q = min(chunk, L)
+    L_real = L
+    if L % Q:
+        # zero-pad: dt=0 padding contributes nothing (unit decay, zero
+        # input), so the result and final state are exact
+        pad = Q - L % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        L = L + pad
+    nc = L // Q
+    rep = nh // g
+
+    f32 = jnp.float32
+    xc = x.reshape(B, nc, Q, nh, hp).astype(f32)
+    dtc = dt.reshape(B, nc, Q, nh).astype(f32)
+    bc = jnp.repeat(b.reshape(B, nc, Q, g, N), rep, axis=3).astype(f32)
+    cc = jnp.repeat(c.reshape(B, nc, Q, g, N), rep, axis=3).astype(f32)
+    da = dtc * a.astype(f32)                              # (B, nc, Q, nh)
+    xdt = xc * dtc[..., None]
+
+    # intra-chunk (quadratic, MXU-friendly)
+    Lmat = jnp.exp(segsum(da.transpose(0, 1, 3, 2)))      # (B, nc, nh, Q, Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc)
+    y_intra = jnp.einsum("bchqk,bchqk,bckhp->bcqhp",
+                         scores, Lmat, xdt)
+
+    # chunk states: S_c = sum_j exp(sum_{k>j} da_k) * b_j x_j^T
+    cum = jnp.cumsum(da, axis=2)
+    decay_to_end = jnp.exp(cum[..., -1:, :] - cum)        # (B, nc, Q, nh)
+    states = jnp.einsum("bcqhn,bcqhp,bcqh->bchpn", bc, xdt, decay_to_end)
+
+    # inter-chunk scan over running state
+    chunk_decay = jnp.exp(cum[..., -1, :])                # (B, nc, nh)
+
+    def scan_fn(h, inp):
+        s_c, dec = inp
+        h_before = h
+        h = h * dec[..., None, None] + s_c
+        return h, h_before
+
+    hinit = (jnp.zeros((B, nh, hp, N), f32) if h0 is None
+             else h0.astype(f32))
+    h_last, h_befores = lax.scan(
+        scan_fn,
+        hinit,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_befores = h_befores.transpose(1, 0, 2, 3, 4)        # (B, nc, nh, hp, N)
+
+    in_decay = jnp.exp(cum)                               # (B, nc, Q, nh)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", cc, h_befores, in_decay)
+
+    y = (y_intra + y_inter).reshape(B, L, nh, hp)[:, :L_real]
+    return y.astype(x.dtype), h_last
+
+
+def ssd_recurrent_ref(x, dt, a, b, c, *, h0=None):
+    """Naive per-step recurrence oracle (also the decode semantics)."""
+    B, L, nh, hp = x.shape
+    g, N = b.shape[2], b.shape[3]
+    rep = nh // g
+    f32 = jnp.float32
+    bf = jnp.repeat(b, rep, axis=2).astype(f32)
+    cf = jnp.repeat(c, rep, axis=2).astype(f32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                  # (B,nh,hp), (B,nh), (B,nh,N)
+        dec = jnp.exp(dtt * a.astype(f32))     # (B, nh)
+        h = h * dec[..., None, None] + jnp.einsum(
+            "bhn,bhp,bh->bhpn", bt, xt.astype(f32), dtt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, h)
+        return h, y
+
+    hinit = (jnp.zeros((B, nh, hp, N), f32) if h0 is None
+             else h0.astype(f32))
+    h, ys = lax.scan(step, hinit,
+                     (x.transpose(1, 0, 2, 3), dt.astype(f32).transpose(1, 0, 2),
+                      bf.transpose(1, 0, 2, 3), cf.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h
+
+
+def mamba2_block(cfg: ModelConfig, p, x, *, prefix="ssm", cache=None):
+    """Full Mamba2 block. x: (B, L, d). cache: None or
+    {conv: (B, K-1, convdim), h: (B, nh, hp, N)} for decode/chunked prefill.
+    Returns (out, new_cache)."""
+    B, L, d = x.shape
+    dt_ = x.dtype
+    di = cfg.d_inner
+    g, ns, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    hp = cfg.ssm_headdim
+
+    rules = cfg.rules()
+    zxbcdt = constrain(x @ p[f"{prefix}_in"].astype(dt_),
+                       ("batch", "seq", "heads"), rules)
+    z, xbc, dtr = _split_in(cfg, zxbcdt)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(
+        xbc, p[f"{prefix}_conv"].astype(dt_),
+        p[f"{prefix}_conv_b"].astype(dt_), state=conv_state)
+    xs = xbc[..., :di].reshape(B, L, nh, hp)
+    bmat = xbc[..., di:di + g * ns].reshape(B, L, g, ns)
+    cmat = xbc[..., di + g * ns:].reshape(B, L, g, ns)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + p[f"{prefix}_dtb"].astype(jnp.float32))
+    a = -jnp.exp(p[f"{prefix}_alog"].astype(jnp.float32))
+
+    h0 = cache["h"] if cache is not None else None
+    if L == 1:  # decode fast path: one recurrence step, no chunking
+        y, h = ssd_recurrent_ref(xs, dt, a, bmat, cmat, h0=h0)
+    else:
+        y, h = ssd_chunked(xs, dt, a, bmat, cmat, chunk=cfg.ssm_chunk, h0=h0)
+    y = y + xs * p[f"{prefix}_d"].astype(dt_)[None, None, :, None]
+    y = constrain(y.reshape(B, L, di), ("batch", "seq", "heads"), rules)
+    y = rmsnorm(y * jax.nn.silu(z), p[f"{prefix}_gnorm"], cfg.norm_eps)
+    out = constrain(y @ p[f"{prefix}_out"].astype(dt_),
+                    ("batch", "seq", "none"), rules)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "h": h.astype(cache["h"].dtype)}
+    return out, new_cache
+
+
+def ssm_cache_shape(cfg: ModelConfig, batch: int):
+    di = cfg.d_inner
+    conv_dim = di + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": (batch, cfg.ssm_conv - 1, conv_dim),
+        "h": (batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state),
+    }

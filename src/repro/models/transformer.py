@@ -1,0 +1,507 @@
+"""Model assembly for every assigned architecture family.
+
+  * decoder-only (dense / moe / vlm): scan-over-layers with per-layer
+    sliding-window values carried as scanned data, so gemma2's alternating
+    local/global pattern lives in ONE scanned stack (no unrolling).
+  * ssm (mamba2): scan over Mamba2 blocks.
+  * hybrid (zamba2): outer scan over groups, each group = one invocation
+    of the SHARED attention block (single parameter set, per-group KV
+    cache) followed by `shared_every` Mamba2 layers.
+  * audio enc-dec (whisper): bidirectional encoder over stub frame
+    embeddings + causal decoder with cross attention.
+
+Parameters are nested dicts; `logical_axes` returns the matching tree of
+logical sharding names (see config.tree_shardings).  All layer loops are
+lax.scan with optional jax.checkpoint (remat) around the body.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from . import ssm as S
+from .config import ModelConfig, constrain
+
+
+# ---------------------------------------------------------------------------
+# schemas
+# ---------------------------------------------------------------------------
+
+def decoder_block_schema(cfg: ModelConfig):
+    s = {}
+    s.update(L.norm_schema(cfg, "ln1"))
+    s.update(L.norm_schema(cfg, "ln2"))
+    if cfg.post_norm:
+        s.update(L.norm_schema(cfg, "pn1"))
+        s.update(L.norm_schema(cfg, "pn2"))
+    s.update(L.attn_schema(cfg))
+    if cfg.n_experts:
+        s.update(L.moe_schema(cfg))
+    else:
+        s.update(L.mlp_schema(cfg))
+    return s
+
+
+def ssm_block_schema(cfg: ModelConfig):
+    s = {}
+    s.update(L.norm_schema(cfg, "ln1"))
+    s.update(S.ssm_schema(cfg))
+    return s
+
+
+def enc_block_schema(cfg: ModelConfig):
+    s = {}
+    s.update(L.norm_schema(cfg, "ln1"))
+    s.update(L.norm_schema(cfg, "ln2"))
+    s.update(L.attn_schema(cfg))
+    s.update(L.mlp_schema(cfg))
+    return s
+
+
+def xdec_block_schema(cfg: ModelConfig):
+    """Whisper decoder block: self-attn + cross-attn + mlp."""
+    s = {}
+    s.update(L.norm_schema(cfg, "ln1"))
+    s.update(L.norm_schema(cfg, "ln2"))
+    s.update(L.norm_schema(cfg, "ln3"))
+    s.update(L.attn_schema(cfg, "attn"))
+    s.update(L.attn_schema(cfg, "xattn"))
+    s.update(L.mlp_schema(cfg))
+    return s
+
+
+def model_schema(cfg: ModelConfig, max_len: int = 0):
+    d, V = cfg.d_model, cfg.vocab_pad
+    tree = {
+        "embed": {"tok": ((V, d), ("vocab", "embed"), 1e-2)},
+        "final": L.norm_schema(cfg, "fn"),
+    }
+    if not cfg.tie_embeddings:
+        tree["embed"]["unembed"] = ((V, d), ("vocab", "embed"), 1e-2)
+    if cfg.rope_theta == 0:  # learned absolute positions (whisper)
+        tree["embed"]["pos"] = ((max_len, d), ("none", "embed"), 1e-2)
+    if cfg.family == "ssm":
+        tree["blocks"] = L.stack_schema(ssm_block_schema(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        tree["blocks"] = L.stack_schema(ssm_block_schema(cfg), cfg.n_layers)
+        shared = {}
+        shared.update(L.norm_schema(cfg, "ln1"))
+        shared.update(L.norm_schema(cfg, "ln2"))
+        shared.update(L.attn_schema(cfg))
+        shared.update(L.mlp_schema(cfg))
+        tree["shared"] = shared
+    elif cfg.enc_dec:
+        tree["embed"]["pos_enc"] = ((cfg.enc_len, d), ("none", "embed"), 1e-2)
+        tree["enc"] = L.stack_schema(enc_block_schema(cfg), cfg.n_enc_layers)
+        tree["enc_final"] = L.norm_schema(cfg, "efn")
+        tree["blocks"] = L.stack_schema(xdec_block_schema(cfg), cfg.n_layers)
+    else:
+        tree["blocks"] = L.stack_schema(decoder_block_schema(cfg),
+                                        cfg.n_layers)
+    return tree
+
+
+def init_params(cfg: ModelConfig, key, max_len: int = 0):
+    schema = model_schema(cfg, max_len)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, len(schema))
+    return {name: L.build_params(sub, k, dtype)
+            for (name, sub), k in zip(sorted(schema.items()), ks)}
+
+
+def logical_axes(cfg: ModelConfig, max_len: int = 0):
+    schema = model_schema(cfg, max_len)
+    return {name: L.build_logical(sub) for name, sub in schema.items()}
+
+
+def window_pattern(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer sliding-window size; 0 = global attention."""
+    if cfg.local_global:
+        return jnp.asarray(
+            [cfg.local_window if l % 2 == 0 else 0
+             for l in range(cfg.n_layers)], jnp.int32)
+    w = cfg.window or 0
+    return jnp.full((cfg.n_layers,), w, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def apply_decoder_block(cfg: ModelConfig, p, h, positions, window,
+                        cache=None, fresh_kv=True):
+    x = L.apply_norm(cfg, p, "ln1", h)
+    if cfg.attention_impl == "flash" and cache is None:
+        a, new_cache = L.attention_flash(cfg, p, x, positions,
+                                         window=cfg.window)
+    else:
+        a, new_cache = L.attention(cfg, p, x, positions, window=window,
+                                   cache=cache, fresh_kv=fresh_kv)
+    if cfg.post_norm:
+        a = L.apply_norm(cfg, p, "pn1", a)
+    h = h + a
+    x = L.apply_norm(cfg, p, "ln2", h)
+    if cfg.n_experts:
+        m, aux = L.apply_moe(cfg, p, x)
+    else:
+        m, aux = L.apply_mlp(cfg, p, x), 0.0
+    if cfg.post_norm:
+        m = L.apply_norm(cfg, p, "pn2", m)
+    return h + m, new_cache, aux
+
+
+def apply_ssm_block(cfg: ModelConfig, p, h, cache=None):
+    x = L.apply_norm(cfg, p, "ln1", h)
+    y, new_cache = S.mamba2_block(cfg, p, x, cache=cache)
+    return h + y, new_cache
+
+
+def apply_xdec_block(cfg: ModelConfig, p, h, positions, enc_out,
+                     cache=None):
+    x = L.apply_norm(cfg, p, "ln1", h)
+    a, new_self = L.attention(cfg, p, x, positions, prefix="attn",
+                              cache=None if cache is None else cache["self"])
+    h = h + a
+    x = L.apply_norm(cfg, p, "ln2", h)
+    a, _ = L.attention(cfg, p, x, positions, prefix="xattn", kv_x=enc_out)
+    h = h + a
+    x = L.apply_norm(cfg, p, "ln3", h)
+    h = h + L.apply_mlp(cfg, p, x)
+    new_cache = None if cache is None else {"self": new_self}
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params, tokens, positions):
+    dt = jnp.dtype(cfg.dtype)
+    h = params["embed"]["tok"].astype(dt)[tokens]
+    if cfg.name.startswith("gemma"):
+        h = h * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.rope_theta == 0 and "pos" in params["embed"]:
+        h = h + params["embed"]["pos"].astype(dt)[positions]
+    return constrain(h, ("batch", "seq", "none"), cfg.rules())
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _index(tree, l):
+    return jax.tree.map(
+        lambda a: lax.dynamic_index_in_dim(a, l, 0, keepdims=False), tree)
+
+
+def _serve_loop(body, h, params_stacked, caches, n: int,
+                unroll: bool = False):
+    """fori_loop over layers with the STACKED CACHE AS LOOP CARRY,
+    updated in place with dynamic_update_index.  A lax.scan would emit
+    the new cache as a fresh `ys` allocation — double-buffering the
+    whole KV cache (measured +6..13 GB/device on the decode_32k cells);
+    the carried-buffer form updates in place.
+
+    unroll=True (cfg.scan_layers=False) is for the dry-run's flop
+    measurement — loop bodies are counted once by cost_analysis."""
+    def f(l, carry):
+        h, cache = carry
+        p_l = _index(params_stacked, l)
+        c_l = _index(cache, l)
+        h, nc = body(h, p_l, c_l, l)
+        cache = jax.tree.map(
+            lambda a, nv: lax.dynamic_update_index_in_dim(
+                a, nv.astype(a.dtype), l, 0), cache, nc)
+        return (h, cache)
+
+    if unroll:
+        carry = (h, caches)
+        for l in range(n):
+            carry = f(l, carry)
+        return carry
+    return lax.fori_loop(0, n, f, (h, caches))
+
+
+def _grouped_scan(cfg: ModelConfig, body, carry, xs, n: int):
+    """Two-level remat: outer scan over groups (checkpointed) of an inner
+    scan over cfg.remat_group layers (each also checkpointed).  Saved
+    residuals between layers drop from n to n/group at ~one extra forward
+    recompute — what fits qwen1.5-110b's 80-layer train step in HBM."""
+    g = cfg.remat_group
+    G = n // g
+    xs_g = jax.tree.map(lambda a: a.reshape((G, g) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(c, xg):
+        c, _ = lax.scan(jax.checkpoint(body), c, xg)
+        return c, None
+
+    return lax.scan(outer, carry, xs_g)
+
+
+def _scan(cfg: ModelConfig, body, carry, xs):
+    """lax.scan when cfg.scan_layers (compact HLO, one body in the IR) or
+    an unrolled Python loop (used by the dry-run's flop measurement —
+    XLA's cost_analysis counts loop bodies ONCE, so trip-count-sensitive
+    metrics are extrapolated from small unrolled lowerings)."""
+    if cfg.scan_layers:
+        return lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Whisper encoder over stub frame embeddings (B, enc_len, d)."""
+    dt = jnp.dtype(cfg.dtype)
+    h = frames.astype(dt) + params["embed"]["pos_enc"].astype(dt)
+    positions = jnp.arange(h.shape[1])
+
+    def body(h, p):
+        x = L.apply_norm(cfg, p, "ln1", h)
+        a, _ = L.attention(cfg, p, x, positions, causal=False)
+        h = h + a
+        x = L.apply_norm(cfg, p, "ln2", h)
+        return h + L.apply_mlp(cfg, p, x), None
+
+    h, _ = _scan(cfg, _maybe_remat(cfg, body), h, params["enc"])
+    return L.apply_norm(cfg, params["enc_final"], "efn", h)
+
+
+def forward(cfg: ModelConfig, params, tokens, positions, *, caches=None,
+            enc_frames=None, enc_out=None, fresh_kv=True):
+    """Token ids -> final hidden states.
+
+    Returns (hidden, new_caches, aux_loss).  ``caches`` is the pytree from
+    init_cache (serve path) or None (train path).
+    """
+    h = _embed(cfg, params, tokens, positions)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.enc_dec:
+        if enc_out is None:
+            if enc_frames is not None:
+                enc_out = encode(cfg, params, enc_frames)
+            elif caches is not None:
+                enc_out = caches["enc_out"].astype(h.dtype)
+            else:
+                raise ValueError("enc-dec forward needs frames or enc_out")
+
+        if caches is None:
+            def body(h, p):
+                h, _ = apply_xdec_block(cfg, p, h, positions, enc_out)
+                return h, None
+            h, _ = _scan(cfg, _maybe_remat(cfg, body), h, params["blocks"])
+            new_caches = None
+        else:
+            def body(h, p, c, l):
+                return apply_xdec_block(cfg, p, h, positions, enc_out,
+                                        cache=c)
+            h, layer_caches = _serve_loop(body, h, params["blocks"],
+                                          caches["layers"], cfg.n_layers,
+                                          unroll=not cfg.scan_layers)
+            new_caches = {"layers": layer_caches,
+                          "enc_out": enc_out.astype(caches["enc_out"].dtype)}
+        h = L.apply_norm(cfg, params["final"], "fn", h)
+        return h, new_caches, aux0
+
+    if cfg.family == "ssm":
+        if caches is None:
+            def body(h, p):
+                h, _ = apply_ssm_block(cfg, p, h)
+                return h, None
+            h, _ = _scan(cfg, _maybe_remat(cfg, body), h, params["blocks"])
+            new_caches = None
+        else:
+            def body(h, p, c, l):
+                return apply_ssm_block(cfg, p, h, cache=c)
+            h, new_caches = _serve_loop(body, h, params["blocks"], caches,
+                                        cfg.n_layers,
+                                        unroll=not cfg.scan_layers)
+        h = L.apply_norm(cfg, params["final"], "fn", h)
+        return h, new_caches, aux0
+
+    if cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.shared_every
+        per = cfg.shared_every
+        blocks = jax.tree.map(
+            lambda a: a.reshape((G, per) + a.shape[1:]), params["blocks"])
+        shared = params["shared"]
+
+        def shared_attn(h, attn_c):
+            x = L.apply_norm(cfg, shared, "ln1", h)
+            a, new_attn_c = L.attention(cfg, shared, x, positions,
+                                        cache=attn_c, fresh_kv=fresh_kv)
+            h = h + a
+            x = L.apply_norm(cfg, shared, "ln2", h)
+            return h + L.apply_mlp(cfg, shared, x), new_attn_c
+
+        if caches is None:
+            def group_body(h, mb):
+                h, _ = shared_attn(h, None)
+
+                def inner(h, p):
+                    h, _ = apply_ssm_block(cfg, p, h)
+                    return h, None
+                h, _ = _scan(cfg, inner, h, mb)
+                return h, None
+            h, _ = _scan(cfg, _maybe_remat(cfg, group_body), h, blocks)
+            new_caches = None
+        else:
+            # nested fori_loops with the whole cache as carry (in-place)
+            def outer(g, carry):
+                h, cache = carry
+                mb = _index(blocks, g)
+                h, new_attn_c = shared_attn(h, _index(cache["shared"], g))
+
+                def inner(h, p, cc, j):
+                    return apply_ssm_block(cfg, p, h, cache=cc)
+                h, new_ssm_c = _serve_loop(
+                    inner, h, mb, _index(cache["mamba"], g), per,
+                    unroll=not cfg.scan_layers)
+                upd = lambda a, nv, i=g: lax.dynamic_update_index_in_dim(
+                    a, nv.astype(a.dtype), i, 0)
+                cache = {
+                    "shared": jax.tree.map(upd, cache["shared"],
+                                           new_attn_c),
+                    "mamba": jax.tree.map(upd, cache["mamba"], new_ssm_c),
+                }
+                return (h, cache)
+
+            if cfg.scan_layers:
+                h, new_caches = lax.fori_loop(0, G, outer, (h, caches))
+            else:
+                carry = (h, caches)
+                for g_ in range(G):
+                    carry = outer(g_, carry)
+                h, new_caches = carry
+        h = L.apply_norm(cfg, params["final"], "fn", h)
+        return h, new_caches, aux0
+
+    # plain decoder-only (dense / moe / vlm)
+    windows = window_pattern(cfg)
+    if caches is None:
+        def body(carry, xs):
+            h, aux = carry
+            p, w = xs
+            h, _, a = apply_decoder_block(cfg, p, h, positions, w)
+            return (h, aux + a), None
+        if cfg.remat_group > 1 and cfg.scan_layers \
+                and cfg.n_layers % cfg.remat_group == 0:
+            (h, aux0), _ = _grouped_scan(cfg, body, (h, aux0),
+                                         (params["blocks"], windows),
+                                         cfg.n_layers)
+        else:
+            (h, aux0), _ = _scan(cfg, _maybe_remat(cfg, body), (h, aux0),
+                                 (params["blocks"], windows))
+        new_caches = None
+    else:
+        def body(h, p, c, l):
+            w = windows[l]
+            h, nc, _ = apply_decoder_block(cfg, p, h, positions, w,
+                                           cache=c, fresh_kv=fresh_kv)
+            return h, nc
+        h, new_caches = _serve_loop(body, h, params["blocks"], caches,
+                                    cfg.n_layers,
+                                    unroll=not cfg.scan_layers)
+    h = L.apply_norm(cfg, params["final"], "fn", h)
+    return h, new_caches, aux0
+
+
+def lm_head(cfg: ModelConfig, params, h):
+    """Final hidden -> logits over the PADDED vocab (fp32; padded lanes
+    masked to -inf so lse/argmax ignore them), tied embeddings by
+    default."""
+    emb = params["embed"].get("unembed", params["embed"]["tok"])
+    logits = jnp.einsum("bld,vd->blv", h, emb.astype(h.dtype)
+                        ).astype(jnp.float32)
+    logits = constrain(logits, ("batch", "seq", "vocab"), cfg.rules())
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    if cfg.vocab_pad != cfg.vocab:
+        lane = jnp.arange(cfg.vocab_pad)
+        logits = jnp.where(lane < cfg.vocab, logits, -1e30)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Build the serve-path cache pytree (zeros; pos = -1 means empty).
+
+    SWA models ring-buffer only `window` slots — this is what makes
+    long_500k decode feasible for danube/mixtral; SSM state is O(1)."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def attn_cache(width):
+        return {
+            "k": jnp.zeros((batch, cfg.n_kv, width, cfg.hd), dt),
+            "v": jnp.zeros((batch, cfg.n_kv, width, cfg.hd), dt),
+            "pos": jnp.full((width,), -1, jnp.int32),
+        }
+
+    def ssm_cache():
+        shp = S.ssm_cache_shape(cfg, batch)
+        return {"conv": jnp.zeros(shp["conv"], dt),
+                "h": jnp.zeros(shp["h"], jnp.float32)}
+
+    def stack(tree, n):
+        return jax.tree.map(lambda a: jnp.broadcast_to(
+            a, (n,) + a.shape).copy(), tree)
+
+    if cfg.family == "ssm":
+        return stack(ssm_cache(), cfg.n_layers)
+    if cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.shared_every
+        width = (min(max_len, cfg.window + cfg.prefill_chunk)
+                 if cfg.window else max_len)
+        return {"shared": stack(attn_cache(width), G),
+                "mamba": stack(stack(ssm_cache(), cfg.shared_every), G)}
+    if cfg.enc_dec:
+        return {"layers": stack({"self": attn_cache(max_len)}, cfg.n_layers),
+                "enc_out": jnp.zeros((batch, cfg.enc_len, cfg.d_model), dt)}
+    if cfg.local_global:
+        # alternating layers need different widths; use per-layer max
+        widths = [cfg.local_window if l % 2 == 0 else max_len
+                  for l in range(cfg.n_layers)]
+        width = max(min(w, max_len) for w in widths)
+        return stack(attn_cache(width), cfg.n_layers)
+    if cfg.window:
+        # chunked prefill writes a whole segment before any query reads:
+        # ring must hold window + chunk keys so nothing needed is evicted
+        width = min(max_len, cfg.window + cfg.prefill_chunk)
+    else:
+        width = max_len
+    return stack(attn_cache(width), cfg.n_layers)
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    """Logical axes tree matching init_cache output."""
+    attn = {"k": ("layers", "batch", "kv", "kv_seq", "none"),
+            "v": ("layers", "batch", "kv", "kv_seq", "none"),
+            "pos": ("layers", "none")}
+    ssm = {"conv": ("layers", "batch", "none", "heads"),
+           "h": ("layers", "batch", "heads", "none", "none")}
+    if cfg.family == "ssm":
+        return ssm
+    if cfg.family == "hybrid":
+        deep = {"conv": ("layers", "layers", "batch", "none", "heads"),
+                "h": ("layers", "layers", "batch", "heads", "none", "none")}
+        return {"shared": attn, "mamba": deep}
+    if cfg.enc_dec:
+        return {"layers": {"self": attn},
+                "enc_out": ("batch", "seq", "embed")}
+    return attn

@@ -1,0 +1,7 @@
+"""Training substrate: optimizers, data pipeline, checkpointing, fault
+tolerance, and the production loop.
+
+Only ``optim`` is imported eagerly (models.lm depends on it); import
+``repro.train.data`` / ``.loop`` / ``.checkpoint`` / ``.fault`` directly.
+"""
+from . import optim  # noqa: F401

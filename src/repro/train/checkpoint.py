@@ -1,0 +1,130 @@
+"""Sharded, mesh-agnostic checkpoint/restore with elastic resharding.
+
+Format: one directory per step containing
+  * ``manifest.json``  — step, flat key list, shapes/dtypes, mesh shape,
+    PartitionSpecs at save time, data-pipeline cursor.
+  * ``<flatkey>.npy``  — one file per leaf (full logical array, assembled
+    from shards on save).
+
+Atomicity: writes go to ``<dir>.tmp`` then a single ``os.rename`` —
+a crash mid-save never corrupts the previous checkpoint.  Restore
+re-shards every leaf to the CURRENT mesh (device_put with the new
+sharding), so a run can resume on a different topology (elastic scaling):
+the manifest's specs are advisory, not binding.
+
+At real scale one would write per-shard files + a distributed commit
+protocol; the logical format here is deliberately mesh-agnostic so that
+upgrade is an IO change, not a format change.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+SEP = "//"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}{SEP}"))
+    elif hasattr(tree, "_fields"):          # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}{SEP}"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix.rstrip(SEP[0]).rstrip(SEP[0])] = tree
+    return out
+
+
+def _unflatten_into(template, flat, prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(template[k], flat, f"{prefix}{k}{SEP}")
+                for k in template}
+    if hasattr(template, "_fields"):
+        return type(template)(*[
+            _unflatten_into(getattr(template, k), flat, f"{prefix}{k}{SEP}")
+            for k in template._fields])
+    if template is None:
+        return None
+    return flat[prefix.rstrip(SEP[0]).rstrip(SEP[0])]
+
+
+def save(ckpt_dir: str, step: int, state, *, data_cursor: int = 0,
+         mesh=None, keep: int = 3):
+    """Atomically write ``state`` (any dict/NamedTuple pytree)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(state)
+    manifest = {"step": step, "data_cursor": data_cursor,
+                "mesh_shape": dict(mesh.shape) if mesh is not None else None,
+                "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace(SEP, "__") + ".npy"
+        dtype_name = str(arr.dtype)
+        if dtype_name == "bfloat16":  # npy has no bf16: store the bits
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {"file": fname, "shape": list(arr.shape),
+                                   "dtype": dtype_name}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    _gc(ckpt_dir, keep)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template, *, step: int | None = None,
+            shardings=None):
+    """Load into the structure of ``template``; reshard to ``shardings``
+    (a matching pytree of NamedSharding) if given — this is the elastic
+    path: the saved mesh shape is irrelevant."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    flat = {}
+    for key, info in manifest["leaves"].items():
+        arr = np.load(os.path.join(path, info["file"]))
+        if info["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if key in flat_shard and flat_shard[key] is not None:
+            flat[key] = jax.device_put(arr, flat_shard[key])
+        else:
+            flat[key] = jax.numpy.asarray(arr)
+    state = _unflatten_into(template, flat)
+    return state, manifest
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

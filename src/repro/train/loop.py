@@ -1,0 +1,129 @@
+"""The production training loop: data -> step -> metrics, with
+checkpoint/restart, preemption handling, heartbeats and straggler
+monitoring wired in.  Used by launch/train.py and the examples.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm, transformer as T
+from ..models.config import ModelConfig
+from . import checkpoint as ckpt
+from .data import make_source
+from .fault import Heartbeat, PreemptionGuard, StragglerMonitor
+from .optim import AdamW, cosine_schedule
+
+
+@dataclass
+class TrainerConfig:
+    seq_len: int = 512
+    global_batch: int = 8
+    n_micro: int = 1
+    steps: int = 100
+    peak_lr: float = 3e-4
+    warmup: int = 10
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    heartbeat_path: str = ""
+
+
+@dataclass
+class TrainerResult:
+    losses: list = field(default_factory=list)
+    final_step: int = 0
+    preempted: bool = False
+    straggler_flags: int = 0
+
+
+def train(cfg: ModelConfig, tc: TrainerConfig, *, mesh=None,
+          state=None, log=print) -> TrainerResult:
+    """Run (or resume) a training job. Pass a mesh for distributed runs;
+    shardings are derived from the config's logical rules."""
+    opt = AdamW(weight_decay=0.1, clip_norm=1.0)
+    sched = cosine_schedule(tc.peak_lr, tc.warmup, tc.steps)
+    step_fn = lm.make_train_step(cfg, opt, sched, n_micro=tc.n_micro)
+    source = make_source(cfg, tc.seq_len, tc.global_batch, tc.seed)
+
+    start_step = 0
+    if state is None:
+        if tc.ckpt_dir and ckpt.latest_step(tc.ckpt_dir) is not None:
+            template = _abstract_state(cfg, opt, tc)
+            shardings = (_state_shardings(cfg, opt, mesh, tc)
+                         if mesh is not None else None)
+            state, manifest = ckpt.restore(tc.ckpt_dir, template,
+                                           shardings=shardings)
+            start_step = manifest["step"]
+            log(f"[train] resumed from step {start_step}")
+        else:
+            params = T.init_params(cfg, jax.random.PRNGKey(tc.seed),
+                                   max_len=tc.seq_len)
+            state = lm.TrainState(params, opt.init(params),
+                                  jnp.zeros((), jnp.int32))
+
+    if mesh is not None:
+        with jax.set_mesh(mesh):
+            return _run(cfg, tc, step_fn, source, state, start_step, log)
+    return _run(cfg, tc, step_fn, source, state, start_step, log)
+
+
+def _run(cfg, tc, step_fn, source, state, start_step, log):
+    jit_step = jax.jit(step_fn, donate_argnums=(0,))
+    guard = PreemptionGuard().install()
+    hb = Heartbeat(tc.heartbeat_path) if tc.heartbeat_path else None
+    mon = StragglerMonitor()
+    res = TrainerResult()
+
+    step = start_step
+    try:
+        while step < tc.steps:
+            t0 = time.time()
+            batch = source(step)
+            state, metrics = jit_step(state, batch)
+            loss = float(metrics["loss"])
+            res.losses.append(loss)
+            dt = time.time() - t0
+            if mon.record(dt):
+                res.straggler_flags += 1
+                log(f"[straggler] step {step} took {dt:.2f}s "
+                    f"(ewma {mon.ewma:.2f}s)")
+            if hb:
+                hb.beat(step, {"loss": loss})
+            step += 1
+            if tc.log_every and step % tc.log_every == 0:
+                log(f"[train] step {step} loss {loss:.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} {dt:.2f}s")
+            stop_now = guard.should_stop
+            if tc.ckpt_dir and (step % tc.ckpt_every == 0 or
+                                step == tc.steps or stop_now):
+                ckpt.save(tc.ckpt_dir, step, state, data_cursor=step)
+            if stop_now:
+                log(f"[train] preempted at step {step}; checkpointed")
+                res.preempted = True
+                break
+    finally:
+        guard.uninstall()
+    res.final_step = step
+    return res
+
+
+def _abstract_state(cfg, opt, tc):
+    params = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0),
+                              max_len=tc.seq_len))
+    opt_s = jax.eval_shape(opt.init, params)
+    return lm.TrainState(params, opt_s,
+                         jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def _state_shardings(cfg, opt, mesh, tc):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ps = lm.param_shardings(cfg, mesh, max_len=tc.seq_len)
+    os_ = lm.opt_shardings(cfg, mesh, opt, max_len=tc.seq_len)
+    return lm.TrainState(ps, os_, NamedSharding(mesh, P()))

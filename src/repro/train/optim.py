@@ -1,0 +1,145 @@
+"""In-repo optimizers (no optax): AdamW + SGD-momentum, LR schedules,
+global-norm clipping, and microbatch gradient accumulation.
+
+The optimizer state is a plain pytree (same structure as params), so the
+checkpoint layer and the sharding rules apply to it unchanged — m/v get
+the same PartitionSpecs as their parameters (ZeRO-style: optimizer state
+is sharded exactly as far as FSDP shards the weights).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+class AdamW(NamedTuple):
+    lr: float | None = None          # None -> caller passes lr per step
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+        return AdamWState(jnp.zeros((), jnp.int32), z,
+                          jax.tree.map(jnp.copy, z))
+
+    def update(self, grads, state: AdamWState, params, lr=None):
+        lr = lr if lr is not None else self.lr
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) *
+                         g.astype(jnp.float32), state.m, grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state.v, grads)
+        mhat_scale = 1.0 / (1 - b1 ** t)
+        vhat_scale = 1.0 / (1 - b2 ** t)
+
+        def upd(p, m_, v_):
+            u = (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step, m, v), gnorm
+
+
+class SGDM(NamedTuple):
+    lr: float | None = None
+    momentum: float = 0.9
+    clip_norm: float = 1.0
+
+    def init(self, params):
+        return AdamWState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            {})
+
+    def update(self, grads, state, params, lr=None):
+        lr = lr if lr is not None else self.lr
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        m = jax.tree.map(lambda m_, g: self.momentum * m_ +
+                         g.astype(jnp.float32), state.m, grads)
+        new_params = jax.tree.map(
+            lambda p, m_: (p.astype(jnp.float32) - lr * m_).astype(p.dtype),
+            params, m)
+        return new_params, AdamWState(state.step + 1, m, {}), gnorm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale
+                                   ).astype(l.dtype), tree), g
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def linear_schedule(peak_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        dec = peak_lr * jnp.clip((total - step) / max(total - warmup, 1),
+                                 0.0, 1.0)
+        return jnp.where(step < warmup, warm, dec)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# microbatch accumulation
+# ---------------------------------------------------------------------------
+
+def accumulate_gradients(loss_fn, params, batch, n_micro: int):
+    """Split the leading batch dim into n_micro chunks and average grads
+    with a lax.scan (memory-bounded; the standard large-batch trick)."""
+    if n_micro <= 1:
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    split = jax.tree.map(
+        lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+        batch)
+
+    def body(acc, micro):
+        (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, micro)
+        acc_l, acc_g = acc
+        return (acc_l + l / n_micro,
+                jax.tree.map(lambda a, b: a + b / n_micro, acc_g, g)), aux
+
+    zero_g = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    (loss, grads), auxs = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), zero_g), split)
+    aux = jax.tree.map(lambda a: a[-1], auxs)
+    return (loss, aux), grads

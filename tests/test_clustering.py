@@ -1,0 +1,90 @@
+"""Clustering pipeline (paper Section 5 / S.3.4-S.3.5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering as cl
+
+
+def test_grid_neighbors():
+    nbrs = cl.grid_neighbors(2, 3)
+    assert len(nbrs) == 6
+    assert set(nbrs[0]) == {1, 3}
+    assert set(nbrs[4]) == {1, 3, 5}
+
+
+def test_watershed_two_peaks():
+    """Two separated peaks on a line -> two clusters at eps=0."""
+    f = np.array([5, 4, 1, 4, 5], dtype=float)
+    nbrs = [[1], [0, 2], [1, 3], [2, 4], [3]]
+    labels = cl.persistence_watershed(f, nbrs, eps=0.0)
+    assert len(np.unique(labels)) == 2
+    assert labels[0] == labels[1] and labels[3] == labels[4]
+    # large eps merges everything
+    labels2 = cl.persistence_watershed(f, nbrs, eps=10.0)
+    assert len(np.unique(labels2)) == 1
+
+
+def test_watershed_eps_monotone():
+    rng = np.random.default_rng(0)
+    f = rng.random(64)
+    nbrs = cl.grid_neighbors(8, 8)
+    prev = None
+    for eps in (0.0, 0.2, 0.5, 1.0):
+        k = len(np.unique(cl.persistence_watershed(f, nbrs, eps=eps)))
+        if prev is not None:
+            assert k <= prev
+        prev = k
+
+
+def test_label_propagation_two_cliques():
+    a = np.zeros((8, 8), bool)
+    for grp in (range(4), range(4, 8)):
+        for i in grp:
+            for j in grp:
+                if i != j:
+                    a[i, j] = True
+    labels = cl.label_propagation(a, seed=1)
+    assert len(np.unique(labels)) == 2
+    assert len(np.unique(labels[:4])) == 1
+    assert len(np.unique(labels[4:])) == 1
+
+
+def test_modified_jaccard_identity():
+    c = np.array([0, 0, 1, 1, 2, 2])
+    assert cl.modified_jaccard(c, c) == pytest.approx(1.0)
+
+
+def test_modified_jaccard_invariance_to_relabeling():
+    c1 = np.array([0, 0, 1, 1, 2, 2])
+    c2 = np.array([5, 5, 9, 9, 7, 7])
+    assert cl.modified_jaccard(c1, c2) == pytest.approx(1.0)
+
+
+@given(st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_modified_jaccard_bounds(seed):
+    rng = np.random.default_rng(seed)
+    c1 = rng.integers(0, 4, 30)
+    c2 = rng.integers(0, 6, 30)
+    s = cl.modified_jaccard(c1, c2)
+    assert 0.0 <= s <= 1.0
+    # symmetry
+    assert s == pytest.approx(cl.modified_jaccard(c2, c1), abs=1e-9)
+
+
+def test_threshold_covariance_graph():
+    rng = np.random.default_rng(0)
+    s = rng.standard_normal((10, 10))
+    s = s + s.T
+    g = cl.threshold_covariance_graph(s, 0.1)
+    # keeps about 10% of the upper triangle
+    frac = g[np.triu_indices(10, 1)].mean()
+    assert 0.0 < frac < 0.3
+
+
+def test_degrees_from_support():
+    sup = np.zeros((4, 4), bool)
+    sup[0, 1] = True  # only upper entry; must be symmetrized
+    deg = cl.degrees_from_support(sup)
+    assert list(deg) == [1, 1, 0, 0]

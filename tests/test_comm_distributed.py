@@ -1,0 +1,125 @@
+"""Multi-device tests (subprocess with virtual devices): 1.5D matmuls,
+replication-aware transposes, distributed HP-CONCORD vs reference, and
+the compressed collectives."""
+import pytest
+
+from conftest import run_with_devices
+
+
+@pytest.mark.slow
+def test_1p5d_matmuls_all_replications():
+    run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.comm.grid import Grid1p5D
+from repro.comm import matmul1p5d as mm
+P = 16
+rng = np.random.default_rng(0)
+for (cx, co) in [(1,1),(2,2),(4,2),(2,4),(4,4),(8,2),(16,1),(1,16)]:
+    g = Grid1p5D(P, cx, co)
+    mesh = g.make_mesh()
+    p = g.pad_p(48); n = 8
+    x = rng.standard_normal((n, p)).astype(np.float32)
+    om = rng.standard_normal((p, p)).astype(np.float32)
+    with jax.set_mesh(mesh):
+        s = mm.xtx(jnp.asarray(x), g, mesh, scale=1.0/n)
+        np.testing.assert_allclose(np.asarray(s), x.T@x/n, rtol=1e-4, atol=1e-4)
+        w = mm.omega_s(jnp.asarray(om), s, g, mesh)
+        np.testing.assert_allclose(np.asarray(w), om@(x.T@x/n), rtol=1e-3, atol=1e-3)
+        y = mm.omega_xt(jnp.asarray(om), jnp.asarray(x), g, mesh)
+        np.testing.assert_allclose(np.asarray(y), om@x.T, rtol=1e-3, atol=1e-3)
+        z = mm.y_x(y, jnp.asarray(x), g, mesh, scale=1.0/n)
+        np.testing.assert_allclose(np.asarray(z), om@x.T@x/n, rtol=1e-3, atol=1e-3)
+        wt = mm.transpose_xlike(w, g, mesh)
+        np.testing.assert_allclose(np.asarray(wt), np.asarray(w).T, rtol=1e-5, atol=1e-5)
+        zt = mm.transpose_omegalike(z, g, mesh)
+        np.testing.assert_allclose(np.asarray(zt), np.asarray(z).T, rtol=1e-5, atol=1e-5)
+print("OK")
+""", n_devices=16)
+
+
+@pytest.mark.slow
+def test_distributed_cov_obs_match_reference():
+    run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import graphs
+from repro.core.prox import fit_reference
+from repro.core.distributed import fit_cov, fit_obs
+from repro.comm.grid import Grid1p5D
+prob = graphs.make_problem("chain", p=50, n=120, seed=0)
+ref = fit_reference(jnp.asarray(prob.s), 0.15, 0.05, tol=1e-6, max_iters=200)
+for cx, co in [(1,1),(2,2)]:
+    g = Grid1p5D(8, cx, co)
+    r = fit_cov(jnp.asarray(prob.s), 0.15, 0.05, grid=g, tol=1e-6, max_iters=200)
+    assert abs(float(r.g_final) - float(ref.g_final)) < 1e-2
+    assert np.abs(np.asarray(r.omega)-np.asarray(ref.omega)).max() < 5e-3
+refo = fit_reference(jnp.asarray(prob.x), 0.15, 0.05, variant="obs", tol=1e-6, max_iters=200)
+for cx, co in [(1,1),(4,2),(1,8)]:
+    g = Grid1p5D(8, cx, co)
+    r = fit_obs(jnp.asarray(prob.x), 0.15, 0.05, grid=g, tol=1e-6, max_iters=200)
+    assert np.abs(np.asarray(r.omega)-np.asarray(refo.omega)).max() < 5e-3
+print("OK")
+""", n_devices=8)
+
+
+@pytest.mark.slow
+def test_estimator_front_door_auto_tunes():
+    run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import graphs, distributed
+prob = graphs.make_problem("chain", p=40, n=300, seed=1)
+res = distributed.fit(x=jnp.asarray(prob.x), lam1=0.15, lam2=0.05,
+                      tol=1e-5, max_iters=200)
+assert res.variant in ("cov", "obs")
+ppv, fdr = graphs.ppv_fdr(np.asarray(res.omega), prob.omega0)
+assert ppv > 0.5
+print("OK", res.variant, ppv)
+""", n_devices=8)
+
+
+@pytest.mark.slow
+def test_compressed_collectives():
+    run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.comm.collectives import (compressed_psum, ring_allreduce_int8,
+                                    init_error_feedback)
+mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+x = rng.standard_normal((8, 64)).astype(np.float32)
+
+def f(xs):
+    out, _ = compressed_psum({"g": xs}, "d", method="bf16")
+    return out["g"]
+with jax.set_mesh(mesh):
+    y = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P("d"), check_vma=False)(jnp.asarray(x))
+expected = x.sum(axis=0, keepdims=True).repeat(8, 0)
+assert np.abs(np.asarray(y) - expected).max() / np.abs(expected).max() < 2e-2
+
+def g(xs):
+    return ring_allreduce_int8(xs[0], "d")[None]
+with jax.set_mesh(mesh):
+    y2 = jax.shard_map(g, mesh=mesh, in_specs=P("d"), out_specs=P("d"), check_vma=False)(jnp.asarray(x))
+# each of the 2(n-1) ring hops requantizes: error ~ n/127
+rel = np.abs(np.asarray(y2) - expected).max() / np.abs(expected).max()
+assert rel < 0.15, rel
+print("OK")
+""", n_devices=8)
+
+
+def test_error_feedback_unbiased_over_time():
+    """int8 + error feedback: accumulated quantized sum converges to the
+    true sum (the residual carries what quantization dropped)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.comm.collectives import compress_tree, decompress_tree, \
+        init_error_feedback
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal(256).astype(np.float32))}
+    state = init_error_feedback(g)
+    acc_q = np.zeros(256, np.float32)
+    for _ in range(50):
+        payload, state = compress_tree(g, state, method="int8")
+        acc_q += np.asarray(decompress_tree(payload, method="int8")["w"])
+    acc_true = np.asarray(g["w"]) * 50
+    rel = np.abs(acc_q - acc_true).max() / np.abs(acc_true).max()
+    assert rel < 0.02, rel

@@ -1,0 +1,88 @@
+"""Paper Lemmas 3.1-3.5 cost model + tuner (core/costmodel.py)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costmodel import (EDISON, CostBreakdown, Machine,
+                                  ProblemShape, cov_costs, cov_is_cheaper,
+                                  enumerate_configs, obs_costs, tune)
+
+
+def test_lemma31_crossover():
+    """Cov cheaper iff d/p < (n/(p-n)) / t (Lemma 3.1)."""
+    # d small, n moderate -> Cov wins
+    assert cov_is_cheaper(ProblemShape(p=40000, n=10000, d=2, t=10))
+    # d large, n tiny -> Obs wins
+    assert not cov_is_cheaper(ProblemShape(p=40000, n=100, d=60, t=10))
+    # n >= p -> always Cov
+    assert cov_is_cheaper(ProblemShape(p=1000, n=2000, d=900, t=10))
+
+
+def test_flop_formulas_match_lemma():
+    s = ProblemShape(p=1000, n=100, d=10, s=20, t=5.0)
+    m = Machine()
+    cov = cov_costs(s, 16, 1, 1, m)
+    obs = obs_costs(s, 16, 1, 1, m)
+    assert cov.flops == 2 * 100 * 1000**2 + 2 * 10 * 1000**2 * (20 * 5 + 1)
+    assert obs.flops == 2 * 100 * 1000**2 * 20 + \
+        2 * 10 * 100 * 1000 * (20 * 5 + 1)
+
+
+@given(st.integers(1, 6), st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_replication_reduces_bandwidth(cx_pow, co_pow):
+    """Lemma 3.3: words ~ nnz(R)/c_F — more replication, fewer words
+    in the rotation terms."""
+    P = 64
+    cx, co = 2 ** (cx_pow % 4), 2 ** (co_pow % 4)
+    if cx * co > P:
+        return
+    s = ProblemShape(p=4096, n=256, d=16, s=10, t=5.0)
+    m = Machine()
+    base = obs_costs(s, P, 1, 1, m)
+    rep = obs_costs(s, P, cx, co, m)
+    # the rotation bandwidth term (first) shrinks with c_omega
+    rot_base = s.s * (s.t + 1) * s.n * s.p / 1
+    rot_rep = s.s * (s.t + 1) * s.n * s.p / co
+    assert rot_rep <= rot_base
+
+
+def test_latency_saving_factor():
+    """Lemma 3.3: L = P/(c_R c_F) messages per multiply."""
+    s = ProblemShape(p=4096, n=256, d=16, s=10, t=5.0)
+    m = Machine()
+    l11 = obs_costs(s, 64, 1, 1, m).messages
+    l44 = obs_costs(s, 64, 4, 4, m).messages
+    assert l44 < l11 / 4  # at least the 16x rotation saving on main term
+
+
+def test_tuner_returns_feasible():
+    s = ProblemShape(p=10000, n=500, d=20)
+    best = tune(s, 64)
+    assert best.c_x * best.c_omega <= 64
+    assert best.variant in ("cov", "obs")
+
+
+def test_tuner_respects_memory_cap():
+    m = Machine(hbm_bytes=1e6)  # absurdly small HBM
+    s = ProblemShape(p=100000, n=500, d=20)
+    with pytest.raises(ValueError):
+        tune(s, 4, m)
+
+
+def test_replication_beats_no_replication_modeled():
+    """Fig-3 qualitative claim: some (c_X, c_Omega) > (1,1)."""
+    s = ProblemShape(p=40000, n=100, d=4, s=30, t=10.0)
+    cfgs = enumerate_configs(s, 512, Machine(), variants=("obs",))
+    best = min(cfgs, key=lambda cb: cb.total)
+    base = [c for c in cfgs if c.c_x == 1 and c.c_omega == 1][0]
+    assert best.total < base.total
+    assert best.c_x * best.c_omega > 1
+
+
+def test_edison_machine_is_slower():
+    s = ProblemShape(p=10000, n=500, d=20)
+    t_tpu = tune(s, 64).total
+    t_edison = tune(s, 64, EDISON).total
+    assert t_edison > t_tpu

@@ -1,0 +1,96 @@
+"""CONCORD/PseudoNet objective + gradient correctness (core/objective.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import objective as O
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_problem(p=12, n=30, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, p)).astype(np.float32)
+    s = (x.T @ x / n).astype(np.float32)
+    omega = np.eye(p, dtype=np.float32) + \
+        0.05 * rng.standard_normal((p, p)).astype(np.float32)
+    omega = (omega + omega.T) / 2
+    np.fill_diagonal(omega, np.abs(np.diag(omega)) + 0.5)
+    return jnp.asarray(x), jnp.asarray(s), jnp.asarray(omega)
+
+
+def test_gradient_matches_autodiff():
+    """grad g (closed form) == jax.grad of the smooth objective."""
+    x, s, omega = _rand_problem()
+    lam2 = 0.07
+
+    def g(om):
+        w = om @ s
+        return O.smooth_objective_cov(om, w, lam2)
+
+    auto = jax.grad(g)(omega)
+    # the closed form assumes a symmetric iterate; symmetrize autodiff
+    auto = (auto + auto.T) / 2
+    w = omega @ s
+    manual = O.gradient_from_w(omega, w, lam2)
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(manual),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_cov_obs_objectives_agree():
+    x, s, omega = _rand_problem()
+    n = x.shape[0]
+    w = omega @ s
+    y = omega @ x.T
+    g_cov = O.smooth_objective_cov(omega, w, 0.1)
+    g_obs = O.smooth_objective_obs(omega, y, n, 0.1)
+    np.testing.assert_allclose(float(g_cov), float(g_obs), rtol=1e-4)
+
+
+def test_full_objectives_agree():
+    x, s, omega = _rand_problem()
+    a = O.full_objective_cov(omega, s, 0.3, 0.1)
+    b = O.full_objective_obs(omega, x, 0.3, 0.1)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-4)
+
+
+@given(st.floats(0.01, 2.0), st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_soft_threshold_properties(alpha, seed):
+    """S_alpha: shrinks toward 0, exact 0 inside [-alpha, alpha],
+    non-expansive."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.standard_normal(50).astype(np.float32) * 3)
+    out = O.soft_threshold(z, alpha)
+    a = np.asarray(out)
+    zz = np.asarray(z)
+    assert np.all(np.abs(a) <= np.abs(zz) + 1e-6)
+    assert np.all(a[np.abs(zz) <= alpha] == 0)
+    assert np.all(np.sign(a[a != 0]) == np.sign(zz[a != 0]))
+    # non-expansiveness vs a second point
+    z2 = z + 0.5
+    out2 = O.soft_threshold(z2, alpha)
+    assert np.all(np.abs(np.asarray(out2) - a) <= 0.5 + 1e-6)
+
+
+def test_prox_keeps_diagonal():
+    _, _, omega = _rand_problem()
+    out = O.prox_l1_offdiag(omega, 10.0)  # huge alpha kills all offdiag
+    a = np.asarray(out)
+    np.testing.assert_allclose(np.diag(a), np.diag(np.asarray(omega)))
+    assert np.all(a[~np.eye(a.shape[0], dtype=bool)] == 0)
+
+
+def test_sufficient_decrease_accepts_tiny_step():
+    """For small enough tau the line-search condition must hold."""
+    x, s, omega = _rand_problem()
+    lam2 = 0.05
+    w = omega @ s
+    g_old = O.smooth_objective_cov(omega, w, lam2)
+    grad = O.gradient_from_w(omega, w, lam2)
+    tau = 1e-4
+    cand = O.prox_l1_offdiag(omega - tau * grad, tau * 0.2)
+    g_new = O.smooth_objective_cov(cand, cand @ s, lam2)
+    assert bool(O.sufficient_decrease(g_new, g_old, cand, omega, grad, tau))

@@ -1,0 +1,92 @@
+"""Logical-axis -> PartitionSpec resolution + grid index math."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.comm.grid import Grid1p5D
+from repro.models.config import DEFAULT_RULES, logical_to_spec
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+
+
+def test_basic_mapping():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = logical_to_spec(("embed", "heads"), (2560, 4096), mesh,
+                           DEFAULT_RULES)
+    assert spec == P("data", "model")
+
+
+def test_indivisible_falls_back_to_replicated():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = logical_to_spec(("embed", "kv"), (2560, 2 * 128), mesh,
+                           DEFAULT_RULES)
+    # kv dim 256 % 16 == 0 -> sharded; but 2 heads * 80 = 160 % 16 == 0;
+    # now an actually indivisible one:
+    spec2 = logical_to_spec(("embed", "kv"), (2560, 250), mesh,
+                            DEFAULT_RULES)
+    assert spec2[1] is None
+
+
+def test_axis_never_used_twice():
+    mesh = FakeMesh({"data": 4, "model": 4})
+    spec = logical_to_spec(("embed", "embed"), (16, 16), mesh,
+                           DEFAULT_RULES)
+    assert spec[0] == "data" and spec[1] is None
+
+
+def test_kv_seq_fallback_order():
+    """decode cache: batch takes pod+data, kv takes model -> kv_seq
+    replicated; when kv can't shard, kv_seq picks up model (SP)."""
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    # kv = 32 shards over model; kv_seq has nothing left
+    spec = logical_to_spec(("batch", "kv", "kv_seq"), (128, 32, 32768),
+                           mesh, DEFAULT_RULES)
+    assert spec == P(("pod", "data"), "model", None)
+    # kv = 2 cannot shard -> kv_seq gets model
+    spec2 = logical_to_spec(("batch", "kv", "kv_seq"), (128, 2, 32768),
+                            mesh, DEFAULT_RULES)
+    assert spec2 == P(("pod", "data"), None, "model")
+    # batch = 1 (long_500k): kv_seq gets the batch axes
+    spec3 = logical_to_spec(("batch", "kv", "kv_seq"), (1, 2, 524288),
+                            mesh, DEFAULT_RULES)
+    assert spec3[0] is None
+    assert spec3[2] == ("pod", "data", "model")  # full SP over all axes
+
+
+@given(st.sampled_from([1, 2, 4, 8, 16]), st.sampled_from([1, 2, 4, 8]),
+       st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=40, deadline=None)
+def test_grid_permutations_are_permutations(P_, cx, co):
+    if cx * co > P_ or P_ % (cx * co):
+        return
+    g = Grid1p5D(P_, cx, co)
+    # the (canonical, ring, n_r) combinations the 1.5D algorithms use:
+    # n_r always matches the canonical layout's block count
+    for canonical, ring in [("xlike", "x"), ("xlike", "omega"),
+                            ("omegalike", "x"), ("omegalike", "omega")]:
+        n_r = g.n_x if canonical == "xlike" else g.n_om
+        perm = g.stagger_perm(canonical, ring, n_r)
+        assert sorted(s for s, _ in perm) == list(range(P_))
+        assert sorted(d for _, d in perm) == list(range(P_))
+    for ring in ("x", "omega"):
+        shift = g.shift_perm(ring, max(1, cx))
+        assert sorted(d for _, d in shift) == list(range(P_))
+
+
+def test_grid_flat_roundtrip():
+    g = Grid1p5D(16, 2, 4)
+    for f in range(16):
+        assert g.coords_to_flat(*g.flat_to_coords(f)) == f
+        assert g.omajor_to_flat(g.flat_to_omajor(f)) == f
+
+
+def test_pad_p():
+    g = Grid1p5D(8, 2, 2)
+    assert g.pad_p(50) == 56
+    assert g.pad_p(56) == 56

@@ -1,0 +1,197 @@
+"""Training substrate: optimizer, schedules, data, checkpoint, fault."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train import checkpoint as ckpt
+from repro.train.data import SyntheticLM, make_source
+from repro.train.fault import Heartbeat, StragglerMonitor, retry
+from repro.train.optim import (AdamW, SGDM, accumulate_gradients,
+                               clip_by_global_norm, cosine_schedule,
+                               global_norm, linear_schedule)
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = AdamW(lr=0.1, weight_decay=0.0, clip_norm=100.0)
+    state = opt.init(params)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks():
+    params = {"w": jnp.ones(4) * 10.0}
+    opt = AdamW(lr=0.01, weight_decay=0.5, clip_norm=100.0)
+    state = opt.init(params)
+    for _ in range(50):
+        params, state, _ = opt.update({"w": jnp.zeros(4)}, state, params)
+    assert float(params["w"].max()) < 10.0
+
+
+def test_sgdm_minimizes_quadratic():
+    params = {"w": jnp.asarray([4.0])}
+    opt = SGDM(lr=0.05)
+    state = opt.init(params)
+    for _ in range(200):
+        params, state, _ = opt.update({"w": 2 * params["w"]}, state, params)
+    assert abs(float(params["w"][0])) < 1e-2
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones(100) * 10}
+    clipped, g = clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    assert float(g) == pytest.approx(100.0, rel=1e-5)
+
+
+def test_schedules():
+    lr = cosine_schedule(1.0, 10, 100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr(100)) == pytest.approx(0.1, rel=1e-2)  # min_frac
+    lin = linear_schedule(1.0, 10, 100)
+    assert float(lin(55)) == pytest.approx(0.5, rel=1e-2)
+
+
+@given(st.integers(0, 100), st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_data_pipeline_deterministic(step, other):
+    """batch_at(step) is a pure function — the restart/straggler story."""
+    src = SyntheticLM(vocab=100, seq_len=16, global_batch=2, seed=1)
+    a = src.batch_at(step)
+    b = src.batch_at(step)
+    np.testing.assert_array_equal(np.asarray(a.tokens),
+                                  np.asarray(b.tokens))
+    if step != other:
+        c = src.batch_at(other)
+        assert not np.array_equal(np.asarray(a.tokens),
+                                  np.asarray(c.tokens))
+
+
+def test_data_targets_are_shifted():
+    src = SyntheticLM(vocab=100, seq_len=16, global_batch=2, seed=1)
+    b = src.batch_at(0)
+    np.testing.assert_array_equal(np.asarray(b.targets[:, :-1]),
+                                  np.asarray(b.tokens[:, 1:]))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+             "nested": {"b": jnp.ones(4, jnp.bfloat16)}}
+    ckpt.save(str(tmp_path), 7, state, data_cursor=7)
+    template = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+    restored, manifest = ckpt.restore(str(tmp_path), template)
+    assert manifest["step"] == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), state, restored)
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    state = {"a": jnp.zeros(2)}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, state, keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    steps = sorted(os.listdir(tmp_path))
+    assert len(steps) == 2
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(2)})
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_elastic_restore_reshards(tmp_path):
+    """Save from one layout, restore onto a different (virtual) mesh —
+    the manifest's mesh is advisory only."""
+    state = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    ckpt.save(str(tmp_path), 3, state)
+    template = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    restored, _ = ckpt.restore(str(tmp_path), template, shardings=None)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
+
+
+def test_heartbeat(tmp_path):
+    hb = Heartbeat(str(tmp_path / "hb.json"))
+    hb.beat(10, {"loss": 1.5})
+    rec = hb.read()
+    assert rec["step"] == 10 and rec["loss"] == 1.5
+    assert not hb.is_stale(60.0)
+    assert hb.is_stale(-1.0)
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0)
+    flags = [mon.record(0.1) for _ in range(10)]
+    assert not any(flags)
+    assert mon.record(1.0)  # 10x slower than ewma
+
+
+def test_retry_recovers():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return 42
+
+    assert retry(flaky, attempts=5, backoff_s=0.0) == 42
+
+
+def test_preemption_checkpoint_resume(tmp_path):
+    """Simulated preemption: guard flag set mid-run -> checkpoint written
+    -> a second trainer resumes from it and finishes."""
+    import repro.configs as C
+    from repro.train.loop import TrainerConfig, train
+    cfg = C.get_smoke("mamba2_130m")
+    tc = TrainerConfig(seq_len=32, global_batch=2, steps=10,
+                       ckpt_dir=str(tmp_path), ckpt_every=100,
+                       log_every=0, peak_lr=1e-3)
+    # run 1: stop after 3 steps via a fake guard
+    import repro.train.loop as loop_mod
+
+    class FakeGuard:
+        def __init__(self):
+            self.n = 0
+
+        def install(self):
+            return self
+
+        def uninstall(self):
+            pass
+
+        @property
+        def should_stop(self):
+            self.n += 1
+            return self.n >= 3
+
+    orig = loop_mod.PreemptionGuard
+    loop_mod.PreemptionGuard = FakeGuard
+    try:
+        res1 = train(cfg, tc)
+    finally:
+        loop_mod.PreemptionGuard = orig
+    assert res1.preempted and res1.final_step < 10
+    # run 2: resumes from the checkpoint and completes
+    res2 = train(cfg, tc)
+    assert res2.final_step == 10 and not res2.preempted
+
+
+def test_accumulate_gradients_shapes():
+    def loss(params, batch):
+        return jnp.mean((params["w"] * batch["x"]) ** 2), {}
+    params = {"w": jnp.ones(3)}
+    batch = {"x": jnp.arange(12.0).reshape(4, 3)}
+    (l1, _), g1 = accumulate_gradients(loss, params, batch, 1)
+    (l2, _), g2 = accumulate_gradients(loss, params, batch, 2)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g2["w"]),
+                               rtol=1e-5)
