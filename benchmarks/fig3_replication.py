@@ -19,12 +19,12 @@ from repro.core.costmodel import EDISON, ProblemShape, obs_costs
 from .common import emit
 
 _CHILD = r"""
-import json, time
+import json
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import graphs
-from repro.core.distributed import fit_obs
-from repro.comm.grid import Grid1p5D
+from repro.estimator import ConcordEstimator, SolverConfig
 prob = graphs.make_problem("chain", p=64, n=32, seed=0)
+x = jnp.asarray(prob.x)
 out = []
 P = 16
 c = 1
@@ -35,18 +35,15 @@ for cx in cands:
     for co in cands:
         if cx * co > P or P % (cx * co):
             continue
-        g = Grid1p5D(P, cx, co)
-        # warm + measure
-        r = fit_obs(jnp.asarray(prob.x), 0.2, 0.05, grid=g, tol=1e-5,
-                    max_iters=60)
-        jax.block_until_ready(r.omega)
-        t0 = time.perf_counter()
-        r = fit_obs(jnp.asarray(prob.x), 0.2, 0.05, grid=g, tol=1e-5,
-                    max_iters=60)
-        jax.block_until_ready(r.omega)
+        est = ConcordEstimator(
+            lam1=0.2, lam2=0.05,
+            config=SolverConfig(backend="distributed", variant="obs",
+                                c_x=cx, c_omega=co, tol=1e-5, max_iters=60))
+        est.fit(x)                       # warm-up (compile)
+        rep = est.fit(x).report_         # measure
         out.append({"c_x": cx, "c_omega": co,
-                    "t_s": round(time.perf_counter() - t0, 4),
-                    "iters": int(r.iters)})
+                    "t_s": round(rep.wall_time_s, 4),
+                    "iters": rep.iters})
 print("JSON" + json.dumps(out))
 """
 

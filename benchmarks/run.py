@@ -10,7 +10,8 @@ import time
 import traceback
 
 MODULES = ["fig2_crossover", "fig3_replication", "fig4_scaling",
-           "table1_recovery", "kernel_bench", "lm_roofline"]
+           "table1_recovery", "path_warmstart", "kernel_bench",
+           "lm_roofline"]
 
 
 def main(argv=None):

@@ -7,22 +7,26 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import graphs
-from repro.core.prox import fit_reference
+from repro.estimator import ConcordEstimator, SolverConfig
 
 from .common import emit
+
+_CONFIG = SolverConfig(backend="reference", variant="cov",
+                       tol=1e-5, max_iters=250)
 
 
 def _fit_at_degree(prob, target_deg, lam2=0.02, n_lams=8):
     """Scan lam1 until the estimate's average degree matches the truth
-    (the paper's equal-sparsity protocol)."""
+    (the paper's equal-sparsity protocol) — one warm-started path call."""
+    path = ConcordEstimator(lam2=lam2, config=_CONFIG).fit_path(
+        s=jnp.asarray(prob.s), n_samples=prob.x.shape[0],
+        lam1_grid=np.linspace(0.05, 0.6, n_lams), score_bic=False)
     best = None
-    for lam1 in np.linspace(0.05, 0.6, n_lams):
-        r = fit_reference(jnp.asarray(prob.s), float(lam1), lam2,
-                          tol=1e-5, max_iters=250)
-        deg = graphs.avg_degree(np.asarray(r.omega))
+    for rep in path:
+        deg = graphs.avg_degree(np.asarray(rep.omega))
         gap = abs(deg - target_deg)
         if best is None or gap < best[0]:
-            best = (gap, lam1, r, deg)
+            best = (gap, rep.lam1, rep, deg)
     return best[1], best[2], best[3]
 
 

@@ -1,5 +1,5 @@
 """Quickstart: estimate a sparse inverse covariance matrix with
-HP-CONCORD on synthetic data, auto-tuned by the paper's cost model.
+HP-CONCORD on synthetic data via the ``repro.estimator`` facade.
 
   PYTHONPATH=src python examples/quickstart.py
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -9,8 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distributed, graphs
-from repro.core.prox import fit_reference
+from repro.core import graphs
+from repro.estimator import ConcordEstimator, SolverConfig
 
 
 def main():
@@ -19,24 +19,39 @@ def main():
     print(f"problem: chain graph, p={p}, n={n}, "
           f"{len(jax.devices())} device(s)")
 
-    # single-device reference
-    ref = fit_reference(jnp.asarray(prob.s), lam1=0.15, lam2=0.05,
-                        tol=1e-6, max_iters=300)
-    ppv, fdr = graphs.ppv_fdr(np.asarray(ref.omega), prob.omega0)
-    print(f"reference : iters={int(ref.iters)} "
-          f"objective={float(ref.g_final):.4f} PPV={ppv:.3f} FDR={fdr:.3f}")
+    # single-device reference backend
+    ref = ConcordEstimator(
+        lam1=0.15, lam2=0.05,
+        config=SolverConfig(backend="reference", variant="cov",
+                            tol=1e-6, max_iters=300),
+    ).fit_cov(jnp.asarray(prob.s), n_samples=n)
+    ppv, fdr = graphs.ppv_fdr(np.asarray(ref.omega_), prob.omega0)
+    print(f"reference  : {ref.report_.summary()}")
+    print(f"             PPV={ppv:.3f} FDR={fdr:.3f}")
 
-    # distributed, variant + replication chosen by the cost model
-    res = distributed.fit(x=jnp.asarray(prob.x), lam1=0.15, lam2=0.05,
-                          tol=1e-6, max_iters=300)
-    ppv, fdr = graphs.ppv_fdr(np.asarray(res.omega), prob.omega0)
-    print(f"distributed: variant={res.variant} "
-          f"(c_x={res.grid.c_x}, c_omega={res.grid.c_omega}) "
-          f"iters={int(res.iters)} objective={float(res.g_final):.4f} "
-          f"PPV={ppv:.3f} FDR={fdr:.3f}")
+    # "auto" backend: engine, variant and replication chosen by the paper's
+    # cost model (reference on one device, distributed 1.5D otherwise)
+    auto = ConcordEstimator(
+        lam1=0.15, lam2=0.05,
+        config=SolverConfig(backend="auto", tol=1e-6, max_iters=300),
+    ).fit(jnp.asarray(prob.x))
+    ppv, fdr = graphs.ppv_fdr(np.asarray(auto.omega_), prob.omega0)
+    print(f"auto       : {auto.report_.summary()}")
+    print(f"             PPV={ppv:.3f} FDR={fdr:.3f}")
 
-    diff = np.abs(np.asarray(res.omega) - np.asarray(ref.omega)).max()
-    print(f"max |distributed - reference| = {diff:.2e}")
+    diff = np.abs(np.asarray(auto.omega_) - np.asarray(ref.omega_)).max()
+    print(f"max |auto - reference| = {diff:.2e}")
+
+    # warm-started regularization path + BIC model selection in one call
+    path = ConcordEstimator(
+        lam2=0.05,
+        config=SolverConfig(backend="reference", variant="cov",
+                            tol=1e-6, max_iters=300),
+    ).fit_path(s=jnp.asarray(prob.s), n_samples=n,
+               lam1_grid=[0.3, 0.25, 0.2, 0.15, 0.1])
+    best = path.best_bic()
+    print(f"path       : {len(path)} fits, {path.total_iters} total iters "
+          f"(warm-started); BIC-best lam1={best.lam1:g}")
 
 
 if __name__ == "__main__":

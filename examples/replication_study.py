@@ -1,25 +1,24 @@
 """Figure-3-style replication study driver: sweep (c_X, c_Omega) on
 however many devices this process has and print the runtime heatmap
-next to the cost model's prediction.
+next to the cost model's prediction.  Uses the ``repro.estimator``
+facade with the distributed backend pinned per sweep point.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=16 \
       PYTHONPATH=src python examples/replication_study.py
 """
-import time
-
 import jax
 import jax.numpy as jnp
 
-from repro.comm.grid import Grid1p5D
 from repro.core import graphs
 from repro.core.costmodel import Machine, ProblemShape, obs_costs
-from repro.core.distributed import fit_obs
+from repro.estimator import ConcordEstimator, SolverConfig
 
 
 def main():
     P = len(jax.devices())
     prob = graphs.make_problem("chain", p=64, n=32, seed=0)
     shape = ProblemShape(p=64, n=32, d=3.0, s=30, t=6.0)
+    x = jnp.asarray(prob.x)
     print(f"{P} devices; p=64 n=32 chain graph\n")
     print(f"{'c_x':>4} {'c_om':>4} {'measured_s':>11} {'model_s':>9}")
     cands = []
@@ -32,15 +31,13 @@ def main():
         for co in cands:
             if cx * co > P or P % (cx * co):
                 continue
-            g = Grid1p5D(P, cx, co)
-            r = fit_obs(jnp.asarray(prob.x), 0.2, 0.05, grid=g,
-                        tol=1e-5, max_iters=50)
-            jax.block_until_ready(r.omega)
-            t0 = time.perf_counter()
-            r = fit_obs(jnp.asarray(prob.x), 0.2, 0.05, grid=g,
-                        tol=1e-5, max_iters=50)
-            jax.block_until_ready(r.omega)
-            t = time.perf_counter() - t0
+            est = ConcordEstimator(
+                lam1=0.2, lam2=0.05,
+                config=SolverConfig(backend="distributed", variant="obs",
+                                    c_x=cx, c_omega=co,
+                                    tol=1e-5, max_iters=50))
+            est.fit(x)                      # warm-up (compile)
+            t = est.fit(x).report_.wall_time_s
             model = obs_costs(shape, P, cx, co, Machine()).total
             results.append((t, cx, co))
             print(f"{cx:>4} {co:>4} {t:>11.4f} {model:>9.2e}")

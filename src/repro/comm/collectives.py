@@ -95,7 +95,8 @@ def ring_allreduce_int8(x, axis: str):
     """Explicit bandwidth-optimal ring all-reduce that ships int8 chunks
     (reduce-scatter + all-gather over ppermute), for when the wire format
     must really be 1 byte/word. x: any float array; runs inside shard_map."""
-    n = jax.lax.axis_size(axis)
+    from .compat import axis_size
+    n = axis_size(axis)
     if n == 1:
         return x
     shape = x.shape

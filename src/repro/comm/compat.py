@@ -1,0 +1,76 @@
+"""jax version-compatibility shims.
+
+The repo is written against the current jax API (``jax.shard_map``,
+``jax.set_mesh``, ``jax.make_mesh(..., axis_types=...)``).  Older jax
+releases (<= 0.4.x, the version baked into some CPU test containers) expose
+the same functionality under different names:
+
+  * ``jax.shard_map(check_vma=...)``  -> ``jax.experimental.shard_map``'s
+    ``shard_map(check_rep=...)``
+  * ``with jax.set_mesh(mesh): ...``  -> ``with mesh: ...`` (Mesh is itself
+    a context manager)
+  * ``jax.make_mesh(shape, axes, axis_types=...)`` -> same without
+    ``axis_types``
+
+Everything in-repo should import ``shard_map`` / ``use_mesh`` / ``make_mesh``
+from here instead of touching ``jax.*`` directly so a single module absorbs
+the API skew.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "use_mesh", "make_mesh", "axis_size",
+           "get_abstract_mesh"]
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map_legacy(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)
+
+
+def axis_size(name):
+    """``lax.axis_size`` fallback: psum of a literal 1 resolves to the axis
+    size at trace time on older jax."""
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(name)
+    return lax.psum(1, name)
+
+
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # legacy Mesh objects are context managers themselves
+
+
+def get_abstract_mesh():
+    """The ambient mesh installed by :func:`use_mesh` (``.empty`` when none).
+
+    New jax exposes it as ``jax.sharding.get_abstract_mesh()``; on older
+    releases the ``with mesh:`` context lives in thread resources."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def make_mesh(axis_shapes, axis_names, devices=None):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs = {"axis_types": (jax.sharding.AxisType.Auto,) * len(axis_names)}
+    else:
+        kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

@@ -79,9 +79,8 @@ class Grid1p5D:
 
     def make_mesh(self, devices=None) -> jax.sharding.Mesh:
         if devices is None:
-            return jax.make_mesh(
-                self.mesh_shape(), AXES,
-                axis_types=(jax.sharding.AxisType.Auto,) * 3)
+            from .compat import make_mesh
+            return make_mesh(self.mesh_shape(), AXES)
         devs = np.asarray(devices).reshape(self.mesh_shape())
         return jax.sharding.Mesh(devs, AXES)
 

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from . import compat
 from .grid import AXES, Grid1p5D
 
 # Layout shorthands (see grid.py):
@@ -47,11 +48,11 @@ SPEC_OM = P(("i", "k"), None)
 
 
 def _team_x():
-    return lax.axis_index("i") * lax.axis_size("j") + lax.axis_index("j")
+    return lax.axis_index("i") * compat.axis_size("j") + lax.axis_index("j")
 
 
 def _team_om():
-    return lax.axis_index("i") * lax.axis_size("k") + lax.axis_index("k")
+    return lax.axis_index("i") * compat.axis_size("k") + lax.axis_index("k")
 
 
 def _ring_pos_om(grid: Grid1p5D):
@@ -207,8 +208,9 @@ def transpose_omegalike_local(z_rows, grid: Grid1p5D):
 # ---------------------------------------------------------------------------
 
 def _smap(grid, mesh, fn, in_specs, out_specs):
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+    from .compat import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_vma=False)
 
 
 def xtx(x, grid: Grid1p5D, mesh, *, scale=1.0):

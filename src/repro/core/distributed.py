@@ -32,6 +32,7 @@ so reported objectives match the reference solver.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -42,6 +43,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from ..comm import matmul1p5d as mm
+from ..comm.compat import axis_size, shard_map, use_mesh
 from ..comm.grid import Grid1p5D
 from .costmodel import Machine, ProblemShape, tune
 from .prox import ProxResult, VariantOps, guard_nonpos_diag, prox_gradient
@@ -66,12 +68,7 @@ class FitResult(NamedTuple):
 
 def _block_x():
     """X-like block index t = i*c_omega + j of this device."""
-    return lax.axis_index("i") * lax.axis_size("j") + lax.axis_index("j")
-
-
-def _block_om():
-    """Omega-like block index u = i*c_x + k of this device."""
-    return lax.axis_index("i") * lax.axis_size("k") + lax.axis_index("k")
+    return lax.axis_index("i") * axis_size("j") + lax.axis_index("j")
 
 
 def _eye_panel_x(p_pad: int, blk: int, dtype):
@@ -88,6 +85,11 @@ def _eye_rows_om(p_pad: int, blk: int, dtype):
     rows = jnp.arange(blk)[:, None]
     cols = jnp.arange(p_pad)[None, :]
     return (cols == u * blk + rows).astype(dtype)
+
+
+def _block_om():
+    """Omega-like block index u = i*c_x + k of this device."""
+    return lax.axis_index("i") * axis_size("k") + lax.axis_index("k")
 
 
 def _diag_mask_panel_x(p_pad: int, blk: int, p_real: int, dtype):
@@ -250,6 +252,18 @@ def _scalar_specs():
                       g_final=P(), delta_final=P())
 
 
+def _pad_omega0(omega0, p: int, p_pad: int, dtype):
+    """Pad a warm-start iterate with the frozen identity diagonal so the
+    padded block behaves exactly like a cold start there.  (Cold starts
+    never call this: the identity is built per-shard inside shard_map.)"""
+    omega0 = jnp.asarray(omega0, dtype)
+    if p_pad != p:
+        omega0 = jnp.pad(omega0, ((0, p_pad - p), (0, p_pad - p)))
+        pad_idx = jnp.arange(p, p_pad)
+        omega0 = omega0.at[pad_idx, pad_idx].set(1.0)
+    return omega0
+
+
 def fit_cov(
     s: jax.Array,
     lam1: float,
@@ -262,8 +276,10 @@ def fit_cov(
     max_ls: int = 30,
     warm_start_tau: bool = False,
     use_pallas: bool = False,
+    omega0: jax.Array | None = None,
 ) -> FitResult:
-    """Distributed Cov solve (Algorithm 2). ``s`` is the (p, p) sample cov."""
+    """Distributed Cov solve (Algorithm 2). ``s`` is the (p, p) sample cov.
+    ``omega0`` optionally warm-starts the iterates (e.g. along a lam1 path)."""
     if grid.c_x != grid.c_omega:
         raise ValueError("Cov keeps Omega in the X-like layout: c_x == c_omega")
     mesh = mesh or grid.make_mesh()
@@ -276,17 +292,30 @@ def fit_cov(
     ops = _cov_local_ops(grid, p_pad, p, jnp.asarray(lam2, dtype), dtype,
                          use_pallas)
 
-    def local(s_panel):
-        omega0 = _eye_panel_x(p_pad, blk, dtype)
+    def solve_local(om0_panel, s_panel):
         return prox_gradient(
-            omega0, {"s": s_panel}, ops, lam1=lam1, tol=tol,
+            om0_panel, {"s": s_panel}, ops, lam1=lam1, tol=tol,
             max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau)
 
     specs = _scalar_specs()._replace(omega=SPEC_XCOL)
-    fn = jax.shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL,),
+    if omega0 is None:
+        # cold start: build the identity panel per shard (never materialize
+        # the full p_pad^2 identity on one device)
+        def local(s_panel):
+            return solve_local(_eye_panel_x(p_pad, blk, dtype), s_panel)
+
+        fn = shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL,),
                        out_specs=ProxResult(*specs), check_vma=False)
-    with jax.set_mesh(mesh):
-        res = jax.jit(fn)(s)
+        args = (s,)
+    else:
+        def local(s_panel, om0_panel):
+            return solve_local(om0_panel, s_panel)
+
+        fn = shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL, SPEC_XCOL),
+                       out_specs=ProxResult(*specs), check_vma=False)
+        args = (s, _pad_omega0(omega0, p, p_pad, dtype))
+    with use_mesh(mesh):
+        res = jax.jit(fn)(*args)
     return FitResult(res.omega[:p, :p], res.iters, res.ls_total,
                      res.converged, res.g_final, "cov", grid)
 
@@ -303,8 +332,10 @@ def fit_obs(
     max_ls: int = 30,
     warm_start_tau: bool = False,
     use_pallas: bool = False,
+    omega0: jax.Array | None = None,
 ) -> FitResult:
-    """Distributed Obs solve (Algorithm 3). ``x`` is the (n, p) data matrix."""
+    """Distributed Obs solve (Algorithm 3). ``x`` is the (n, p) data matrix.
+    ``omega0`` optionally warm-starts the iterates (e.g. along a lam1 path)."""
     mesh = mesh or grid.make_mesh()
     n, p = x.shape
     p_pad = grid.pad_p(p)
@@ -315,17 +346,28 @@ def fit_obs(
     ops = _obs_local_ops(grid, p_pad, p, n, jnp.asarray(lam2, dtype), dtype,
                          use_pallas)
 
-    def local(x_loc):
-        omega0 = _eye_rows_om(p_pad, blk, dtype)
+    def solve_local(om0_rows, x_loc):
         return prox_gradient(
-            omega0, {"x": x_loc}, ops, lam1=lam1, tol=tol,
+            om0_rows, {"x": x_loc}, ops, lam1=lam1, tol=tol,
             max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau)
 
     specs = _scalar_specs()._replace(omega=SPEC_OM)
-    fn = jax.shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL,),
+    if omega0 is None:
+        def local(x_loc):
+            return solve_local(_eye_rows_om(p_pad, blk, dtype), x_loc)
+
+        fn = shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL,),
                        out_specs=ProxResult(*specs), check_vma=False)
-    with jax.set_mesh(mesh):
-        res = jax.jit(fn)(x)
+        args = (x,)
+    else:
+        def local(x_loc, om0_rows):
+            return solve_local(om0_rows, x_loc)
+
+        fn = shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL, SPEC_OM),
+                       out_specs=ProxResult(*specs), check_vma=False)
+        args = (x, _pad_omega0(omega0, p, p_pad, dtype))
+    with use_mesh(mesh):
+        res = jax.jit(fn)(*args)
     return FitResult(res.omega[:p, :p], res.iters, res.ls_total,
                      res.converged, res.g_final, "obs", grid)
 
@@ -354,13 +396,17 @@ def fit(
     n_samples: int | None = None,
     **kw,
 ) -> FitResult:
-    """Fit HP-CONCORD, choosing variant and replication by the cost model
-    (paper Lemmas 3.1-3.5) unless pinned by the caller.
+    """Deprecated shim — use :mod:`repro.estimator` (``ConcordEstimator`` or
+    ``repro.estimator.fit``), which adds backend selection, warm starts and
+    rich fit reports on top of the same cost-model dispatch.
 
     Pass ``x`` (n, p) to allow either variant, or only ``s`` (p, p) to force
     Cov. ``c_x``/``c_omega`` pin the replication factors (e.g. for the
     Figure-3 sweep); otherwise the tuner picks them.
     """
+    warnings.warn(
+        "distributed.fit is deprecated; use repro.estimator.ConcordEstimator "
+        "or repro.estimator.fit", DeprecationWarning, stacklevel=2)
     if x is None and s is None:
         raise ValueError("pass x or s")
     P_ = n_devices or len(jax.devices())
@@ -399,8 +445,15 @@ def fit_path(
     grid: Grid1p5D | None = None,
     **kw,
 ) -> list[FitResult]:
-    """Fit a path of estimates over a lam1 grid (the paper's Section-5
+    """Deprecated shim — use ``repro.estimator.ConcordEstimator.fit_path``,
+    which warm-starts consecutive path points and reuses the compiled solve.
+
+    Fit a path of estimates over a lam1 grid (the paper's Section-5
     tuning-parameter sweep). Runs coarse-to-fine so sparser fits come first."""
+    warnings.warn(
+        "distributed.fit_path is deprecated; use "
+        "repro.estimator.ConcordEstimator.fit_path", DeprecationWarning,
+        stacklevel=2)
     P_ = len(jax.devices())
     grid = grid or Grid1p5D(P_, 1, 1)
     out = []

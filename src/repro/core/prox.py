@@ -23,6 +23,7 @@ lowers as one XLA program with the 1.5D collectives inlined.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Callable, NamedTuple
 
@@ -230,6 +231,40 @@ def obs_ops() -> VariantOps:
 
 
 @partial(jax.jit, static_argnames=("variant", "tol", "max_iters", "max_ls", "warm_start_tau"))
+def solve_reference(
+    s_or_x: jax.Array,
+    lam1: float,
+    lam2: float = 0.0,
+    *,
+    omega0: jax.Array | None = None,
+    variant: str = "cov",
+    tol: float = 1e-5,
+    max_iters: int = 500,
+    max_ls: int = 30,
+    warm_start_tau: bool = False,
+) -> ProxResult:
+    """Single-device CONCORD/PseudoNet solve. variant='cov' expects S, 'obs'
+    expects X. ``omega0`` warm-starts the iterates (defaults to the identity);
+    ``lam1``/``lam2`` and ``omega0`` are traced, so a regularization path over
+    same-shape problems reuses one compiled program per (shape, statics) key.
+    """
+    if variant == "cov":
+        data = {"s": s_or_x, "lam2": jnp.asarray(lam2, s_or_x.dtype)}
+        ops = cov_ops()
+    elif variant == "obs":
+        data = {"x": s_or_x, "lam2": jnp.asarray(lam2, s_or_x.dtype)}
+        ops = obs_ops()
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    p = s_or_x.shape[-1]
+    if omega0 is None:
+        omega0 = jnp.eye(p, dtype=s_or_x.dtype)
+    return prox_gradient(
+        omega0, data, ops, lam1=lam1, tol=tol,
+        max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau,
+    )
+
+
 def fit_reference(
     s_or_x: jax.Array,
     lam1: float,
@@ -241,18 +276,13 @@ def fit_reference(
     max_ls: int = 30,
     warm_start_tau: bool = False,
 ) -> ProxResult:
-    """Single-device CONCORD/PseudoNet fit. variant='cov' expects S, 'obs' expects X."""
-    if variant == "cov":
-        data = {"s": s_or_x, "lam2": jnp.asarray(lam2, s_or_x.dtype)}
-        ops = cov_ops()
-    elif variant == "obs":
-        data = {"x": s_or_x, "lam2": jnp.asarray(lam2, s_or_x.dtype)}
-        ops = obs_ops()
-    else:
-        raise ValueError(f"unknown variant {variant!r}")
-    p = s_or_x.shape[-1]
-    omega0 = jnp.eye(p, dtype=s_or_x.dtype)
-    return prox_gradient(
-        omega0, data, ops, lam1=lam1, tol=tol,
+    """Deprecated shim — use :mod:`repro.estimator` (``ConcordEstimator`` with
+    ``backend='reference'``) or :func:`solve_reference` directly."""
+    warnings.warn(
+        "fit_reference is deprecated; use repro.estimator.ConcordEstimator "
+        "(backend='reference') or repro.core.prox.solve_reference",
+        DeprecationWarning, stacklevel=2)
+    return solve_reference(
+        s_or_x, lam1, lam2, variant=variant, tol=tol,
         max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau,
     )

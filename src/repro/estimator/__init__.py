@@ -1,0 +1,49 @@
+"""repro.estimator — the unified public API for sparse inverse covariance
+estimation (the HP-CONCORD facade).
+
+    from repro.estimator import ConcordEstimator, SolverConfig
+
+    est = ConcordEstimator(lam1=0.15, lam2=0.05,
+                           config=SolverConfig(backend="auto"))
+    est.fit(X)                      # -> est.omega_, est.report_
+    path = est.fit_path(X, lam1_grid=[0.3, 0.25, 0.2, 0.15, 0.1])
+    best = path.best_bic()          # model selection in one call
+
+Layers:
+  config    SolverConfig — every solver knob, frozen + validated
+  backends  registry: "reference" | "distributed" | "auto" (cost-model)
+  report    FitReport / PathResult — rich results + pseudo-BIC scoring
+  estimator ConcordEstimator + functional ``fit`` / ``fit_path``
+
+The old entry points (``core.prox.fit_reference``, ``core.distributed.fit``)
+remain as deprecated shims.
+"""
+from .backends import (  # noqa: F401
+    Problem,
+    auto_backend,
+    available_backends,
+    distributed_backend,
+    get_backend,
+    reference_backend,
+    register_backend,
+)
+from .config import SolverConfig  # noqa: F401
+from .estimator import ConcordEstimator, fit, fit_path  # noqa: F401
+from .report import FitReport, PathResult, pseudo_bic  # noqa: F401
+
+__all__ = [
+    "ConcordEstimator",
+    "FitReport",
+    "PathResult",
+    "Problem",
+    "SolverConfig",
+    "auto_backend",
+    "available_backends",
+    "distributed_backend",
+    "fit",
+    "fit_path",
+    "get_backend",
+    "pseudo_bic",
+    "reference_backend",
+    "register_backend",
+]

@@ -1,0 +1,272 @@
+"""Backend registry for the ``repro.estimator`` facade.
+
+A *backend* is a callable
+
+    backend(problem, lam1, lam2, config, omega0=None) -> FitReport
+
+registered under a name.  Three ship by default:
+
+  ``reference``    single-device jitted solve (``core.prox``); warm starts
+                   and lam1/lam2 are traced so a regularization path reuses
+                   one compiled program.
+  ``distributed``  the 1.5D shard_map drivers (``core.distributed``);
+                   replication factors come from the config or the tuner.
+  ``auto``         consults ``core.costmodel.tune`` (paper Lemmas 3.1-3.5)
+                   for variant + replication, then dispatches to
+                   ``reference`` on one device or ``distributed`` otherwise.
+
+``register_backend`` lets downstream code plug in new engines (e.g. a GPU
+Pallas solver) without touching the estimator.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..comm.grid import Grid1p5D
+from ..core import distributed as dist
+from ..core import prox
+from ..core.costmodel import Machine, ProblemShape, enumerate_configs, tune
+from .config import SolverConfig
+from .report import FitReport
+
+
+class Problem(NamedTuple):
+    """Input data for one estimation problem (either x or s, maybe both)."""
+    x: jax.Array | None         # (n, p) observations
+    s: jax.Array | None         # (p, p) sample covariance
+    n: int                      # sample count (for s-only problems: given)
+    p: int
+
+    @staticmethod
+    def from_data(x=None, s=None, n_samples: int | None = None) -> "Problem":
+        if x is None and s is None:
+            raise ValueError("pass x (n, p) or s (p, p)")
+        if x is not None:
+            x = jnp.asarray(x)
+            if x.ndim != 2:
+                raise ValueError(f"x must be 2-D (n, p), got shape {x.shape}")
+        if s is not None:
+            s = jnp.asarray(s)
+            if s.ndim != 2 or s.shape[0] != s.shape[1]:
+                raise ValueError(f"s must be square (p, p), got {s.shape}")
+        p = (x if x is not None else s).shape[-1]
+        n = x.shape[0] if x is not None else (n_samples or p)
+        return Problem(x=x, s=s, n=int(n), p=int(p))
+
+    def cov(self) -> jax.Array:
+        """The (p, p) sample covariance, formed on demand."""
+        if self.s is not None:
+            return self.s
+        return (self.x.T @ self.x) / self.n
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+BackendFn = Callable[..., FitReport]
+
+_REGISTRY: dict[str, BackendFn] = {}
+
+
+def register_backend(name: str, fn: BackendFn, *,
+                     overwrite: bool = False) -> None:
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(f"backend {name!r} already registered")
+    _REGISTRY[name] = fn
+
+
+def get_backend(name: str) -> BackendFn:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _cast(arr, config: SolverConfig):
+    if config.dtype is None:
+        return arr
+    return jnp.asarray(arr, jnp.dtype(config.dtype))
+
+
+def _variant_candidates(problem: Problem, config: SolverConfig) -> tuple:
+    variants = ("cov", "obs") if problem.x is not None else ("cov",)
+    if config.variant != "auto":
+        variants = (config.variant,)
+    return variants
+
+
+def _problem_shape(problem: Problem, lam1: float) -> ProblemShape:
+    return ProblemShape(
+        p=problem.p, n=problem.n,
+        d=dist.estimate_density(problem.p, problem.n, lam1))
+
+
+def _check_grid(variant: str, c_x: int, c_omega: int,
+                n_devices: int) -> tuple[str, int, int]:
+    if variant == "cov" and c_x != c_omega:
+        raise ValueError(
+            f"Cov keeps Omega in the X-like layout, so c_x must equal "
+            f"c_omega (got c_x={c_x}, c_omega={c_omega})")
+    if c_x * c_omega > n_devices or n_devices % (c_x * c_omega):
+        raise ValueError(
+            f"replication c_x*c_omega={c_x * c_omega} must divide "
+            f"n_devices={n_devices} (got c_x={c_x}, c_omega={c_omega})")
+    return variant, c_x, c_omega
+
+
+def _resolve_variant_only(problem: Problem, lam1: float,
+                          config: SolverConfig) -> str:
+    """Variant for the single-device reference engine (replication moot)."""
+    if config.variant != "auto":
+        return config.variant
+    best = tune(_problem_shape(problem, lam1), 1, Machine(),
+                _variant_candidates(problem, config))
+    return best.variant
+
+
+def _resolve_variant(problem: Problem, lam1: float, config: SolverConfig,
+                     n_devices: int) -> tuple[str, int, int]:
+    """Pin down (variant, c_x, c_omega) for a distributed solve.
+
+    User-pinned values are validated (raising on an infeasible grid, never
+    silently overridden); anything left open is chosen by the cost model,
+    enumerating only combinations consistent with the pins and with the
+    layout constraints (Cov needs c_x == c_omega; the product must divide
+    the device count)."""
+    if config.variant != "auto" and config.c_x and config.c_omega:
+        return _check_grid(config.variant, config.c_x, config.c_omega,
+                           n_devices)
+    variants = _variant_candidates(problem, config)
+    if n_devices == 1:
+        if config.variant != "auto":
+            return _check_grid(config.variant, config.c_x or 1,
+                               config.c_omega or 1, n_devices)
+        best = tune(_problem_shape(problem, lam1), 1, Machine(), variants)
+        return _check_grid(best.variant, config.c_x or 1,
+                           config.c_omega or 1, n_devices)
+    cands = [
+        cb for cb in enumerate_configs(_problem_shape(problem, lam1),
+                                       n_devices, Machine(), variants)
+        if (config.c_x is None or cb.c_x == config.c_x)
+        and (config.c_omega is None or cb.c_omega == config.c_omega)
+        and n_devices % (cb.c_x * cb.c_omega) == 0
+        and (cb.variant != "cov" or cb.c_x == cb.c_omega)
+    ]
+    if not cands:
+        raise ValueError(
+            f"no feasible (variant, c_x, c_omega) for n_devices={n_devices} "
+            f"with variant={config.variant!r} c_x={config.c_x} "
+            f"c_omega={config.c_omega}")
+    best = min(cands, key=lambda cb: cb.total)
+    return _check_grid(best.variant, best.c_x, best.c_omega, n_devices)
+
+
+def _offdiag_l1(omega) -> float:
+    om = np.asarray(omega)
+    return float(np.sum(np.abs(om)) - np.sum(np.abs(np.diag(om))))
+
+
+def _report(res, *, lam1, lam2, wall, backend, variant, c_x=1, c_omega=1,
+            n_devices=1) -> FitReport:
+    g = float(res.g_final)
+    return FitReport(
+        omega=res.omega,
+        lam1=float(lam1), lam2=float(lam2),
+        iters=int(res.iters), ls_total=int(res.ls_total),
+        converged=bool(res.converged),
+        objective=g + float(lam1) * _offdiag_l1(res.omega),
+        objective_smooth=g,
+        wall_time_s=float(wall),
+        backend=backend, variant=variant,
+        c_x=int(c_x), c_omega=int(c_omega), n_devices=int(n_devices),
+    )
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+
+def reference_backend(problem: Problem, lam1: float, lam2: float,
+                      config: SolverConfig, omega0=None) -> FitReport:
+    """Single-device jitted solve; the workhorse of warm-started paths."""
+    variant = _resolve_variant_only(problem, lam1, config)
+    if variant == "cov":
+        data = _cast(problem.cov(), config)
+    else:
+        if problem.x is None:
+            raise ValueError("Obs variant requires the data matrix x")
+        data = _cast(problem.x, config)
+    if omega0 is not None:
+        omega0 = jnp.asarray(omega0, data.dtype)
+    t0 = time.perf_counter()
+    res = prox.solve_reference(
+        data, lam1, lam2, omega0=omega0, variant=variant,
+        tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
+        warm_start_tau=config.warm_start_tau)
+    jax.block_until_ready(res.omega)
+    wall = time.perf_counter() - t0
+    return _report(res, lam1=lam1, lam2=lam2, wall=wall,
+                   backend="reference", variant=variant)
+
+
+def distributed_backend(problem: Problem, lam1: float, lam2: float,
+                        config: SolverConfig, omega0=None) -> FitReport:
+    """1.5D shard_map solve over all (or ``config.n_devices``) devices."""
+    n_dev = config.n_devices or len(jax.devices())
+    variant, c_x, c_omega = _resolve_variant(problem, lam1, config, n_dev)
+    grid = Grid1p5D(n_dev, c_x, c_omega)
+    if variant == "cov":
+        t0 = time.perf_counter()
+        res = dist.fit_cov(
+            _cast(problem.cov(), config), lam1, lam2, grid=grid,
+            tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
+            warm_start_tau=config.warm_start_tau,
+            use_pallas=config.use_pallas, omega0=omega0)
+    else:
+        if problem.x is None:
+            raise ValueError("Obs variant requires the data matrix x")
+        t0 = time.perf_counter()
+        res = dist.fit_obs(
+            _cast(problem.x, config), lam1, lam2, grid=grid,
+            tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
+            warm_start_tau=config.warm_start_tau,
+            use_pallas=config.use_pallas, omega0=omega0)
+    jax.block_until_ready(res.omega)
+    wall = time.perf_counter() - t0
+    return _report(res, lam1=lam1, lam2=lam2, wall=wall,
+                   backend="distributed", variant=res.variant,
+                   c_x=grid.c_x, c_omega=grid.c_omega, n_devices=n_dev)
+
+
+def auto_backend(problem: Problem, lam1: float, lam2: float,
+                 config: SolverConfig, omega0=None) -> FitReport:
+    """Cost-model-driven dispatch (the paper's decision procedure): resolve
+    variant + replication via ``costmodel.tune``, then run on the reference
+    engine (one device) or the distributed engine (several)."""
+    n_dev = config.n_devices or len(jax.devices())
+    variant, c_x, c_omega = _resolve_variant(problem, lam1, config, n_dev)
+    pinned = config.replace(variant=variant, c_x=c_x, c_omega=c_omega)
+    if n_dev == 1:
+        return reference_backend(problem, lam1, lam2, pinned, omega0)
+    return distributed_backend(problem, lam1, lam2, pinned, omega0)
+
+
+register_backend("reference", reference_backend)
+register_backend("distributed", distributed_backend)
+register_backend("auto", auto_backend)

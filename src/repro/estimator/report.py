@@ -1,0 +1,107 @@
+"""Rich fit results for the ``repro.estimator`` facade.
+
+``FitReport`` is the per-solve record (estimate + solver telemetry + the
+backend/grid the dispatcher actually chose); ``PathResult`` aggregates the
+reports of a warm-started regularization path and adds model selection.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FitReport:
+    """Everything a caller may want to know about one solve."""
+    omega: object               # (p, p) estimate (jax or numpy array)
+    lam1: float
+    lam2: float
+    iters: int                  # outer proximal-gradient iterations
+    ls_total: int               # total line-search trials
+    converged: bool
+    objective: float            # full objective g + lam1*||offdiag||_1
+    objective_smooth: float     # smooth part g (logdet + quad + ridge)
+    wall_time_s: float
+    backend: str                # backend that actually ran ("reference"/...)
+    variant: str                # "cov" or "obs" as resolved
+    c_x: int = 1
+    c_omega: int = 1
+    n_devices: int = 1
+    bic: float | None = None    # filled in by fit_path for model selection
+
+    def summary(self) -> str:
+        return (f"[{self.backend}/{self.variant} c_x={self.c_x} "
+                f"c_omega={self.c_omega}] lam1={self.lam1:g} "
+                f"iters={self.iters} ls={self.ls_total} "
+                f"converged={self.converged} obj={self.objective:.4f} "
+                f"t={self.wall_time_s:.3f}s")
+
+
+def pseudo_bic(omega, s, n: int, *, tol: float = 1e-8) -> float:
+    """BIC under the CONCORD pseudo-likelihood: ``2n * g0 + log(n) * |E|``
+    with g0 the unpenalized smooth objective and |E| the edge count.  Used
+    by ``fit_path`` for one-call model selection (lam1 sweep -> best BIC)."""
+    om = np.asarray(omega, dtype=np.float64)
+    sm = np.asarray(s, dtype=np.float64)
+    diag = np.diag(om)
+    if np.any(diag <= 0):
+        return float("inf")
+    g0 = -np.sum(np.log(diag)) + 0.5 * np.sum((om @ sm) * om)
+    p = om.shape[0]
+    edges = (np.count_nonzero(np.abs(om) > tol) - p) / 2.0
+    return float(2.0 * n * g0 + math.log(max(n, 2)) * edges)
+
+
+@dataclass(frozen=True)
+class PathResult:
+    """Result of a warm-started regularization path (descending lam1)."""
+    reports: tuple[FitReport, ...] = field(default_factory=tuple)
+    warm_start: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "reports", tuple(self.reports))
+
+    @property
+    def lam1_grid(self) -> tuple[float, ...]:
+        return tuple(r.lam1 for r in self.reports)
+
+    @property
+    def omegas(self) -> list:
+        return [r.omega for r in self.reports]
+
+    @property
+    def total_iters(self) -> int:
+        return int(sum(r.iters for r in self.reports))
+
+    @property
+    def total_ls(self) -> int:
+        return int(sum(r.ls_total for r in self.reports))
+
+    @property
+    def wall_time_s(self) -> float:
+        return float(sum(r.wall_time_s for r in self.reports))
+
+    def best_bic(self) -> FitReport:
+        """Report with the lowest pseudo-likelihood BIC along the path."""
+        scored = [r for r in self.reports if r.bic is not None]
+        if not scored:
+            raise ValueError("no BIC scores on this path (fit without data?)")
+        return min(scored, key=lambda r: r.bic)
+
+    def __len__(self) -> int:
+        return len(self.reports)
+
+    def __iter__(self):
+        return iter(self.reports)
+
+    def __getitem__(self, i):
+        return self.reports[i]
+
+    def summary(self) -> str:
+        lines = [r.summary() for r in self.reports]
+        lines.append(f"path total: {self.total_iters} outer iters, "
+                     f"{self.total_ls} ls trials, {self.wall_time_s:.3f}s "
+                     f"({'warm' if self.warm_start else 'cold'} starts)")
+        return "\n".join(lines)

@@ -154,7 +154,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     n_dev = mesh.size
     sh = C.SHAPES[shape_name]
 
-    with jax.set_mesh(mesh):
+    from ..comm.compat import use_mesh
+    with use_mesh(mesh):
         t0 = time.time()
         lowered, spec = _lower(cfg, shape_name, mesh)
         t_lower = time.time() - t0

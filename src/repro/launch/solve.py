@@ -1,16 +1,17 @@
 """HP-CONCORD launcher: distributed sparse inverse covariance estimation
-(the paper's own workload).
+(the paper's own workload), through the ``repro.estimator`` facade.
 
   PYTHONPATH=src python -m repro.launch.solve --graph chain --p 200 \
-      --n 400 --lam1 0.15 --variant auto
+      --n 400 --lam1 0.15 --backend auto
 
-The cost model (paper Lemmas 3.1-3.5) picks the Cov/Obs variant and the
-(c_X, c_Omega) replication factors unless pinned.
+The cost model (paper Lemmas 3.1-3.5) picks the backend's Cov/Obs variant
+and the (c_X, c_Omega) replication factors unless pinned.  ``--path`` runs
+a warm-started lam1 path (the Section-5 model-selection sweep) and reports
+the BIC-best point.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +19,7 @@ import numpy as np
 
 from ..core import distributed, graphs
 from ..core.costmodel import Machine, ProblemShape, tune
+from ..estimator import ConcordEstimator, SolverConfig
 
 
 def main(argv=None):
@@ -27,12 +29,17 @@ def main(argv=None):
     ap.add_argument("--n", type=int, default=400)
     ap.add_argument("--lam1", type=float, default=0.15)
     ap.add_argument("--lam2", type=float, default=0.05)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "reference", "distributed"])
     ap.add_argument("--variant", default="auto",
                     choices=["auto", "cov", "obs"])
     ap.add_argument("--cx", type=int, default=None)
     ap.add_argument("--comega", type=int, default=None)
     ap.add_argument("--tol", type=float, default=1e-5)
     ap.add_argument("--max-iters", type=int, default=300)
+    ap.add_argument("--path", default=None, metavar="LAM1S",
+                    help="comma-separated lam1 grid: run a warm-started "
+                         "regularization path instead of a single fit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -48,21 +55,29 @@ def main(argv=None):
           f"(compute {best.t_compute:.2e} / latency {best.t_latency:.2e} "
           f"/ bandwidth {best.t_bandwidth:.2e})")
 
-    t0 = time.time()
-    res = distributed.fit(
-        x=jnp.asarray(prob.x), lam1=args.lam1, lam2=args.lam2,
-        variant=args.variant, c_x=args.cx, c_omega=args.comega,
+    config = SolverConfig(
+        backend=args.backend, variant=args.variant,
+        c_x=args.cx, c_omega=args.comega,
         tol=args.tol, max_iters=args.max_iters)
-    dt = time.time() - t0
-    est = np.asarray(res.omega)
-    ppv, fdr = graphs.ppv_fdr(est, prob.omega0)
-    print(f"variant={res.variant} grid=(c_x={res.grid.c_x}, "
-          f"c_omega={res.grid.c_omega}) iters={int(res.iters)} "
-          f"ls={int(res.ls_total)} converged={bool(res.converged)}")
-    print(f"time {dt:.2f}s  objective {float(res.g_final):.4f}  "
-          f"PPV {ppv:.3f}  FDR {fdr:.3f}  "
-          f"avg degree {graphs.avg_degree(est):.2f}")
-    return res
+    est = ConcordEstimator(lam1=args.lam1, lam2=args.lam2, config=config)
+    x = jnp.asarray(prob.x)
+
+    if args.path:
+        grid = [float(v) for v in args.path.split(",")]
+        path = est.fit_path(x, lam1_grid=grid)
+        print(path.summary())
+        chosen = path.best_bic()
+        print(f"BIC-best lam1={chosen.lam1:g} (bic={chosen.bic:.1f})")
+        rep = chosen
+    else:
+        rep = est.fit(x).report_
+
+    est_omega = np.asarray(rep.omega)
+    ppv, fdr = graphs.ppv_fdr(est_omega, prob.omega0)
+    print(rep.summary())
+    print(f"PPV {ppv:.3f}  FDR {fdr:.3f}  "
+          f"avg degree {graphs.avg_degree(est_omega):.2f}")
+    return rep
 
 
 if __name__ == "__main__":

@@ -251,7 +251,8 @@ def constrain(x, logical: Sequence[str], rules: dict):
     """with_sharding_constraint against the ambient mesh (set_mesh
     context); a NO-OP when no mesh is active (single-device tests) or
     when a dimension cannot honor its mapping (auto fallback)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    from ..comm.compat import get_abstract_mesh
+    mesh = get_abstract_mesh()
     if mesh.empty or not mesh.shape:
         return x
     spec = logical_to_spec(logical, x.shape, mesh, rules)

@@ -589,7 +589,8 @@ def apply_moe(cfg: ModelConfig, p, x, prefix: str = "moe"):
     xt = x.reshape(T, d)
     router = p[f"{prefix}_router"]
 
-    mesh = jax.sharding.get_abstract_mesh()
+    from ..comm.compat import get_abstract_mesh
+    mesh = get_abstract_mesh()
     batch_rule = rules.get("batch", ("pod", "data"))
     data_axes = tuple(a for a in batch_rule
                       if not mesh.empty and a in mesh.shape)
@@ -610,7 +611,8 @@ def apply_moe(cfg: ModelConfig, p, x, prefix: str = "moe"):
             ce_s = lax.psum(ce_s, data_axes)
             return buf, slot, gates, keep, me_s, ce_s
 
-        buf, slot, gates, keep, me_s, ce_s = jax.shard_map(
+        from ..comm.compat import shard_map
+        buf, slot, gates, keep, me_s, ce_s = shard_map(
             disp, mesh=mesh,
             in_specs=(P(data_axes, None), P(None, None)),
             out_specs=(P(None, data_axes, None), P(data_axes),
@@ -641,7 +643,8 @@ def apply_moe(cfg: ModelConfig, p, x, prefix: str = "moe"):
 
     if sharded:
         from jax.sharding import PartitionSpec as P
-        out = jax.shard_map(
+        from ..comm.compat import shard_map
+        out = shard_map(
             partial(_moe_combine_local, K=K_comb), mesh=mesh,
             in_specs=(P(None, data_axes, None), P(data_axes),
                       P(data_axes, None), P(data_axes)),

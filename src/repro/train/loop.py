@@ -68,7 +68,8 @@ def train(cfg: ModelConfig, tc: TrainerConfig, *, mesh=None,
                                   jnp.zeros((), jnp.int32))
 
     if mesh is not None:
-        with jax.set_mesh(mesh):
+        from ..comm.compat import use_mesh
+        with use_mesh(mesh):
             return _run(cfg, tc, step_fn, source, state, start_step, log)
     return _run(cfg, tc, step_fn, source, state, start_step, log)
 

@@ -1,0 +1,71 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The test modules import
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+
+With real hypothesis installed (see requirements-dev.txt) the suite gets
+full randomized property testing.  Without it, this module runs each
+``@given`` test over the cartesian product of a small fixed sample set per
+strategy (bounds + midpoint), which keeps the properties exercised and the
+suite collectable on minimal CPU images.
+
+Only the strategy combinators this repo actually uses are implemented:
+``integers``, ``floats``, ``sampled_from``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+
+
+class _Strategy:
+    def __init__(self, samples):
+        self.samples = tuple(samples)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        mid = (min_value + max_value) // 2
+        return _Strategy(sorted({min_value, mid, max_value}))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        mid = 0.5 * (min_value + max_value)
+        return _Strategy(sorted({float(min_value), mid, float(max_value)}))
+
+    @staticmethod
+    def sampled_from(values) -> _Strategy:
+        return _Strategy(values)
+
+
+st = _Strategies()
+
+
+def given(*strategies: _Strategy):
+    """Run the test once per combination of the strategies' fixed samples."""
+    def decorate(fn):
+        cases = list(itertools.product(*(s.samples for s in strategies)))
+
+        @functools.wraps(fn)
+        def wrapper():
+            for case in cases:
+                fn(*case)
+
+        # hide the drawn parameters from pytest's fixture resolution
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorate
+
+
+def settings(*args, **kwargs):
+    """No-op replacement for ``hypothesis.settings``."""
+    def decorate(fn):
+        return fn
+    return decorate

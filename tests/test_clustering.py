@@ -1,7 +1,10 @@
 """Clustering pipeline (paper Section 5 / S.3.4-S.3.5)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal CPU image — deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import clustering as cl
 

@@ -12,6 +12,7 @@ def test_1p5d_matmuls_all_replications():
 import numpy as np, jax, jax.numpy as jnp
 from repro.comm.grid import Grid1p5D
 from repro.comm import matmul1p5d as mm
+from repro.comm.compat import use_mesh
 P = 16
 rng = np.random.default_rng(0)
 for (cx, co) in [(1,1),(2,2),(4,2),(2,4),(4,4),(8,2),(16,1),(1,16)]:
@@ -20,7 +21,7 @@ for (cx, co) in [(1,1),(2,2),(4,2),(2,4),(4,4),(8,2),(16,1),(1,16)]:
     p = g.pad_p(48); n = 8
     x = rng.standard_normal((n, p)).astype(np.float32)
     om = rng.standard_normal((p, p)).astype(np.float32)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         s = mm.xtx(jnp.asarray(x), g, mesh, scale=1.0/n)
         np.testing.assert_allclose(np.asarray(s), x.T@x/n, rtol=1e-4, atol=1e-4)
         w = mm.omega_s(jnp.asarray(om), s, g, mesh)
@@ -83,22 +84,23 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.comm.collectives import (compressed_psum, ring_allreduce_int8,
                                     init_error_feedback)
-mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.comm.compat import make_mesh, shard_map, use_mesh
+mesh = make_mesh((8,), ("d",))
 rng = np.random.default_rng(0)
 x = rng.standard_normal((8, 64)).astype(np.float32)
 
 def f(xs):
     out, _ = compressed_psum({"g": xs}, "d", method="bf16")
     return out["g"]
-with jax.set_mesh(mesh):
-    y = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P("d"), check_vma=False)(jnp.asarray(x))
+with use_mesh(mesh):
+    y = shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P("d"), check_vma=False)(jnp.asarray(x))
 expected = x.sum(axis=0, keepdims=True).repeat(8, 0)
 assert np.abs(np.asarray(y) - expected).max() / np.abs(expected).max() < 2e-2
 
 def g(xs):
     return ring_allreduce_int8(xs[0], "d")[None]
-with jax.set_mesh(mesh):
-    y2 = jax.shard_map(g, mesh=mesh, in_specs=P("d"), out_specs=P("d"), check_vma=False)(jnp.asarray(x))
+with use_mesh(mesh):
+    y2 = shard_map(g, mesh=mesh, in_specs=P("d"), out_specs=P("d"), check_vma=False)(jnp.asarray(x))
 # each of the 2(n-1) ring hops requantizes: error ~ n/127
 rel = np.abs(np.asarray(y2) - expected).max() / np.abs(expected).max()
 assert rel < 0.15, rel

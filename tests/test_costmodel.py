@@ -2,7 +2,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal CPU image — deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.costmodel import (EDISON, CostBreakdown, Machine,
                                   ProblemShape, cov_costs, cov_is_cheaper,

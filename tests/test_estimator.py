@@ -1,0 +1,253 @@
+"""The unified ``repro.estimator`` facade: SolverConfig validation, backend
+registry, backend agreement with the reference oracle, and warm-started
+regularization paths."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import graphs
+from repro.core.prox import solve_reference
+from repro.estimator import (
+    ConcordEstimator,
+    FitReport,
+    SolverConfig,
+    available_backends,
+    fit,
+    fit_path,
+    get_backend,
+    register_backend,
+)
+
+
+@pytest.fixture(scope="module")
+def chain_problem():
+    return graphs.make_problem("chain", p=48, n=150, seed=1)
+
+
+REF_CONFIG = SolverConfig(backend="reference", variant="cov",
+                          tol=1e-6, max_iters=300)
+
+
+# ---------------------------------------------------------------------------
+# (a) backend agreement with the reference oracle
+# ---------------------------------------------------------------------------
+
+def test_reference_backend_matches_fit_reference(chain_problem):
+    s = jnp.asarray(chain_problem.s)
+    oracle = solve_reference(s, 0.15, 0.05, tol=1e-6, max_iters=300)
+    est = ConcordEstimator(lam1=0.15, lam2=0.05, config=REF_CONFIG)
+    est.fit_cov(s, n_samples=150)
+    np.testing.assert_allclose(np.asarray(est.omega_),
+                               np.asarray(oracle.omega), atol=1e-5)
+    assert est.report_.backend == "reference"
+    assert est.report_.variant == "cov"
+    assert est.report_.converged
+    assert est.n_iter_ == int(oracle.iters)
+
+
+def test_auto_backend_matches_fit_reference(chain_problem):
+    """On one device, backend='auto' resolves to the reference engine and
+    must agree with the oracle to 1e-5."""
+    s = jnp.asarray(chain_problem.s)
+    oracle = solve_reference(s, 0.15, 0.05, tol=1e-6, max_iters=300)
+    est = ConcordEstimator(
+        lam1=0.15, lam2=0.05,
+        config=SolverConfig(backend="auto", tol=1e-6, max_iters=300))
+    est.fit_cov(s, n_samples=150)
+    np.testing.assert_allclose(np.asarray(est.omega_),
+                               np.asarray(oracle.omega), atol=1e-5)
+    assert est.report_.backend == "reference"   # resolved, not "auto"
+
+
+def test_auto_backend_from_observations(chain_problem):
+    """fit(X) through auto: variant is resolved by the cost model and the
+    estimate still recovers the chain structure."""
+    est = ConcordEstimator(
+        lam1=0.15, lam2=0.05,
+        config=SolverConfig(backend="auto", tol=1e-6, max_iters=300))
+    est.fit(jnp.asarray(chain_problem.x))
+    assert est.report_.variant in ("cov", "obs")
+    s = jnp.asarray(chain_problem.s)
+    oracle = solve_reference(s, 0.15, 0.05, tol=1e-6, max_iters=300)
+    # cov/obs solutions of the same problem agree to solver tolerance
+    np.testing.assert_allclose(np.asarray(est.omega_),
+                               np.asarray(oracle.omega), atol=5e-3)
+
+
+def test_functional_facade(chain_problem):
+    rep = fit(s=jnp.asarray(chain_problem.s), lam1=0.2, lam2=0.05,
+              backend="reference", variant="cov", tol=1e-5)
+    assert isinstance(rep, FitReport)
+    assert rep.converged
+    assert rep.objective >= rep.objective_smooth  # l1 penalty is nonnegative
+    assert rep.wall_time_s >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# (b) warm-started paths
+# ---------------------------------------------------------------------------
+
+def test_fit_path_warm_matches_cold_with_fewer_iters(chain_problem):
+    s = jnp.asarray(chain_problem.s)
+    grid = [0.3, 0.25, 0.2, 0.15, 0.1]
+    est = ConcordEstimator(lam2=0.05, config=REF_CONFIG)
+    warm = est.fit_path(s=s, n_samples=150, lam1_grid=grid)
+    cold = est.fit_path(s=s, n_samples=150, lam1_grid=grid,
+                        warm_start=False)
+    assert len(warm) == len(cold) == len(grid)
+    # same final objective at every path point...
+    for w, c in zip(warm, cold):
+        assert w.lam1 == c.lam1
+        assert abs(w.objective - c.objective) < 1e-3, (w.lam1, w.objective,
+                                                       c.objective)
+    # ...with strictly fewer cumulative outer iterations
+    assert warm.total_iters < cold.total_iters, \
+        (warm.total_iters, cold.total_iters)
+
+
+def test_fit_path_is_sorted_descending_and_scored(chain_problem):
+    s = jnp.asarray(chain_problem.s)
+    path = ConcordEstimator(lam2=0.05, config=REF_CONFIG).fit_path(
+        s=s, n_samples=150, lam1_grid=[0.1, 0.3, 0.2])
+    assert list(path.lam1_grid) == [0.3, 0.2, 0.1]
+    assert all(r.bic is not None for r in path)
+    best = path.best_bic()
+    assert best.bic == min(r.bic for r in path)
+    # sparsity decreases (weakly) along the descending-lam1 path
+    edges = [graphs.edge_count(np.asarray(r.omega)) for r in path]
+    assert edges[0] <= edges[-1] + 2
+
+
+def test_fit_path_from_observations(chain_problem):
+    """Path from raw X (obs variant) agrees with the cov path solutions."""
+    x = jnp.asarray(chain_problem.x)
+    cfg = SolverConfig(backend="reference", variant="obs",
+                       tol=1e-6, max_iters=300)
+    path = ConcordEstimator(lam2=0.05, config=cfg).fit_path(
+        x, lam1_grid=[0.2, 0.15])
+    s = jnp.asarray(chain_problem.s)
+    for rep in path:
+        oracle = solve_reference(s, rep.lam1, 0.05, tol=1e-6, max_iters=300)
+        np.testing.assert_allclose(np.asarray(rep.omega),
+                                   np.asarray(oracle.omega), atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# (c) validation
+# ---------------------------------------------------------------------------
+
+def test_config_rejects_bad_variant():
+    with pytest.raises(ValueError, match="variant"):
+        SolverConfig(variant="bogus")
+
+
+def test_config_rejects_bad_knobs():
+    with pytest.raises(ValueError, match="tol"):
+        SolverConfig(tol=0.0)
+    with pytest.raises(ValueError, match="max_iters"):
+        SolverConfig(max_iters=0)
+    with pytest.raises(ValueError, match="c_x"):
+        SolverConfig(c_x=0)
+    with pytest.raises(ValueError, match="c_omega"):
+        SolverConfig(c_omega=-2)
+    with pytest.raises(ValueError, match="dtype"):
+        SolverConfig(dtype="float16")
+    with pytest.raises(ValueError, match="backend"):
+        SolverConfig(backend="")
+
+
+def test_unknown_backend_raises(chain_problem):
+    est = ConcordEstimator(
+        lam1=0.2, config=SolverConfig(backend="nonexistent"))
+    with pytest.raises(ValueError, match="unknown backend"):
+        est.fit_cov(jnp.asarray(chain_problem.s))
+
+
+def test_fit_path_rejects_bad_grids(chain_problem):
+    s = jnp.asarray(chain_problem.s)
+    est = ConcordEstimator(config=REF_CONFIG)
+    with pytest.raises(ValueError, match="non-empty"):
+        est.fit_path(s=s, lam1_grid=[])
+    with pytest.raises(ValueError, match="finite"):
+        est.fit_path(s=s, lam1_grid=[0.2, -0.1])
+    with pytest.raises(ValueError, match="finite"):
+        est.fit_path(s=s, lam1_grid=[0.2, float("nan")])
+
+
+def test_fit_path_requires_n_samples_for_bic(chain_problem):
+    s = jnp.asarray(chain_problem.s)
+    est = ConcordEstimator(lam2=0.05, config=REF_CONFIG)
+    with pytest.raises(ValueError, match="n_samples"):
+        est.fit_path(s=s, lam1_grid=[0.2, 0.1])
+    # score_bic=False lifts the requirement
+    path = est.fit_path(s=s, lam1_grid=[0.2], score_bic=False)
+    assert path[0].bic is None
+
+
+def test_resolve_variant_respects_single_pin(chain_problem):
+    """Pinning only one replication factor must yield a feasible grid (the
+    tuner is constrained by the pin, not merged with it)."""
+    from repro.estimator.backends import Problem, _resolve_variant
+    problem = Problem.from_data(x=jnp.asarray(chain_problem.x))
+    cfg = SolverConfig(backend="distributed", variant="obs", c_x=8)
+    variant, c_x, c_omega = _resolve_variant(problem, 0.15, cfg, 8)
+    assert (variant, c_x) == ("obs", 8)
+    assert c_x * c_omega <= 8 and 8 % (c_x * c_omega) == 0
+    # cov auto-tuned on many devices keeps the layout constraint
+    cfg_cov = SolverConfig(backend="distributed", variant="cov")
+    variant, c_x, c_omega = _resolve_variant(problem, 0.15, cfg_cov, 16)
+    assert variant == "cov" and c_x == c_omega
+
+
+def test_resolve_variant_rejects_infeasible_pins(chain_problem):
+    from repro.estimator.backends import Problem, _resolve_variant
+    problem = Problem.from_data(x=jnp.asarray(chain_problem.x))
+    with pytest.raises(ValueError, match="c_x must equal c_omega"):
+        _resolve_variant(problem, 0.15,
+                         SolverConfig(variant="cov", c_x=4, c_omega=2), 8)
+    with pytest.raises(ValueError, match="divide"):
+        _resolve_variant(problem, 0.15,
+                         SolverConfig(variant="obs", c_x=3, c_omega=3), 8)
+
+
+def test_estimator_rejects_bad_penalties():
+    with pytest.raises(ValueError, match="lam1"):
+        ConcordEstimator(lam1=-0.1)
+    with pytest.raises(ValueError, match="lam2"):
+        ConcordEstimator(lam2=float("inf"))
+
+
+def test_problem_validation():
+    from repro.estimator import Problem
+    with pytest.raises(ValueError, match="x .n, p. or s"):
+        Problem.from_data()
+    with pytest.raises(ValueError, match="square"):
+        Problem.from_data(s=jnp.ones((3, 4)))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_builtins_and_accepts_plugins(chain_problem):
+    assert {"reference", "distributed", "auto"} <= set(available_backends())
+    calls = []
+
+    def myref(problem, lam1, lam2, config, omega0=None):
+        calls.append(lam1)
+        return get_backend("reference")(problem, lam1, lam2,
+                                        config.replace(backend="reference"),
+                                        omega0)
+
+    register_backend("myref-test", myref, overwrite=True)
+    try:
+        rep = fit(s=jnp.asarray(chain_problem.s), lam1=0.2, lam2=0.05,
+                  backend="myref-test", variant="cov", tol=1e-5)
+        assert calls == [0.2]
+        assert rep.backend == "reference"
+        with pytest.raises(ValueError, match="already registered"):
+            register_backend("myref-test", myref)
+    finally:
+        import repro.estimator.backends as B
+        B._REGISTRY.pop("myref-test", None)

@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal CPU image — deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import graphs
 from repro.core.objective import full_objective_cov

@@ -1,7 +1,10 @@
 """Logical-axis -> PartitionSpec resolution + grid index math."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal CPU image — deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 import jax
 from jax.sharding import PartitionSpec as P
