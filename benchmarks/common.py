@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import csv
 import os
-import sys
 import time
 
 OUT_DIR = os.environ.get("BENCH_OUT", "results")

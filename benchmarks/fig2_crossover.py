@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import graphs
-from repro.core.costmodel import EDISON, Machine, ProblemShape, cov_costs, \
+from repro.core.costmodel import EDISON, ProblemShape, cov_costs, \
     obs_costs
 from repro.core.prox import fit_reference
 

@@ -15,7 +15,7 @@ import os
 import subprocess
 import sys
 
-from repro.core.costmodel import EDISON, ProblemShape, obs_costs, tune
+from repro.core.costmodel import EDISON, ProblemShape, tune
 
 from .common import emit, timeit
 

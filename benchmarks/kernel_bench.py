@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 
-from .common import emit, timeit
+from .common import emit
 
 
 def run():

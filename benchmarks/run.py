@@ -11,7 +11,7 @@ import traceback
 
 MODULES = ["fig2_crossover", "fig3_replication", "fig4_scaling",
            "table1_recovery", "path_warmstart", "kernel_bench",
-           "lm_roofline"]
+           "sparse_crossover", "lm_roofline"]
 
 
 def main(argv=None):

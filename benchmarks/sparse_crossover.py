@@ -1,0 +1,143 @@
+"""Dense vs block-sparse Ω-product crossover sweep (the matops layer's
+calibration artifact).
+
+Times the dense ``omega @ b`` against the block-gather path
+(``core.matops.masked_matmul`` — the jittable jnp fallback of the Pallas
+block-CSR kernel) over a block-density grid, then
+
+  * reports the measured crossover density (largest density where the
+    sparse path still wins),
+  * calibrates ``core.costmodel.BlockSparseModel`` from the measurements
+    and compares its predicted crossover against the measured one (the
+    shipped defaults are conservative: model <= measured, so
+    ``sparse_matmul="auto"`` never routes sparse past break-even),
+  * emits results/sparse_crossover.csv + results/sparse_crossover.json
+    (the JSON is uploaded as a CI artifact to track the perf trajectory).
+
+  PYTHONPATH=src python -m benchmarks.sparse_crossover [--quick]
+
+Interpret-mode CPU numbers: the block-gather path here is pure jnp (no
+Pallas interpret overhead), so the speedups reflect real skipped work.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from functools import partial
+
+import numpy as np
+
+from .common import OUT_DIR, emit, timeit
+
+DENSITIES = (0.02, 0.05, 0.1, 0.2, 0.4, 0.7, 1.0)
+
+
+def _block_sparse_operand(rng, p, bs, density):
+    a = rng.standard_normal((p, p)).astype(np.float32)
+    nb = p // bs
+    keep = rng.random((nb, nb)) < density
+    np.fill_diagonal(keep, True)        # iterates always keep the diagonal
+    for r in range(nb):
+        for c in range(nb):
+            if not keep[r, c]:
+                a[r * bs:(r + 1) * bs, c * bs:(c + 1) * bs] = 0
+    return a, float(keep.mean())
+
+
+def sweep(ps, bs, densities, repeats=3):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import matops
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for p in ps:
+        m = p
+        b = jnp.asarray(rng.standard_normal((p, m)).astype(np.float32))
+        dense_fn = jax.jit(lambda a_, b_: a_ @ b_)
+        for density in densities:
+            a_np, eff_density = _block_sparse_operand(rng, p, bs, density)
+            a = jnp.asarray(a_np)
+            mask = matops.block_mask(a, bs)
+            cap = max(1, int(np.asarray(mask).sum()))
+            sparse_fn = jax.jit(partial(matops.masked_matmul,
+                                        block_size=bs, capacity=cap))
+            t_dense, _ = timeit(dense_fn, a, b, repeats=repeats)
+            t_sparse, out = timeit(sparse_fn, a, b, mask, repeats=repeats)
+            err = float(jnp.max(jnp.abs(out - a @ b)))
+            rows.append({
+                "p": p, "m": m, "block_size": bs, "density": eff_density,
+                "t_dense": t_dense, "t_sparse": t_sparse,
+                "speedup": round(t_dense / t_sparse, 3),
+                "max_abs_err": err,
+            })
+            print(f"  p={p} density={eff_density:.3f} "
+                  f"dense {t_dense*1e3:8.2f}ms  sparse {t_sparse*1e3:8.2f}ms "
+                  f"speedup {t_dense/t_sparse:5.2f}x")
+    return rows
+
+
+def measured_crossover(rows, p):
+    """Largest density of the sparse path's winning streak from the bottom
+    of the sweep (robust to a noisy one-off win at high density, which the
+    plain max-over-wins would report as the crossover)."""
+    cross = 0.0
+    for r in sorted((r for r in rows if r["p"] == p),
+                    key=lambda r: r["density"]):
+        if r["t_sparse"] >= r["t_dense"]:
+            break
+        cross = r["density"]
+    return cross
+
+
+def run(argv=None):
+    from repro.core.costmodel import (
+        BlockSparseModel,
+        calibrate_block_model,
+        crossover_density,
+    )
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes for CI (artifact trend tracking)")
+    ap.add_argument("--block-size", type=int, default=128)
+    args, _ = ap.parse_known_args(argv)
+    ps = (512,) if args.quick else (1024, 2048)
+    bs = min(args.block_size, ps[0] // 8)   # keep a usable mask resolution
+
+    rows = sweep(ps, bs, DENSITIES)
+    emit("sparse_crossover", rows)
+
+    calibrated = calibrate_block_model(rows)
+    default = BlockSparseModel()
+    summary = {"rows": rows, "block_size": bs, "per_p": {}}
+    for p in ps:
+        meas = measured_crossover(rows, p)
+        model_default = crossover_density(p, p, bs, model=default)
+        model_calibrated = crossover_density(p, p, bs, model=calibrated)
+        summary["per_p"][str(p)] = {
+            "measured_crossover": meas,
+            "model_crossover_default": model_default,
+            "model_crossover_calibrated": model_calibrated,
+            "auto_is_conservative": model_default <= meas + 1e-9,
+        }
+        print(f"p={p}: measured crossover {meas:.3f} | model default "
+              f"{model_default:.3f} | model calibrated "
+              f"{model_calibrated:.3f}")
+    summary["calibrated_model"] = {
+        "dense_eff": calibrated.dense_eff,
+        "sparse_eff": calibrated.sparse_eff,
+        "gather_eff": calibrated.gather_eff,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "sparse_crossover.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"# wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

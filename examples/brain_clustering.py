@@ -23,7 +23,6 @@ def make_region_problem(side=12, region=4, n=600, seed=0):
     """Variables on a side x side grid; region x region blocks are the
     true clusters; neighbors within a region are partially correlated."""
     p = side * side
-    rng = np.random.default_rng(seed)
     omega = np.eye(p, dtype=np.float32)
     labels = np.zeros(p, dtype=np.int64)
     nbrs = clustering.grid_neighbors(side, side)

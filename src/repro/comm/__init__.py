@@ -3,6 +3,9 @@
 ``grid``        — 1.5D processor-grid index math and ppermute permutations.
 ``matmul1p5d``  — shard_map 1.5D matmuls (gather & reduce flavors) and the
                   replication-aware distributed transposes (Lemma 3.2).
+``sparse1p5d``  — sparsity-aware twins of the Ω-side 1.5D products: the
+                  iterate's block-occupancy mask travels with the Ω
+                  operand so local tile products skip absent blocks.
 ``collectives`` — compressed gradient collectives (beyond-paper).
 """
-from . import grid, matmul1p5d  # noqa: F401
+from . import grid, matmul1p5d, sparse1p5d  # noqa: F401

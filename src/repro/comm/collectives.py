@@ -16,7 +16,6 @@ are pure and jit-safe.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax

@@ -33,7 +33,6 @@ the rotation, the device at ring-flat position f holds R block
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import cached_property
 
 import jax
 import numpy as np

@@ -30,11 +30,11 @@ from __future__ import annotations
 
 from functools import partial
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..core import matops
 from . import compat
 from .grid import AXES, Grid1p5D
 
@@ -64,13 +64,20 @@ def _ring_pos_om(grid: Grid1p5D):
 # ---------------------------------------------------------------------------
 
 def rot_gather_local(r_blk, f_loc, grid: Grid1p5D, *, n_r: int,
-                     canonical: str, ring: str, reverse: bool = False):
+                     canonical: str, ring: str, r_mask=None,
+                     policy: matops.MatmulPolicy | None = None):
     """Rotate R around `ring`, multiplying with the fixed local block.
 
     ring="x":      tile = r_visit @ f_loc   (R row-block x fixed col-block)
                    team layer = "k", c_F = c_x
     ring="omega":  tile = f_loc @ r_visit   (fixed row-block x R col-block)
                    team layer = "j", c_F = c_omega
+
+    With ``r_mask`` (the rotating operand's block-occupancy mask, ring="x"
+    only — i.e. R is the Ω iterate), the mask travels around the ring with
+    R and every local tile product routes through the block-sparse
+    dispatch of ``core.matops``, skipping absent blocks past the policy's
+    density crossover.
 
     Returns the stacked tile sequence (n_r, *tile.shape) reordered so index
     b holds the tile of R block b (the caller reshapes into a panel).
@@ -79,18 +86,28 @@ def rot_gather_local(r_blk, f_loc, grid: Grid1p5D, *, n_r: int,
     layer_axis = "k" if ring == "x" else "j"
     if c_f < n_r and n_r % c_f:
         raise ValueError(f"need c_F | n_R (or c_F >= n_R): c_F={c_f}, n_R={n_r}")
+    if r_mask is not None and ring != "x":
+        raise ValueError("masked rotation is defined for ring='x' (the "
+                         "rotating operand is the Omega iterate)")
     rounds = max(1, n_r // c_f)
     stagger = grid.stagger_perm(canonical, ring, n_r)
     shift = grid.shift_perm(ring, c_f)
 
     cur0 = lax.ppermute(r_blk, AXES, stagger)
+    msk0 = None if r_mask is None else lax.ppermute(r_mask, AXES, stagger)
 
-    def body(cur, _):
+    def body(carry, _):
+        cur, msk = carry
         nxt = lax.ppermute(cur, AXES, shift)
-        tile = (cur @ f_loc) if ring == "x" else (f_loc @ cur)
-        return nxt, tile
+        nmsk = None if msk is None else lax.ppermute(msk, AXES, shift)
+        if ring == "x":
+            tile = matops.matmul(cur, f_loc, mask=msk, policy=policy)
+        else:
+            tile = f_loc @ cur
+        return (nxt, nmsk), tile
 
-    _, tiles = lax.scan(body, cur0, None, length=rounds)  # (rounds, br, bc)
+    (_, _), tiles = lax.scan(body, (cur0, msk0), None,
+                             length=rounds)            # (rounds, br, bc)
     g = lax.all_gather(tiles, layer_axis)                 # (c_f, rounds, ...)
     seq = jnp.swapaxes(g, 0, 1).reshape((rounds * c_f,) + tiles.shape[1:])
     team = _team_x() if ring == "x" else _team_om()
@@ -137,12 +154,23 @@ def y_x_local(y_rows, x_loc, grid: Grid1p5D, *, scale=1.0):
 # reduce-flavor rotation (runs inside shard_map)
 # ---------------------------------------------------------------------------
 
-def omega_xt_local(omega_rows, xt_loc, grid: Grid1p5D, *, scale=1.0):
+def omega_xt_local(omega_rows, xt_loc, grid: Grid1p5D, *, scale=1.0,
+                   omega_mask=None,
+                   policy: matops.MatmulPolicy | None = None):
     """Y = scale * Omega @ X^T.  omega_rows: fixed Omega-like (blk_om, p);
-    xt_loc: rotating X^T row-block (blk_x, n).  Obs lines 2/10."""
+    xt_loc: rotating X^T row-block (blk_x, n).  Obs lines 2/10.
+
+    With ``omega_mask`` (the fixed operand's (blk_om/bs, p/bs) occupancy),
+    each round gates the contracted Omega column-slice with the matching
+    mask column-slice through the ``core.matops`` dispatch (requires the
+    policy block size to divide blk_x)."""
+    if omega_mask is not None and policy is None:
+        raise ValueError("omega_mask requires a matops policy (they are "
+                         "only meaningful together)")
     n_x, c_om = grid.n_x, grid.c_omega
     blk_om, p = omega_rows.shape
     blk_x, n = xt_loc.shape
+    mcols_blk = None if omega_mask is None else blk_x // policy.block_size
     rounds = n_x // c_om
     stagger = grid.stagger_perm("xlike", "omega", n_x)
     shift = grid.shift_perm("omega", c_om)
@@ -155,7 +183,13 @@ def omega_xt_local(omega_rows, xt_loc, grid: Grid1p5D, *, scale=1.0):
         nxt = lax.ppermute(cur, AXES, shift)
         cols = lax.dynamic_slice(omega_rows, (jnp.int32(0), v * blk_x),
                                  (blk_om, blk_x))
-        acc = acc + cols @ cur
+        if omega_mask is None:
+            acc = acc + cols @ cur
+        else:
+            mcols = lax.dynamic_slice(
+                omega_mask, (jnp.int32(0), v * mcols_blk),
+                (omega_mask.shape[0], mcols_blk))
+            acc = acc + matops.matmul(cols, cur, mask=mcols, policy=policy)
         v = jnp.mod(v + c_om, n_x)
         return (nxt, acc, v), None
 

@@ -1,0 +1,63 @@
+"""Sparsity-aware 1.5D Ω-side products (the distributed half of the matops
+layer).
+
+These are the masked entry points for the two Ω-side products of
+``comm.matmul1p5d`` — W = Omega S (Cov, gather flavor) and Y = Omega X^T
+(Obs, reduce flavor).  The ring schedules live in ``matmul1p5d`` itself
+(one implementation, optionally masked); this module only packages the
+Ω-iterate + occupancy-mask calling convention the solver drivers use:
+
+  * gather flavor (Cov): the Omega row-block ROTATES around the x-ring, so
+    its mask rotates with it (the same stagger/shift ppermutes applied to
+    both).  Each round's local product routes through
+    :func:`repro.core.matops.matmul` with the visiting block's mask.
+  * reduce flavor (Obs): Omega is the FIXED operand; each round contracts
+    a dynamic column-slice of it, gated by the matching block-column slice
+    of the fixed mask.
+
+The mask is tiny — (rows/bs, cols/bs) — so rotating it adds a negligible
+``bs^2``-th of the Ω traffic to the ring; in exchange, the local dgemm of
+every round skips absent blocks once the iterate is past the density
+crossover.  Both paths are exact (see ``core.matops``): the dispatch only
+takes the block-gather branch when its capacity provably covers the
+occupied blocks, so results match the dense rotation up to float
+summation order.
+
+All functions run INSIDE shard_map (shards in, shards out, collectives
+inline), like their ``matmul1p5d`` counterparts.
+"""
+from __future__ import annotations
+
+from ..core import matops
+from . import matmul1p5d as mm
+from .grid import Grid1p5D
+
+
+def omega_s_local_sparse(omega_rows, omega_mask, s_panel, grid: Grid1p5D, *,
+                         policy: matops.MatmulPolicy,
+                         canonical: str = "omegalike"):
+    """W = Omega @ S with block-sparse local products.
+
+    ``omega_rows``: the rotating Omega row-block; ``omega_mask``: its
+    (rows/bs, cols/bs) occupancy; ``s_panel``: the fixed (p, blk_x) column
+    panel.  Same layouts/canonical conventions as
+    ``matmul1p5d.omega_s_local``.
+    """
+    n_r = grid.n_om if canonical == "omegalike" else grid.n_x
+    seq = mm.rot_gather_local(omega_rows, s_panel, grid, n_r=n_r,
+                              canonical=canonical, ring="x",
+                              r_mask=omega_mask, policy=policy)
+    blk_r, blk_c = omega_rows.shape[0], s_panel.shape[1]
+    return seq.reshape(n_r * blk_r, blk_c)              # W col-panel (p, blk_x)
+
+
+def omega_xt_local_sparse(omega_rows, omega_mask, xt_loc, grid: Grid1p5D, *,
+                          policy: matops.MatmulPolicy, scale=1.0):
+    """Y = scale * Omega @ X^T with block-sparse local products.
+
+    ``omega_rows``: fixed Omega-like (blk_om, p); ``omega_mask``: its
+    (blk_om/bs, p/bs) occupancy; ``xt_loc``: rotating X^T row-block.
+    Same schedule as ``matmul1p5d.omega_xt_local``.
+    """
+    return mm.omega_xt_local(omega_rows, xt_loc, grid, scale=scale,
+                             omega_mask=omega_mask, policy=policy)

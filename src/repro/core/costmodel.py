@@ -22,7 +22,7 @@ first-class feature (used by the estimator and by benchmarks/fig3).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Iterable
 
 
@@ -169,3 +169,96 @@ def tune(shape: ProblemShape, P: int, m: Machine | None = None,
             f"no feasible replication config for p={shape.p} on P={P} "
             f"(need more chips: min aggregate memory ~{3*shape.p**2} words)")
     return min(configs, key=lambda cb: cb.total)
+
+
+# ---------------------------------------------------------------------------
+# dense vs block-sparse matmul crossover (the matops layer's cost model)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BlockSparseModel:
+    """Constants of the dense↔block-gather crossover for the Ω-side product
+    C = A(p,p) @ B(p,m) with A at block density δ.
+
+      T_dense(p, m)      = 2 p^2 m γ / dense_eff
+      T_sparse(p, m, δ)  = 2 δ p^2 m γ / sparse_eff              (flops)
+                         + δ nb (2 bs m + bs^2) w / B / gather_eff (gathers)
+
+    with nb = ceil(p/bs)^2 total blocks, γ/w/B the machine's seconds-per-
+    flop / word bytes / HBM bandwidth.  The *_eff fractions are achieved
+    efficiency relative to machine peak, so the constants transfer across
+    machines of similar balance; ``calibrate_block_model`` refits them from
+    a ``benchmarks/sparse_crossover.py`` sweep on the actual hardware.
+    Defaults are deliberately conservative (the modeled crossover sits
+    below the measured one), so ``sparse_matmul="auto"`` never routes a
+    product through the block path above the real break-even density.
+    """
+    dense_eff: float = 0.85       # dense matmul fraction-of-peak
+    sparse_eff: float = 0.45      # block-gather matmul fraction-of-peak
+    gather_eff: float = 0.50      # block gather/scatter fraction of HBM bw
+
+
+def _nb_total(p: int, block_size: int) -> int:
+    return (-(-p // block_size)) ** 2
+
+
+def dense_matmul_time(p: int, m: int, machine: Machine | None = None,
+                      model: BlockSparseModel | None = None) -> float:
+    machine = machine or Machine()
+    model = model or BlockSparseModel()
+    return 2.0 * p * p * m * machine.gamma / model.dense_eff
+
+
+def blocksparse_matmul_time(p: int, m: int, density: float, block_size: int,
+                            machine: Machine | None = None,
+                            model: BlockSparseModel | None = None) -> float:
+    machine = machine or Machine()
+    model = model or BlockSparseModel()
+    bs = block_size
+    flops = 2.0 * density * p * p * m * machine.gamma / model.sparse_eff
+    gathered_bytes = (density * _nb_total(p, bs) * (2.0 * bs * m + bs * bs)
+                      * machine.word_bytes)
+    return flops + gathered_bytes / machine.hbm_bw / model.gather_eff
+
+
+def crossover_density(p: int, m: int, block_size: int,
+                      machine: Machine | None = None,
+                      model: BlockSparseModel | None = None) -> float:
+    """Block density δ* at which T_sparse(δ*) = T_dense — the routing
+    threshold of ``sparse_matmul="auto"``.  Both sides are linear in δ, so
+    δ* = T_dense / T_sparse(δ=1), clamped to [0, 1]."""
+    td = dense_matmul_time(p, m, machine, model)
+    ts1 = blocksparse_matmul_time(p, m, 1.0, block_size, machine, model)
+    if ts1 <= 0.0:
+        return 1.0
+    return max(0.0, min(1.0, td / ts1))
+
+
+def calibrate_block_model(rows, machine: Machine | None = None
+                          ) -> BlockSparseModel:
+    """Refit :class:`BlockSparseModel` from measured sweep rows (dicts with
+    ``p``, ``m``, ``block_size``, ``density``, ``t_dense``, ``t_sparse``) —
+    the output of ``benchmarks/sparse_crossover.py``."""
+    import numpy as np
+
+    machine = machine or Machine()
+    rows = [r for r in rows if r.get("t_dense", 0) > 0 and
+            r.get("t_sparse", 0) > 0]
+    if not rows:
+        raise ValueError("no usable rows to calibrate from")
+    dense_effs = [2.0 * r["p"] ** 2 * r["m"] * machine.gamma / r["t_dense"]
+                  for r in rows]
+    dense_eff = float(np.median(dense_effs))
+    # least squares for the two sparse-path coefficients
+    a = np.array([[2.0 * r["density"] * r["p"] ** 2 * r["m"] * machine.gamma,
+                   r["density"] * _nb_total(r["p"], r["block_size"])
+                   * (2.0 * r["block_size"] * r["m"] + r["block_size"] ** 2)
+                   * machine.word_bytes / machine.hbm_bw]
+                  for r in rows])
+    y = np.array([r["t_sparse"] for r in rows])
+    coef, *_ = np.linalg.lstsq(a, y, rcond=None)
+    inv_sparse_eff = max(float(coef[0]), 1e-12)
+    inv_gather_eff = max(float(coef[1]), 1e-12)
+    return BlockSparseModel(dense_eff=max(dense_eff, 1e-12),
+                            sparse_eff=1.0 / inv_sparse_eff,
+                            gather_eff=1.0 / inv_gather_eff)

@@ -33,18 +33,18 @@ so reported objectives match the reference solver.
 from __future__ import annotations
 
 import warnings
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from ..comm import matmul1p5d as mm
+from ..comm import sparse1p5d as sp
 from ..comm.compat import axis_size, shard_map, use_mesh
 from ..comm.grid import Grid1p5D
+from . import matops
 from .costmodel import Machine, ProblemShape, tune
 from .prox import ProxResult, VariantOps, guard_nonpos_diag, prox_gradient
 
@@ -60,6 +60,28 @@ class FitResult(NamedTuple):
     g_final: jax.Array
     variant: str
     grid: Grid1p5D
+    block_density: jax.Array | float = 1.0
+
+
+def _shard_policy(policy: matops.MatmulPolicy | None,
+                  shard_shape: tuple[int, int],
+                  also_divide: tuple[int, ...] = ()
+                  ) -> matops.MatmulPolicy | None:
+    """The policy actually usable on a per-device Ω shard: the mask is
+    rotated/sliced at block granularity inside the ring loops, so the block
+    grid must tile the shard (and any ``also_divide`` slice widths) exactly;
+    otherwise fall back to dense."""
+    if policy is None or not policy.enabled:
+        return None
+    bs = policy.block_size
+    if any(d % bs for d in tuple(shard_shape) + tuple(also_divide)):
+        warnings.warn(
+            f"sparse_matmul block_size={bs} does not tile the local Omega "
+            f"shard {shard_shape} (slice widths {also_divide}); falling back "
+            f"to the dense path (pick a block size dividing p_pad/n_blocks)",
+            stacklevel=3)
+        return None
+    return policy
 
 
 # ---------------------------------------------------------------------------
@@ -146,20 +168,56 @@ def _pmin_om(v):
     return lax.pmin(v, ("i", "k"))
 
 
+def _dist_sparse_ops(policy: matops.MatmulPolicy, use_pallas: bool, dtype,
+                     diag_mask_of, psum, prox):
+    """(prox_stats, mask_of, density_of) shared by the Cov and Obs drivers —
+    only the diag-mask layout and the psum axes differ between variants."""
+    bs = policy.block_size
+
+    def prox_stats(z, alpha, data):
+        if use_pallas:
+            # occupancy harvested for free from the fused kernel's nnz lane
+            from ..kernels import ops as kops
+            out, _, _, _, _, bnnz = kops.fused_prox_stats(
+                z, diag_mask_of(), alpha, block=(bs, bs))
+            return out, (bnnz > 0).astype(dtype)
+        out = prox(z, alpha, data)
+        return out, matops.block_mask(out, bs)
+
+    def mask_of(omega_loc, data):
+        return matops.block_mask(omega_loc, bs)
+
+    def density_of(mask):
+        # numerator and denominator both count each Omega block once per
+        # partitioning team, so replication layers cancel in the ratio
+        nnz = psum(jnp.sum((mask > 0).astype(jnp.float32)))
+        total = psum(jnp.asarray(float(mask.size), jnp.float32))
+        return nnz / total
+
+    return prox_stats, mask_of, density_of
+
+
 # ---------------------------------------------------------------------------
 # Cov variant (Algorithm 2)
 # ---------------------------------------------------------------------------
 
 def _cov_local_ops(grid: Grid1p5D, p_pad: int, p_real: int, lam2, dtype,
-                   use_pallas: bool = False) -> VariantOps:
+                   use_pallas: bool = False,
+                   sparse_matmul: matops.MatmulPolicy | None = None
+                   ) -> VariantOps:
     blk = p_pad // grid.n_x
     n_pad_diag = p_pad - p_real
+    policy = _shard_policy(sparse_matmul, (p_pad, blk))
 
-    def aux_of(omega_panel, data):
+    def aux_of(omega_panel, data, mask=None):
         # Figure 1: local transpose converts the column panel to the row
         # block the rotation consumes (iterates are symmetric).
         omega_rows = omega_panel.T
-        return mm.omega_s_local(omega_rows, data["s"], grid, canonical="xlike")
+        if mask is None:
+            return mm.omega_s_local(omega_rows, data["s"], grid,
+                                    canonical="xlike")
+        return sp.omega_s_local_sparse(omega_rows, mask.T, data["s"], grid,
+                                       canonical="xlike", policy=policy)
 
     def g_of(omega_panel, w_panel, data):
         diag = _local_diag_panel_x(omega_panel, blk)
@@ -192,7 +250,12 @@ def _cov_local_ops(grid: Grid1p5D, p_pad: int, p_real: int, lam2, dtype,
         st = jnp.sign(z) * jnp.maximum(jnp.abs(z) - alpha, 0.0)
         return st * (1.0 - diag_mask) + z * diag_mask
 
-    return VariantOps(aux_of, g_of, grad_of, dot, prox)
+    if policy is None:
+        return VariantOps(aux_of, g_of, grad_of, dot, prox)
+    return VariantOps(aux_of, g_of, grad_of, dot, prox, *_dist_sparse_ops(
+        policy, use_pallas, dtype,
+        lambda: _diag_mask_panel_x(p_pad, blk, p_real, dtype)[0],
+        _psum_x, prox))
 
 
 # ---------------------------------------------------------------------------
@@ -200,13 +263,22 @@ def _cov_local_ops(grid: Grid1p5D, p_pad: int, p_real: int, lam2, dtype,
 # ---------------------------------------------------------------------------
 
 def _obs_local_ops(grid: Grid1p5D, p_pad: int, p_real: int, n: int, lam2,
-                   dtype, use_pallas: bool = False) -> VariantOps:
+                   dtype, use_pallas: bool = False,
+                   sparse_matmul: matops.MatmulPolicy | None = None
+                   ) -> VariantOps:
     blk = p_pad // grid.n_om
     n_pad_diag = p_pad - p_real
+    # the reduce-flavor rotation slices Omega at blk_x granularity, so the
+    # mask slice must land on block boundaries too
+    policy = _shard_policy(sparse_matmul, (blk, p_pad),
+                           also_divide=(p_pad // grid.n_x,))
 
-    def aux_of(omega_rows, data):
+    def aux_of(omega_rows, data, mask=None):
         xt_loc = data["x"].T                      # local transpose
-        return mm.omega_xt_local(omega_rows, xt_loc, grid)   # Y, unnormalized
+        if mask is None:
+            return mm.omega_xt_local(omega_rows, xt_loc, grid)  # Y, unnorm.
+        return sp.omega_xt_local_sparse(omega_rows, mask, xt_loc, grid,
+                                        policy=policy)
 
     def g_of(omega_rows, y_rows, data):
         diag = _local_diag_rows_om(omega_rows, blk)
@@ -240,7 +312,12 @@ def _obs_local_ops(grid: Grid1p5D, p_pad: int, p_real: int, n: int, lam2,
         st = jnp.sign(z) * jnp.maximum(jnp.abs(z) - alpha, 0.0)
         return st * (1.0 - diag_mask) + z * diag_mask
 
-    return VariantOps(aux_of, g_of, grad_of, dot, prox)
+    if policy is None:
+        return VariantOps(aux_of, g_of, grad_of, dot, prox)
+    return VariantOps(aux_of, g_of, grad_of, dot, prox, *_dist_sparse_ops(
+        policy, use_pallas, dtype,
+        lambda: _diag_mask_rows_om(p_pad, blk, p_real, dtype)[0],
+        _psum_om, prox))
 
 
 # ---------------------------------------------------------------------------
@@ -249,7 +326,7 @@ def _obs_local_ops(grid: Grid1p5D, p_pad: int, p_real: int, n: int, lam2,
 
 def _scalar_specs():
     return ProxResult(omega=None, iters=P(), ls_total=P(), converged=P(),
-                      g_final=P(), delta_final=P())
+                      g_final=P(), delta_final=P(), block_density=P())
 
 
 def _pad_omega0(omega0, p: int, p_pad: int, dtype):
@@ -277,9 +354,12 @@ def fit_cov(
     warm_start_tau: bool = False,
     use_pallas: bool = False,
     omega0: jax.Array | None = None,
+    sparse_matmul: matops.MatmulPolicy | None = None,
 ) -> FitResult:
     """Distributed Cov solve (Algorithm 2). ``s`` is the (p, p) sample cov.
-    ``omega0`` optionally warm-starts the iterates (e.g. along a lam1 path)."""
+    ``omega0`` optionally warm-starts the iterates (e.g. along a lam1 path).
+    ``sparse_matmul`` routes the W = Omega S rotation through the
+    block-sparse local products of ``comm.sparse1p5d``."""
     if grid.c_x != grid.c_omega:
         raise ValueError("Cov keeps Omega in the X-like layout: c_x == c_omega")
     mesh = mesh or grid.make_mesh()
@@ -290,7 +370,7 @@ def fit_cov(
         s = jnp.pad(s, ((0, p_pad - p), (0, p_pad - p)))
     blk = p_pad // grid.n_x
     ops = _cov_local_ops(grid, p_pad, p, jnp.asarray(lam2, dtype), dtype,
-                         use_pallas)
+                         use_pallas, sparse_matmul)
 
     def solve_local(om0_panel, s_panel):
         return prox_gradient(
@@ -317,7 +397,8 @@ def fit_cov(
     with use_mesh(mesh):
         res = jax.jit(fn)(*args)
     return FitResult(res.omega[:p, :p], res.iters, res.ls_total,
-                     res.converged, res.g_final, "cov", grid)
+                     res.converged, res.g_final, "cov", grid,
+                     res.block_density)
 
 
 def fit_obs(
@@ -333,9 +414,12 @@ def fit_obs(
     warm_start_tau: bool = False,
     use_pallas: bool = False,
     omega0: jax.Array | None = None,
+    sparse_matmul: matops.MatmulPolicy | None = None,
 ) -> FitResult:
     """Distributed Obs solve (Algorithm 3). ``x`` is the (n, p) data matrix.
-    ``omega0`` optionally warm-starts the iterates (e.g. along a lam1 path)."""
+    ``omega0`` optionally warm-starts the iterates (e.g. along a lam1 path).
+    ``sparse_matmul`` routes the Y = Omega X^T rotation through the
+    block-sparse local products of ``comm.sparse1p5d``."""
     mesh = mesh or grid.make_mesh()
     n, p = x.shape
     p_pad = grid.pad_p(p)
@@ -344,7 +428,7 @@ def fit_obs(
         x = jnp.pad(x, ((0, 0), (0, p_pad - p)))
     blk = p_pad // grid.n_om
     ops = _obs_local_ops(grid, p_pad, p, n, jnp.asarray(lam2, dtype), dtype,
-                         use_pallas)
+                         use_pallas, sparse_matmul)
 
     def solve_local(om0_rows, x_loc):
         return prox_gradient(
@@ -369,7 +453,8 @@ def fit_obs(
     with use_mesh(mesh):
         res = jax.jit(fn)(*args)
     return FitResult(res.omega[:p, :p], res.iters, res.ls_total,
-                     res.converged, res.g_final, "obs", grid)
+                     res.converged, res.g_final, "obs", grid,
+                     res.block_density)
 
 
 # ---------------------------------------------------------------------------

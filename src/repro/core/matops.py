@@ -1,0 +1,188 @@
+"""Sparsity-aware matmul dispatch for the Ω-side products (the matops layer).
+
+HP-CONCORD's dominant cost is the ΩŜ / ΩXᵀ product, and the iterate Ω
+becomes extremely sparse as the solve proceeds — the regime the paper's
+1.28M-dimension runs live in.  This module turns that emergent sparsity
+into skipped work:
+
+  * ``block_mask(a, bs)``       — block-occupancy mask of a matrix (one bit
+                                  per bs x bs tile).  The solver harvests it
+                                  for free from the prox step (the fused
+                                  Pallas prox kernel emits per-tile nnz
+                                  counts; the jnp path computes it in one
+                                  cheap pass).
+  * ``masked_matmul(...)``      — the block-gather product: gather only the
+                                  occupied tiles of A (up to a static
+                                  capacity), batched-matmul them against the
+                                  matching row-blocks of B, scatter-add by
+                                  block row.  Work is proportional to the
+                                  capacity, not p^2.  This is the jittable
+                                  fallback of the Pallas block-CSR kernel
+                                  (``kernels.blocksparse_matmul``), which
+                                  needs host-side CSR construction.
+  * ``matmul(a, b, mask, policy)`` — the dispatch: a ``lax.cond``/``switch``
+                                  on the *observed* block density routes to
+                                  the dense path above the crossover
+                                  threshold and to the block-gather path
+                                  (with the smallest capacity tier that
+                                  provably covers the occupied blocks)
+                                  below it.  Both branches are exact: the
+                                  sparse branch only ever runs when its
+                                  capacity bounds the occupied-block count.
+
+``MatmulPolicy`` is a hashable NamedTuple so it can ride through ``jax.jit``
+static arguments (``solve_reference(sparse_matmul=...)``) and shard_map'd
+distributed drivers alike.  The crossover threshold for ``mode="auto"`` is
+produced by ``core.costmodel.crossover_density`` (calibrated by
+``benchmarks/sparse_crossover.py``).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+#: capacity ladder, as fractions of the policy threshold.  The dispatch
+#: picks the smallest rung whose capacity covers the observed occupied
+#: blocks, so late (very sparse) iterations do proportionally less work
+#: instead of always paying for the full threshold capacity.
+TIER_FRACTIONS = (0.125, 0.25, 0.5, 1.0)
+
+
+class MatmulPolicy(NamedTuple):
+    """Static (hashable) routing policy for Ω-side products.
+
+    mode        "off" — always dense; "on" — block-sparse below
+                ``threshold``; "auto" — same mechanics, but the threshold
+                came from the cost model's dense↔block-sparse crossover.
+    block_size  tile edge of the occupancy mask (MXU-aligned, 128, on TPU;
+                anything that divides the operand on CPU tests).
+    threshold   block-density crossover: observed density above it takes
+                the dense path.
+    """
+    mode: str = "off"
+    block_size: int = 128
+    threshold: float = 0.25
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "off"
+
+
+DENSE = MatmulPolicy()
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad2(a, rows: int, cols: int):
+    r, c = a.shape
+    if r == rows and c == cols:
+        return a
+    return jnp.pad(a, ((0, rows - r), (0, cols - c)))
+
+
+def block_mask(a, block_size: int):
+    """Block-occupancy mask: out[i, j] = 1 iff tile (i, j) has any nonzero.
+
+    Shape is (cdiv(r, bs), cdiv(c, bs)); partial edge tiles are zero-padded
+    (padding never flips a tile on).  Semantically identical to the per-tile
+    nnz counts the fused prox kernel emits (``kernels.softthresh``).
+    """
+    r, c = a.shape
+    bs = block_size
+    nbr, nbc = _cdiv(r, bs), _cdiv(c, bs)
+    ap = _pad2(a, nbr * bs, nbc * bs)
+    tiles = jnp.abs(ap).reshape(nbr, bs, nbc, bs)
+    return (tiles.max(axis=(1, 3)) > 0).astype(a.dtype)
+
+
+def block_density(mask):
+    """Fraction of occupied blocks (float32 scalar)."""
+    return jnp.mean((mask > 0).astype(jnp.float32))
+
+
+def capacity_tiers(total_blocks: int, threshold: float) -> list[int]:
+    """Ascending block capacities the dispatch may gather (deduplicated,
+    all < total_blocks — a capacity of the full grid saves nothing)."""
+    caps = sorted({
+        max(1, math.ceil(threshold * total_blocks * f))
+        for f in TIER_FRACTIONS
+    })
+    return [c for c in caps if c < total_blocks]
+
+
+def masked_matmul(a, b, mask, *, block_size: int, capacity: int):
+    """Block-gather product: C = A @ B using only occupied bs x bs tiles
+    of A (up to ``capacity`` of them, occupied-first).
+
+    Correct whenever the occupied-block count is <= capacity: unoccupied
+    tiles of A are exactly zero by construction of the mask, and gathered
+    padding picks are zero-masked, so the result equals the dense product
+    up to float summation order.  Cost: O(capacity * bs^2 * m) flops plus
+    the gathers — i.e. proportional to nnz(Ω) instead of p^2.
+    """
+    p, k = a.shape
+    kb, m = b.shape
+    bs = block_size
+    nbr, nbc = mask.shape
+    ap = _pad2(a, nbr * bs, nbc * bs)
+    bp = _pad2(b, nbc * bs, m)
+    occupied = mask.reshape(-1) > 0
+    order = jnp.argsort(~occupied)            # occupied block ids first
+    idx = order[:capacity]
+    r_idx = idx // nbc
+    c_idx = idx % nbc
+    a4 = ap.reshape(nbr, bs, nbc, bs)
+    vals = a4[r_idx, :, c_idx, :]             # (capacity, bs, bs) gather
+    vals = vals * occupied[idx][:, None, None].astype(vals.dtype)
+    b3 = bp.reshape(nbc, bs, m)
+    prods = jnp.einsum("nij,njm->nim", vals, b3[c_idx])
+    out = jax.ops.segment_sum(prods, r_idx, num_segments=nbr)
+    return out.reshape(nbr * bs, m)[:p]
+
+
+def matmul(a, b, *, mask=None, policy: MatmulPolicy | None = None):
+    """The Ω-side product dispatch.
+
+    Dense ``a @ b`` when the policy is off (or no mask is available);
+    otherwise a ``lax.switch`` on the observed block density of ``mask``:
+    density above ``policy.threshold`` falls back to the dense path, below
+    it the block-gather path runs with the smallest capacity tier that
+    covers the occupied blocks.  Exact either way (see ``masked_matmul``).
+    """
+    if policy is None or not policy.enabled or mask is None:
+        return a @ b
+    bs = policy.block_size
+    nbr, nbc = _cdiv(a.shape[0], bs), _cdiv(a.shape[1], bs)
+    if mask.shape != (nbr, nbc):
+        raise ValueError(
+            f"mask shape {mask.shape} does not tile operand {a.shape} at "
+            f"block_size={bs} (want {(nbr, nbc)})")
+    total = nbr * nbc
+    caps = capacity_tiers(total, policy.threshold)
+    if not caps:
+        return a @ b
+
+    # Rung selection compares INTEGER occupied-block counts against the
+    # integer capacities (a float density ratio loses ulps past 2^24
+    # blocks and could under-select a rung, silently dropping occupied
+    # blocks): rung i is the first with caps[i] >= occupied; past the
+    # last rung (occupied > ceil(threshold * total)) -> dense.
+    occupied = jnp.sum((mask > 0).astype(jnp.int32))
+    bounds = jnp.asarray(caps, jnp.int32)
+    ix = jnp.searchsorted(bounds, occupied, side="left")
+    ix = jnp.minimum(ix, len(caps))
+
+    def _make_sparse(cap):
+        def _sparse(a_, b_, m_):
+            return masked_matmul(a_, b_, m_, block_size=bs, capacity=cap)
+        return _sparse
+
+    branches = [_make_sparse(c) for c in caps]
+    branches.append(lambda a_, b_, m_: a_ @ b_)
+    return lax.switch(ix, branches, a, b, mask)

@@ -22,7 +22,6 @@ Two evaluation modes mirror the paper's variants:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax

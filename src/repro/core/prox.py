@@ -4,7 +4,7 @@ The loop is generic over a ``VariantOps`` bundle so that the single-device
 reference (this file), the distributed Cov driver and the distributed Obs
 driver (core/distributed.py) all share identical control flow:
 
-    aux_of(omega, data)        -> aux      # the per-line-search product
+    aux_of(omega, data[, mask]) -> aux     # the per-line-search product
                                            #   cov: W = Omega @ S
                                            #   obs: Y = Omega @ X^T
     g_of(omega, aux, data)     -> scalar   # smooth objective from aux
@@ -15,6 +15,21 @@ driver (core/distributed.py) all share identical control flow:
                                            #   obs: forms Z = Y @ X / n, Z^T
     dot(a, b)                  -> scalar   # global <A, B> (psum'd on shards)
     prox(z, alpha, data)       -> array    # prox of alpha*||.||_1 off-diag
+
+Three optional ops switch on the sparsity-aware matmul path (core.matops):
+
+    prox_stats(z, alpha, data) -> (array, mask)   # prox + the harvested
+                                           # block-occupancy mask of the
+                                           # new iterate (free with the
+                                           # fused Pallas prox kernel)
+    mask_of(omega, data)       -> mask     # occupancy of a warm start
+    density_of(mask)           -> scalar   # GLOBAL block density (psum'd
+                                           # on shards)
+
+When ``prox_stats`` is set, the loop threads the mask of the current
+iterate through the carry and hands it to ``aux_of`` so every Ω-side
+product can route through the block-sparse kernels once the observed
+density crosses the policy threshold.
 
 The distributed drivers run this exact function INSIDE shard_map: `omega`
 and `aux` are then per-device shards and the ops close over collectives.
@@ -30,6 +45,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import matops
 from .objective import (
     gradient_from_w,
     prox_l1_offdiag,
@@ -44,6 +60,9 @@ class VariantOps(NamedTuple):
     grad_of: Callable
     dot: Callable
     prox: Callable
+    prox_stats: Callable | None = None    # enables the block-sparse path
+    mask_of: Callable | None = None
+    density_of: Callable | None = None
 
 
 class ProxResult(NamedTuple):
@@ -53,11 +72,13 @@ class ProxResult(NamedTuple):
     converged: jax.Array
     g_final: jax.Array
     delta_final: jax.Array
+    block_density: jax.Array = 1.0  # observed final block density (1.0 dense)
 
 
 class _Carry(NamedTuple):
     omega: jax.Array
     aux: jax.Array
+    mask: jax.Array | None
     g_val: jax.Array
     step: jax.Array
     ls_total: jax.Array
@@ -69,6 +90,7 @@ class _LsCarry(NamedTuple):
     tau: jax.Array
     omega_new: jax.Array
     aux_new: jax.Array
+    mask_new: jax.Array | None
     g_new: jax.Array
     accepted: jax.Array
     trials: jax.Array
@@ -100,7 +122,13 @@ def prox_gradient(
     (beyond-paper knob, still provably convergent by the same argument).
     """
     dtype = jnp.result_type(omega0)
-    aux0 = ops.aux_of(omega0, data)
+    sparse = ops.prox_stats is not None
+    if sparse:
+        mask0 = ops.mask_of(omega0, data)
+        aux0 = ops.aux_of(omega0, data, mask0)
+    else:
+        mask0 = None
+        aux0 = ops.aux_of(omega0, data)
     g0 = ops.g_of(omega0, aux0, data)
 
     def ls_cond(ls: _LsCarry):
@@ -116,8 +144,14 @@ def prox_gradient(
         )
 
         def ls_try(tau):
-            cand = ops.prox(carry.omega - tau * grad, tau * lam1, data)
-            aux_c = ops.aux_of(cand, data)
+            z = carry.omega - tau * grad
+            if sparse:
+                cand, mask_c = ops.prox_stats(z, tau * lam1, data)
+                aux_c = ops.aux_of(cand, data, mask_c)
+            else:
+                cand = ops.prox(z, tau * lam1, data)
+                mask_c = None
+                aux_c = ops.aux_of(cand, data)
             g_c = ops.g_of(cand, aux_c, data)
             diff = cand - carry.omega
             rhs = (
@@ -125,18 +159,19 @@ def prox_gradient(
                 + ops.dot(diff, grad)
                 + ops.dot(diff, diff) / (2.0 * tau)
             )
-            return cand, aux_c, g_c, g_c <= rhs
+            return cand, aux_c, mask_c, g_c, g_c <= rhs
 
         def ls_body(ls: _LsCarry) -> _LsCarry:
             tau = ls.tau * 0.5
-            cand, aux_c, g_c, ok = ls_try(tau)
-            return _LsCarry(tau, cand, aux_c, g_c, ok, ls.trials + 1)
+            cand, aux_c, mask_c, g_c, ok = ls_try(tau)
+            return _LsCarry(tau, cand, aux_c, mask_c, g_c, ok, ls.trials + 1)
 
-        cand0, aux_c0, g_c0, ok0 = ls_try(tau0)
+        cand0, aux_c0, mask_c0, g_c0, ok0 = ls_try(tau0)
         ls = jax.lax.while_loop(
             ls_cond,
             ls_body,
-            _LsCarry(tau0, cand0, aux_c0, g_c0, ok0, jnp.asarray(1, jnp.int32)),
+            _LsCarry(tau0, cand0, aux_c0, mask_c0, g_c0, ok0,
+                     jnp.asarray(1, jnp.int32)),
         )
 
         diff = ls.omega_new - carry.omega
@@ -149,11 +184,15 @@ def prox_gradient(
         aux_next = jax.tree.map(
             lambda a, b: jnp.where(ls.accepted, a, b), ls.aux_new, carry.aux
         )
+        mask_next = jax.tree.map(
+            lambda a, b: jnp.where(ls.accepted, a, b), ls.mask_new, carry.mask
+        )
         g_next = jnp.where(ls.accepted, ls.g_new, carry.g_val)
         delta = jnp.where(ls.accepted, delta, jnp.asarray(0.0, dtype))
         return _Carry(
             omega=omega_next,
             aux=aux_next,
+            mask=mask_next,
             g_val=g_next,
             step=carry.step + 1,
             ls_total=carry.ls_total + ls.trials,
@@ -167,6 +206,7 @@ def prox_gradient(
     init = _Carry(
         omega=omega0,
         aux=aux0,
+        mask=mask0,
         g_val=g0,
         step=jnp.asarray(0, jnp.int32),
         ls_total=jnp.asarray(0, jnp.int32),
@@ -174,6 +214,12 @@ def prox_gradient(
         tau_prev=jnp.asarray(tau_init, dtype),
     )
     final = jax.lax.while_loop(outer_cond, outer_body, init)
+    if sparse:
+        density_of = ops.density_of or (lambda m: jnp.mean((m > 0).astype(
+            jnp.float32)))
+        density = density_of(final.mask)
+    else:
+        density = jnp.asarray(1.0, jnp.float32)
     return ProxResult(
         omega=final.omega,
         iters=final.step,
@@ -181,6 +227,7 @@ def prox_gradient(
         converged=final.delta < tol,
         g_final=final.g_val,
         delta_final=final.delta,
+        block_density=density,
     )
 
 
@@ -196,11 +243,43 @@ def _ref_prox(z, alpha, data):
     return prox_l1_offdiag(z, alpha)
 
 
-def cov_ops() -> VariantOps:
-    """Reference Cov variant: data = {'s': S, 'lam2': lam2}."""
+def _ref_sparse_ops(policy: matops.MatmulPolicy, use_pallas: bool):
+    """(prox_stats, mask_of, density_of) for the single-device variants.
 
-    def aux_of(omega, data):
-        return omega @ data["s"]
+    With ``use_pallas`` the occupancy mask is harvested for free from the
+    fused prox kernel's per-tile nnz stats lane; the jnp path computes the
+    same mask in one extra cheap pass (it is the kernel's oracle)."""
+    bs = policy.block_size
+
+    def prox_stats(z, alpha, data):
+        if use_pallas:
+            from ..kernels import ops as kops
+            eye = jnp.eye(z.shape[-1], dtype=z.dtype)
+            out, _, _, _, _, bnnz = kops.fused_prox_stats(
+                z, eye, alpha, block=(bs, bs))
+            return out, (bnnz > 0).astype(z.dtype)
+        out = prox_l1_offdiag(z, alpha)
+        return out, matops.block_mask(out, bs)
+
+    def mask_of(omega, data):
+        return matops.block_mask(omega, bs)
+
+    def density_of(mask):
+        return matops.block_density(mask)
+
+    return prox_stats, mask_of, density_of
+
+
+def cov_ops(sparse_matmul: matops.MatmulPolicy | None = None,
+            use_pallas: bool = False) -> VariantOps:
+    """Reference Cov variant: data = {'s': S, 'lam2': lam2}.
+
+    ``sparse_matmul`` routes W = Omega @ S through the matops block-sparse
+    dispatch, with the occupancy mask maintained by the prox step."""
+    policy = sparse_matmul
+
+    def aux_of(omega, data, mask=None):
+        return matops.matmul(omega, data["s"], mask=mask, policy=policy)
 
     def g_of(omega, w, data):
         g = smooth_objective_cov(omega, w, data["lam2"])
@@ -209,14 +288,22 @@ def cov_ops() -> VariantOps:
     def grad_of(omega, w, data):
         return gradient_from_w(omega, w, data["lam2"])
 
-    return VariantOps(aux_of, g_of, grad_of, _ref_dot, _ref_prox)
+    if policy is None or not policy.enabled:
+        return VariantOps(aux_of, g_of, grad_of, _ref_dot, _ref_prox)
+    return VariantOps(aux_of, g_of, grad_of, _ref_dot, _ref_prox,
+                      *_ref_sparse_ops(policy, use_pallas))
 
 
-def obs_ops() -> VariantOps:
-    """Reference Obs variant: data = {'x': X, 'lam2': lam2}; S never formed."""
+def obs_ops(sparse_matmul: matops.MatmulPolicy | None = None,
+            use_pallas: bool = False) -> VariantOps:
+    """Reference Obs variant: data = {'x': X, 'lam2': lam2}; S never formed.
 
-    def aux_of(omega, data):
-        return omega @ data["x"].T            # Y, unnormalized
+    ``sparse_matmul`` routes Y = Omega @ X^T through the matops dispatch."""
+    policy = sparse_matmul
+
+    def aux_of(omega, data, mask=None):
+        return matops.matmul(omega, data["x"].T, mask=mask,
+                             policy=policy)     # Y, unnormalized
 
     def g_of(omega, y, data):
         g = smooth_objective_obs(omega, y, data["x"].shape[0], data["lam2"])
@@ -227,10 +314,15 @@ def obs_ops() -> VariantOps:
         z = (y @ x) / x.shape[0]              # Z = Omega S
         return gradient_from_w(omega, z, data["lam2"])
 
-    return VariantOps(aux_of, g_of, grad_of, _ref_dot, _ref_prox)
+    if policy is None or not policy.enabled:
+        return VariantOps(aux_of, g_of, grad_of, _ref_dot, _ref_prox)
+    return VariantOps(aux_of, g_of, grad_of, _ref_dot, _ref_prox,
+                      *_ref_sparse_ops(policy, use_pallas))
 
 
-@partial(jax.jit, static_argnames=("variant", "tol", "max_iters", "max_ls", "warm_start_tau"))
+@partial(jax.jit, static_argnames=("variant", "tol", "max_iters", "max_ls",
+                                   "warm_start_tau", "sparse_matmul",
+                                   "use_pallas"))
 def solve_reference(
     s_or_x: jax.Array,
     lam1: float,
@@ -242,18 +334,26 @@ def solve_reference(
     max_iters: int = 500,
     max_ls: int = 30,
     warm_start_tau: bool = False,
+    sparse_matmul: matops.MatmulPolicy | None = None,
+    use_pallas: bool = False,
 ) -> ProxResult:
     """Single-device CONCORD/PseudoNet solve. variant='cov' expects S, 'obs'
     expects X. ``omega0`` warm-starts the iterates (defaults to the identity);
     ``lam1``/``lam2`` and ``omega0`` are traced, so a regularization path over
     same-shape problems reuses one compiled program per (shape, statics) key.
+
+    ``sparse_matmul`` (a hashable :class:`repro.core.matops.MatmulPolicy`)
+    routes the Ω-side product through the block-sparse dispatch once the
+    observed block density of the iterate drops below the policy threshold;
+    ``use_pallas`` additionally harvests the occupancy mask from the fused
+    Pallas prox kernel instead of a separate jnp pass.
     """
     if variant == "cov":
         data = {"s": s_or_x, "lam2": jnp.asarray(lam2, s_or_x.dtype)}
-        ops = cov_ops()
+        ops = cov_ops(sparse_matmul, use_pallas)
     elif variant == "obs":
         data = {"x": s_or_x, "lam2": jnp.asarray(lam2, s_or_x.dtype)}
-        ops = obs_ops()
+        ops = obs_ops(sparse_matmul, use_pallas)
     else:
         raise ValueError(f"unknown variant {variant!r}")
     p = s_or_x.shape[-1]

@@ -29,10 +29,23 @@ import numpy as np
 
 from ..comm.grid import Grid1p5D
 from ..core import distributed as dist
-from ..core import prox
-from ..core.costmodel import Machine, ProblemShape, enumerate_configs, tune
+from ..core import matops, prox
+from ..core.costmodel import (
+    Machine,
+    ProblemShape,
+    crossover_density,
+    enumerate_configs,
+    tune,
+)
 from .config import SolverConfig
 from .report import FitReport
+
+#: |entry| below this counts as a structural zero when observing iterate
+#: density (matches the soft-threshold exact zeros; guards fp noise).
+NNZ_TOL = 1e-8
+
+#: default block-density threshold for sparse_matmul="on"
+DEFAULT_SPARSE_THRESHOLD = 0.25
 
 
 class Problem(NamedTuple):
@@ -111,10 +124,45 @@ def _variant_candidates(problem: Problem, config: SolverConfig) -> tuple:
     return variants
 
 
-def _problem_shape(problem: Problem, lam1: float) -> ProblemShape:
-    return ProblemShape(
-        p=problem.p, n=problem.n,
-        d=dist.estimate_density(problem.p, problem.n, lam1))
+def observed_nnz_per_row(omega) -> float:
+    """Average nonzeros per row of an iterate (the cost model's ``d``)."""
+    om = np.asarray(omega)
+    return max(1.0, float(np.count_nonzero(np.abs(om) > NNZ_TOL))
+               / om.shape[0])
+
+
+def _problem_shape(problem: Problem, lam1: float,
+                   omega0=None) -> ProblemShape:
+    """Cost-model shape for the solve.  With a warm start available (e.g.
+    the previous lambda step on a path), its OBSERVED density replaces the
+    static ``estimate_density`` prior — the tuner then sees the sparsity
+    the iterates actually have."""
+    if omega0 is not None:
+        d = observed_nnz_per_row(omega0)
+    else:
+        d = dist.estimate_density(problem.p, problem.n, lam1)
+    return ProblemShape(p=problem.p, n=problem.n, d=d)
+
+
+def _matmul_policy(config: SolverConfig, p: int,
+                   m: int) -> matops.MatmulPolicy | None:
+    """Resolve the config's sparse_matmul knobs into a static routing
+    policy for an Ω-side product with ``m`` output columns.  ``"auto"``
+    takes its threshold from the cost model's dense↔block-sparse crossover
+    (never routing sparse above the modeled break-even density)."""
+    mode = config.sparse_matmul
+    if mode == "off":
+        return None
+    if mode == "on":
+        thr = (config.sparse_threshold if config.sparse_threshold is not None
+               else DEFAULT_SPARSE_THRESHOLD)
+    else:  # auto
+        thr = crossover_density(p, m, config.sparse_block)
+        if config.sparse_threshold is not None:
+            thr = min(thr, config.sparse_threshold)
+    if thr <= 0.0:
+        return None
+    return matops.MatmulPolicy(mode, config.sparse_block, float(thr))
 
 
 def _check_grid(variant: str, c_x: int, c_omega: int,
@@ -131,17 +179,17 @@ def _check_grid(variant: str, c_x: int, c_omega: int,
 
 
 def _resolve_variant_only(problem: Problem, lam1: float,
-                          config: SolverConfig) -> str:
+                          config: SolverConfig, omega0=None) -> str:
     """Variant for the single-device reference engine (replication moot)."""
     if config.variant != "auto":
         return config.variant
-    best = tune(_problem_shape(problem, lam1), 1, Machine(),
+    best = tune(_problem_shape(problem, lam1, omega0), 1, Machine(),
                 _variant_candidates(problem, config))
     return best.variant
 
 
 def _resolve_variant(problem: Problem, lam1: float, config: SolverConfig,
-                     n_devices: int) -> tuple[str, int, int]:
+                     n_devices: int, omega0=None) -> tuple[str, int, int]:
     """Pin down (variant, c_x, c_omega) for a distributed solve.
 
     User-pinned values are validated (raising on an infeasible grid, never
@@ -157,11 +205,12 @@ def _resolve_variant(problem: Problem, lam1: float, config: SolverConfig,
         if config.variant != "auto":
             return _check_grid(config.variant, config.c_x or 1,
                                config.c_omega or 1, n_devices)
-        best = tune(_problem_shape(problem, lam1), 1, Machine(), variants)
+        best = tune(_problem_shape(problem, lam1, omega0), 1, Machine(),
+                    variants)
         return _check_grid(best.variant, config.c_x or 1,
                            config.c_omega or 1, n_devices)
     cands = [
-        cb for cb in enumerate_configs(_problem_shape(problem, lam1),
+        cb for cb in enumerate_configs(_problem_shape(problem, lam1, omega0),
                                        n_devices, Machine(), variants)
         if (config.c_x is None or cb.c_x == config.c_x)
         and (config.c_omega is None or cb.c_omega == config.c_omega)
@@ -182,9 +231,24 @@ def _offdiag_l1(omega) -> float:
     return float(np.sum(np.abs(om)) - np.sum(np.abs(np.diag(om))))
 
 
-def _report(res, *, lam1, lam2, wall, backend, variant, c_x=1, c_omega=1,
-            n_devices=1) -> FitReport:
+def _report(res, *, lam1, lam2, wall, backend, variant, config=None,
+            c_x=1, c_omega=1, n_devices=1) -> FitReport:
     g = float(res.g_final)
+    config = config or SolverConfig()
+    # Always compute the final estimate's occupancy post hoc: the solver's
+    # in-loop telemetry (res.block_density) reads 1.0 both for genuinely
+    # dense iterates AND whenever the policy was dropped downstream (e.g.
+    # a block size that does not tile the distributed shard), so it cannot
+    # back the report's density column on its own.  One nonzero scan feeds
+    # both the nnz/row and the block-occupancy columns.
+    om = np.asarray(res.omega)
+    nz = np.abs(om) > NNZ_TOL
+    nnz_per_row = max(1.0, float(nz.sum()) / om.shape[0])
+    bs = config.sparse_block
+    edges = np.arange(0, om.shape[0], bs)
+    occ = np.add.reduceat(np.add.reduceat(nz, edges, axis=0),
+                          edges, axis=1) > 0
+    block_density = float(occ.mean())
     return FitReport(
         omega=res.omega,
         lam1=float(lam1), lam2=float(lam2),
@@ -195,6 +259,9 @@ def _report(res, *, lam1, lam2, wall, backend, variant, c_x=1, c_omega=1,
         wall_time_s=float(wall),
         backend=backend, variant=variant,
         c_x=int(c_x), c_omega=int(c_omega), n_devices=int(n_devices),
+        nnz_per_row=nnz_per_row,
+        block_density=block_density,
+        sparse_matmul=config.sparse_matmul,
     )
 
 
@@ -205,7 +272,7 @@ def _report(res, *, lam1, lam2, wall, backend, variant, c_x=1, c_omega=1,
 def reference_backend(problem: Problem, lam1: float, lam2: float,
                       config: SolverConfig, omega0=None) -> FitReport:
     """Single-device jitted solve; the workhorse of warm-started paths."""
-    variant = _resolve_variant_only(problem, lam1, config)
+    variant = _resolve_variant_only(problem, lam1, config, omega0)
     if variant == "cov":
         data = _cast(problem.cov(), config)
     else:
@@ -214,30 +281,37 @@ def reference_backend(problem: Problem, lam1: float, lam2: float,
         data = _cast(problem.x, config)
     if omega0 is not None:
         omega0 = jnp.asarray(omega0, data.dtype)
+    policy = _matmul_policy(
+        config, problem.p, problem.p if variant == "cov" else problem.n)
     t0 = time.perf_counter()
     res = prox.solve_reference(
         data, lam1, lam2, omega0=omega0, variant=variant,
         tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
-        warm_start_tau=config.warm_start_tau)
+        warm_start_tau=config.warm_start_tau,
+        sparse_matmul=policy, use_pallas=config.use_pallas)
     jax.block_until_ready(res.omega)
     wall = time.perf_counter() - t0
     return _report(res, lam1=lam1, lam2=lam2, wall=wall,
-                   backend="reference", variant=variant)
+                   backend="reference", variant=variant, config=config)
 
 
 def distributed_backend(problem: Problem, lam1: float, lam2: float,
                         config: SolverConfig, omega0=None) -> FitReport:
     """1.5D shard_map solve over all (or ``config.n_devices``) devices."""
     n_dev = config.n_devices or len(jax.devices())
-    variant, c_x, c_omega = _resolve_variant(problem, lam1, config, n_dev)
+    variant, c_x, c_omega = _resolve_variant(problem, lam1, config, n_dev,
+                                             omega0)
     grid = Grid1p5D(n_dev, c_x, c_omega)
+    policy = _matmul_policy(
+        config, problem.p, problem.p if variant == "cov" else problem.n)
     if variant == "cov":
         t0 = time.perf_counter()
         res = dist.fit_cov(
             _cast(problem.cov(), config), lam1, lam2, grid=grid,
             tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
             warm_start_tau=config.warm_start_tau,
-            use_pallas=config.use_pallas, omega0=omega0)
+            use_pallas=config.use_pallas, omega0=omega0,
+            sparse_matmul=policy)
     else:
         if problem.x is None:
             raise ValueError("Obs variant requires the data matrix x")
@@ -246,11 +320,12 @@ def distributed_backend(problem: Problem, lam1: float, lam2: float,
             _cast(problem.x, config), lam1, lam2, grid=grid,
             tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
             warm_start_tau=config.warm_start_tau,
-            use_pallas=config.use_pallas, omega0=omega0)
+            use_pallas=config.use_pallas, omega0=omega0,
+            sparse_matmul=policy)
     jax.block_until_ready(res.omega)
     wall = time.perf_counter() - t0
     return _report(res, lam1=lam1, lam2=lam2, wall=wall,
-                   backend="distributed", variant=res.variant,
+                   backend="distributed", variant=res.variant, config=config,
                    c_x=grid.c_x, c_omega=grid.c_omega, n_devices=n_dev)
 
 
@@ -260,7 +335,8 @@ def auto_backend(problem: Problem, lam1: float, lam2: float,
     variant + replication via ``costmodel.tune``, then run on the reference
     engine (one device) or the distributed engine (several)."""
     n_dev = config.n_devices or len(jax.devices())
-    variant, c_x, c_omega = _resolve_variant(problem, lam1, config, n_dev)
+    variant, c_x, c_omega = _resolve_variant(problem, lam1, config, n_dev,
+                                             omega0)
     pinned = config.replace(variant=variant, c_x=c_x, c_omega=c_omega)
     if n_dev == 1:
         return reference_backend(problem, lam1, lam2, pinned, omega0)

@@ -13,6 +13,8 @@ from dataclasses import dataclass
 
 VARIANTS = ("auto", "cov", "obs")
 
+SPARSE_MATMUL_MODES = ("off", "on", "auto")
+
 _DTYPES = ("float32", "float64", "bfloat16")
 
 
@@ -36,7 +38,19 @@ class SolverConfig:
     warm_start_tau warm-start the line-search step size between outer
                    iterations (beyond-paper knob; saves 20-40% trials).
     dtype          compute dtype name (``None`` keeps the input dtype).
-    use_pallas     use the fused Pallas prox kernel in distributed solves.
+    use_pallas     use the fused Pallas prox kernel in solves (also makes
+                   the block-occupancy harvest free, see sparse_matmul).
+    sparse_matmul  Ω-side product routing (the matops layer):
+                   ``"off"`` — always dense; ``"on"`` — block-sparse
+                   below ``sparse_threshold``; ``"auto"`` — threshold from
+                   the cost model's dense↔block-sparse crossover
+                   (``core.costmodel.crossover_density``).
+    sparse_block   occupancy-mask tile edge (128 = MXU-aligned on TPU; on
+                   small/distributed problems it must divide the per-shard
+                   Omega block or the solve falls back to dense).
+    sparse_threshold
+                   block-density crossover for ``"on"`` (default 0.25 when
+                   None); for ``"auto"`` it caps the model's threshold.
     """
     backend: str = "auto"
     variant: str = "auto"
@@ -49,6 +63,9 @@ class SolverConfig:
     warm_start_tau: bool = False
     dtype: str | None = None
     use_pallas: bool = False
+    sparse_matmul: str = "off"
+    sparse_block: int = 128
+    sparse_threshold: float | None = None
 
     def __post_init__(self):
         if not isinstance(self.backend, str) or not self.backend:
@@ -73,6 +90,17 @@ class SolverConfig:
         if self.dtype is not None and self.dtype not in _DTYPES:
             raise ValueError(f"dtype must be one of {_DTYPES} or None, got "
                              f"{self.dtype!r}")
+        if self.sparse_matmul not in SPARSE_MATMUL_MODES:
+            raise ValueError(f"sparse_matmul must be one of "
+                             f"{SPARSE_MATMUL_MODES}, got "
+                             f"{self.sparse_matmul!r}")
+        if not isinstance(self.sparse_block, int) or self.sparse_block < 1:
+            raise ValueError(f"sparse_block must be a positive int, got "
+                             f"{self.sparse_block!r}")
+        if self.sparse_threshold is not None and not (
+                0.0 < self.sparse_threshold <= 1.0):
+            raise ValueError(f"sparse_threshold must be in (0, 1] or None, "
+                             f"got {self.sparse_threshold!r}")
 
     def replace(self, **changes) -> "SolverConfig":
         """Functional update (frozen dataclass)."""

@@ -30,13 +30,23 @@ class FitReport:
     c_omega: int = 1
     n_devices: int = 1
     bic: float | None = None    # filled in by fit_path for model selection
+    nnz_per_row: float | None = None    # observed nnz/row of the estimate
+    block_density: float | None = None  # occupied-block fraction at
+                                        # sparse_block granularity
+    sparse_matmul: str = "off"          # Ω-product routing mode that ran
 
     def summary(self) -> str:
+        dens = ""
+        if self.block_density is not None:
+            dens = (f" density={self.block_density:.3f}"
+                    f"[{self.sparse_matmul}]")
+        if self.nnz_per_row is not None:
+            dens += f" nnz/row={self.nnz_per_row:.1f}"
         return (f"[{self.backend}/{self.variant} c_x={self.c_x} "
                 f"c_omega={self.c_omega}] lam1={self.lam1:g} "
                 f"iters={self.iters} ls={self.ls_total} "
-                f"converged={self.converged} obj={self.objective:.4f} "
-                f"t={self.wall_time_s:.3f}s")
+                f"converged={self.converged} obj={self.objective:.4f}"
+                f"{dens} t={self.wall_time_s:.3f}s")
 
 
 def pseudo_bic(omega, s, n: int, *, tol: float = 1e-8) -> float:

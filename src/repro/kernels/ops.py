@@ -1,8 +1,16 @@
 """jit'd public wrappers for the Pallas kernels.
 
-On a real TPU set ``repro.kernels.ops.INTERPRET = False`` (or pass
-``interpret=False``); this container is CPU-only so interpret mode is the
-default, executing the kernel bodies in Python for correctness validation.
+Interpret mode is resolved lazily, per call: kernels compile natively when
+the active jax backend is TPU and run in interpret mode (kernel bodies
+executed as jax ops, for correctness validation) everywhere else.  The
+check happens at call time, NOT at import time, so importing this module
+never initializes the jax backend and later backend selection (e.g.
+``jax.config.update("jax_platforms", ...)`` after import) is honored.
+
+``set_interpret(True/False)`` pins an explicit module-level override
+(``set_interpret(None)`` restores the backend-derived default), and every
+wrapper still accepts an explicit ``interpret=`` keyword that wins over
+both.
 """
 from __future__ import annotations
 
@@ -12,25 +20,41 @@ from . import blocksparse_matmul as _bsmm
 from . import flash_attention as _fa
 from . import softthresh as _st
 
-# Interpret unless we are actually on TPU.
-INTERPRET = jax.default_backend() != "tpu"
+# Explicit override: None = decide from the active backend at call time.
+_INTERPRET_OVERRIDE: bool | None = None
+
+
+def set_interpret(value: bool | None) -> None:
+    """Pin interpret mode for all kernel wrappers (None = auto per call)."""
+    global _INTERPRET_OVERRIDE
+    if value is not None and not isinstance(value, bool):
+        raise TypeError(f"interpret override must be bool or None, got "
+                        f"{value!r}")
+    _INTERPRET_OVERRIDE = value
+
+
+def interpret_default() -> bool:
+    """Interpret unless overridden or actually running on TPU."""
+    if _INTERPRET_OVERRIDE is not None:
+        return _INTERPRET_OVERRIDE
+    return jax.default_backend() != "tpu"
 
 
 def fused_prox(z, diag_mask, alpha, **kw):
-    kw.setdefault("interpret", INTERPRET)
+    kw.setdefault("interpret", interpret_default())
     return _st.fused_prox(z, diag_mask, alpha, **kw)
 
 
 def fused_prox_stats(z, diag_mask, alpha, **kw):
-    kw.setdefault("interpret", INTERPRET)
+    kw.setdefault("interpret", interpret_default())
     return _st.fused_prox_stats(z, diag_mask, alpha, **kw)
 
 
 def blocksparse_matmul(values, row_idx, col_idx, b, **kw):
-    kw.setdefault("interpret", INTERPRET)
+    kw.setdefault("interpret", interpret_default())
     return _bsmm.blocksparse_matmul(values, row_idx, col_idx, b, **kw)
 
 
 def flash_attention(q, k, v, **kw):
-    kw.setdefault("interpret", INTERPRET)
+    kw.setdefault("interpret", interpret_default())
     return _fa.flash_attention(q, k, v, **kw)

@@ -20,14 +20,30 @@ def fused_prox(z: jax.Array, diag_mask: jax.Array, alpha) -> jax.Array:
     return st * (1.0 - diag_mask) + z * diag_mask
 
 
-def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha):
+def block_nnz(a: jax.Array, block) -> jax.Array:
+    """Per-tile nonzero count on the fused-prox stats grid: tile (i, j) of
+    size block counts nonzeros of a[i*bm:(i+1)*bm, j*bn:(j+1)*bn] (edge
+    tiles zero-padded)."""
+    m, n = a.shape
+    bm = min(block[0], m)
+    bn = min(block[1], n)
+    gm, gn = -(-m // bm), -(-n // bn)
+    ap = jnp.pad(a, ((0, gm * bm - m), (0, gn * bn - n)))
+    tiles = ap.reshape(gm, bm, gn, bn)
+    return jnp.sum((tiles != 0).astype(jnp.float32), axis=(1, 3))
+
+
+def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha,
+                     *, block=(256, 256)):
     """Prox + the objective reduction pieces in one logical pass.
 
-    Returns (out, logdet, l1_offdiag, sumsq, min_diag) where
+    Returns (out, logdet, l1_offdiag, sumsq, min_diag, block_nnz) where
       logdet     = sum over diag of log(out)
       l1_offdiag = sum over off-diag of |out|
       sumsq      = ||out||_F^2
       min_diag   = min over diag of out  (positivity guard)
+      block_nnz  = per-block-tile nonzero counts (the occupancy harvest
+                   the block-sparse matmul dispatch consumes)
     """
     out = fused_prox(z, diag_mask, alpha)
     d = diag_mask > 0
@@ -35,7 +51,7 @@ def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha):
     l1 = jnp.sum(jnp.where(d, 0.0, jnp.abs(out)))
     sumsq = jnp.sum(out * out)
     min_diag = jnp.min(jnp.where(d, out, jnp.inf))
-    return out, logdet, l1, sumsq, min_diag
+    return out, logdet, l1, sumsq, min_diag, block_nnz(out, block)
 
 
 # ---------------------------------------------------------------------------

@@ -21,7 +21,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK = (256, 256)
-STATS_LANES = 128  # lane-aligned stats vector; [0]=logdet [1]=l1 [2]=sumsq [3]=min_diag
+# lane-aligned stats vector;
+#   [0]=logdet [1]=l1 [2]=sumsq [3]=min_diag [4]=tile nnz count
+# lane 4 is the free block-occupancy harvest: with block == the matops
+# block size, stats[..., 4] > 0 IS the block-sparse dispatch mask.
+STATS_LANES = 128
 
 
 def _kernel(alpha_ref, z_ref, mask_ref, out_ref, stats_ref, *, nrows, ncols):
@@ -45,18 +49,25 @@ def _kernel(alpha_ref, z_ref, mask_ref, out_ref, stats_ref, *, nrows, ncols):
     l1 = jnp.sum(jnp.where(is_diag, 0.0, jnp.abs(out)))
     sumsq = jnp.sum(out * out)
     min_diag = jnp.min(jnp.where(is_diag, out, jnp.inf))
+    nnz = jnp.sum(((out != 0.0) & valid).astype(jnp.float32))
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, 1, STATS_LANES), 2)
     stats = jnp.where(lane == 0, logdet, 0.0)
     stats = jnp.where(lane == 1, l1, stats)
     stats = jnp.where(lane == 2, sumsq, stats)
     stats = jnp.where(lane == 3, min_diag, stats)
+    stats = jnp.where(lane == 4, nnz, stats)
     stats_ref[...] = stats.astype(stats_ref.dtype)
 
 
 @partial(jax.jit, static_argnames=("block", "interpret"))
 def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha,
                      *, block=DEFAULT_BLOCK, interpret: bool = True):
-    """Returns (out, logdet, l1_offdiag, sumsq, min_diag)."""
+    """Returns (out, logdet, l1_offdiag, sumsq, min_diag, block_nnz).
+
+    ``block_nnz`` is the (grid_m, grid_n) per-tile nonzero count of the
+    prox output — with ``block`` set to the matops block size it is the
+    block-occupancy mask the sparse matmul dispatch consumes, harvested
+    in the same HBM pass as the prox itself."""
     m, n = z.shape
     bm = min(block[0], m)
     bn = min(block[1], n)
@@ -84,7 +95,8 @@ def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha,
     l1 = jnp.sum(stats[..., 1])
     sumsq = jnp.sum(stats[..., 2])
     min_diag = jnp.min(stats[..., 3])
-    return out, logdet, l1, sumsq, min_diag
+    block_nnz = stats[..., 4]
+    return out, logdet, l1, sumsq, min_diag, block_nnz
 
 
 @partial(jax.jit, static_argnames=("block", "interpret"))

@@ -14,7 +14,6 @@ import numpy as np
 
 from .. import configs as C
 from ..models import lm, transformer as T
-from .mesh import make_host_mesh
 
 
 def serve_batch(cfg, params, prompts, gen: int, max_len: int,

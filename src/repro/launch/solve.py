@@ -37,6 +37,16 @@ def main(argv=None):
     ap.add_argument("--comega", type=int, default=None)
     ap.add_argument("--tol", type=float, default=1e-5)
     ap.add_argument("--max-iters", type=int, default=300)
+    ap.add_argument("--sparse-matmul", default="off",
+                    choices=["off", "on", "auto"],
+                    help="route Ω-side products through the block-sparse "
+                         "matops layer once the observed iterate block "
+                         "density crosses the threshold ('auto' takes the "
+                         "threshold from the cost model crossover)")
+    ap.add_argument("--sparse-block", type=int, default=128,
+                    help="occupancy-mask tile edge for --sparse-matmul")
+    ap.add_argument("--sparse-threshold", type=float, default=None,
+                    help="block-density crossover override in (0, 1]")
     ap.add_argument("--path", default=None, metavar="LAM1S",
                     help="comma-separated lam1 grid: run a warm-started "
                          "regularization path instead of a single fit")
@@ -58,7 +68,9 @@ def main(argv=None):
     config = SolverConfig(
         backend=args.backend, variant=args.variant,
         c_x=args.cx, c_omega=args.comega,
-        tol=args.tol, max_iters=args.max_iters)
+        tol=args.tol, max_iters=args.max_iters,
+        sparse_matmul=args.sparse_matmul, sparse_block=args.sparse_block,
+        sparse_threshold=args.sparse_threshold)
     est = ConcordEstimator(lam1=args.lam1, lam2=args.lam2, config=config)
     x = jnp.asarray(prob.x)
 

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from .. import configs as C
 from ..train.loop import TrainerConfig, train

@@ -183,7 +183,6 @@ class ModelConfig:
         per_dense_mlp = mlp_mult * d * self.d_ff if self.d_ff else 0
         per_expert = mlp_mult * d * self.d_ff_expert
         if self.family == "hybrid":
-            n_shared = self.n_layers // max(self.shared_every, 1)
             n += L * self._ssm_block_params()
             n += per_attn + per_dense_mlp       # ONE shared block
             return n

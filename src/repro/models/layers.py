@@ -581,7 +581,6 @@ def apply_moe(cfg: ModelConfig, p, x, prefix: str = "moe"):
     B, L, d = x.shape
     dt = x.dtype
     E, K = cfg.n_experts, cfg.top_k
-    E_disp = cfg.n_experts_disp
     K_comb = K * (cfg.virtual_split
                   if cfg.expert_sharding == "ep_virtual" else 1)
     T = B * L

@@ -33,7 +33,6 @@ def cross_entropy(cfg: ModelConfig, params, hidden, targets):
     """Mean next-token xent; chunked over the sequence dim when
     cfg.loss_chunk > 0 so the (B, L, V) logits are never all live."""
     B, L, d = hidden.shape
-    V = cfg.vocab
 
     def xent(h, t):
         logits = T.lm_head(cfg, params, h)

@@ -11,7 +11,6 @@ sequence length.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

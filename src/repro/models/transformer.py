@@ -16,7 +16,6 @@ lax.scan with optional jax.checkpoint (remat) around the body.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

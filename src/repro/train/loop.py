@@ -4,7 +4,6 @@ monitoring wired in.  Used by launch/train.py and the examples.
 """
 from __future__ import annotations
 
-import os
 import time
 from dataclasses import dataclass, field
 

@@ -8,7 +8,6 @@ is sharded exactly as far as FSDP shards the weights).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax

@@ -1,13 +1,11 @@
 """Paper Lemmas 3.1-3.5 cost model + tuner (core/costmodel.py)."""
-import math
-
 import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # minimal CPU image — deterministic fallback
     from _hypothesis_fallback import given, settings, st
 
-from repro.core.costmodel import (EDISON, CostBreakdown, Machine,
+from repro.core.costmodel import (EDISON, Machine,
                                   ProblemShape, cov_costs, cov_is_cheaper,
                                   enumerate_configs, obs_costs, tune)
 
@@ -41,14 +39,24 @@ def test_replication_reduces_bandwidth(cx_pow, co_pow):
     cx, co = 2 ** (cx_pow % 4), 2 ** (co_pow % 4)
     if cx * co > P:
         return
+    import math
     s = ProblemShape(p=4096, n=256, d=16, s=10, t=5.0)
     m = Machine()
     base = obs_costs(s, P, 1, 1, m)
     rep = obs_costs(s, P, cx, co, m)
-    # the rotation bandwidth term (first) shrinks with c_omega
-    rot_base = s.s * (s.t + 1) * s.n * s.p / 1
-    rot_rep = s.s * (s.t + 1) * s.n * s.p / co
-    assert rot_rep <= rot_base
+    # the implementation's W decomposes exactly as Lemma 3.3 writes it:
+    # rotation term (shrinks with c_omega) + transpose term
+    def expected_words(cx_, co_):
+        q = max(P / cx_**2, P / co_**2)
+        rot = s.s * (s.t + 1) * s.n * s.p / co_
+        transpose = s.p**2 * (cx_ * co_ / P) * q * math.log2(max(q, 2))
+        return rot, transpose
+    rot_b, tr_b = expected_words(1, 1)
+    rot_r, tr_r = expected_words(cx, co)
+    assert base.words == pytest.approx(rot_b + tr_b)
+    assert rep.words == pytest.approx(rot_r + tr_r)
+    # more Omega replication -> fewer words in the rotation term
+    assert rot_r <= rot_b
 
 
 def test_latency_saving_factor():

@@ -14,7 +14,6 @@ from repro.estimator import (
     SolverConfig,
     available_backends,
     fit,
-    fit_path,
     get_backend,
     register_backend,
 )

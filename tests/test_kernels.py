@@ -1,5 +1,4 @@
 """Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -18,15 +17,38 @@ def test_fused_prox_sweep(shape, dtype, alpha, rng):
     mask[np.arange(p), np.arange(p)] = 1
     z[np.arange(p), np.arange(p)] = \
         np.abs(z[np.arange(p), np.arange(p)]) + 0.1
-    out, ld, l1, ss, md = ops.fused_prox_stats(
+    out, ld, l1, ss, md, bnnz = ops.fused_prox_stats(
         jnp.asarray(z), jnp.asarray(mask), alpha)
-    ro, rld, rl1, rss, rmd = ref.fused_prox_stats(
+    ro, rld, rl1, rss, rmd, rbnnz = ref.fused_prox_stats(
         jnp.asarray(z), jnp.asarray(mask), alpha)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ro), rtol=1e-6)
     np.testing.assert_allclose(float(ld), float(rld), rtol=1e-4)
     np.testing.assert_allclose(float(l1), float(rl1), rtol=1e-4)
     np.testing.assert_allclose(float(ss), float(rss), rtol=1e-4)
     np.testing.assert_allclose(float(md), float(rmd), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(bnnz), np.asarray(rbnnz))
+
+
+@pytest.mark.parametrize("shape,block", [((128, 96), (32, 32)),
+                                         ((100, 70), (32, 32)),
+                                         ((64, 64), (16, 32))])
+def test_fused_prox_block_nnz_is_exact_occupancy(shape, block, rng):
+    """The kernel's nnz stats lane IS the block-occupancy mask: it must
+    match the jnp.nonzero-derived per-tile counts of the prox output."""
+    z = rng.standard_normal(shape).astype(np.float32)
+    p = min(shape)
+    mask = np.zeros(shape, np.float32)
+    mask[np.arange(p), np.arange(p)] = 1
+    out, *_, bnnz = ops.fused_prox_stats(jnp.asarray(z), jnp.asarray(mask),
+                                         0.8, block=block)
+    out_np = np.asarray(out)
+    bm = min(block[0], shape[0])
+    bn = min(block[1], shape[1])
+    gm, gn = -(-shape[0] // bm), -(-shape[1] // bn)
+    expect = np.zeros((gm, gn))
+    for i, j in zip(*np.nonzero(out_np)):
+        expect[i // bm, j // bn] += 1
+    np.testing.assert_array_equal(np.asarray(bnnz), expect)
 
 
 @pytest.mark.parametrize("p,m,bs,density", [

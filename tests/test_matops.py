@@ -1,0 +1,371 @@
+"""The sparsity-aware linear-algebra layer: block-mask exactness, the
+block-gather product vs the dense oracle, crossover dispatch behaviour,
+block-sparse vs dense SOLVE agreement (cov and obs), the cost-model
+crossover, and the lazy kernel interpret mode."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal CPU image — deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from conftest import run_with_devices
+from repro.core import matops
+from repro.core.costmodel import (
+    BlockSparseModel,
+    blocksparse_matmul_time,
+    calibrate_block_model,
+    crossover_density,
+    dense_matmul_time,
+)
+
+
+def _random_block_sparse(rng, p, bs, density):
+    """Dense (p, p) array that is zero outside a random set of bs x bs
+    blocks with expected block density ``density``."""
+    a = rng.standard_normal((p, p)).astype(np.float32)
+    nb = -(-p // bs)
+    keep = rng.random((nb, nb)) < density
+    for r in range(nb):
+        for c in range(nb):
+            if not keep[r, c]:
+                a[r * bs:(r + 1) * bs, c * bs:(c + 1) * bs] = 0
+    return a
+
+
+def _oracle_mask(a, bs):
+    """Block occupancy derived straight from jnp.nonzero coordinates."""
+    p, q = a.shape
+    nbr, nbc = -(-p // bs), -(-q // bs)
+    mask = np.zeros((nbr, nbc), np.float32)
+    rr, cc = np.nonzero(np.asarray(a))
+    mask[rr // bs, cc // bs] = 1.0
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# mask + masked product (the linear-algebra layer itself)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 3), st.sampled_from([4, 8, 16]),
+       st.sampled_from([0.0, 0.1, 0.4, 0.9]))
+@settings(max_examples=12, deadline=None)
+def test_block_mask_matches_nonzero_blocks(seed, bs, density):
+    rng = np.random.default_rng(seed)
+    p = 64 if bs != 16 else 96          # exercise exact and ragged tilings
+    a = _random_block_sparse(rng, p, bs, density)
+    a = a[: p - (seed % 3)]             # ragged rows -> padded edge tiles
+    mask = matops.block_mask(jnp.asarray(a), bs)
+    np.testing.assert_array_equal(np.asarray(mask), _oracle_mask(a, bs))
+
+
+@given(st.integers(0, 3), st.sampled_from([4, 8, 16]),
+       st.sampled_from([0.05, 0.2, 0.5]))
+@settings(max_examples=12, deadline=None)
+def test_masked_matmul_matches_dense(seed, bs, density):
+    """The block-gather product agrees with the dense product to 1e-5 on
+    random sparsity patterns (capacity == exact occupied count)."""
+    rng = np.random.default_rng(seed)
+    p, m = 96, 64
+    a = _random_block_sparse(rng, p, bs, density)
+    b = rng.standard_normal((p, m)).astype(np.float32)
+    mask = matops.block_mask(jnp.asarray(a), bs)
+    cap = max(1, int(np.asarray(mask).sum()))
+    out = matops.masked_matmul(jnp.asarray(a), jnp.asarray(b), mask,
+                               block_size=bs, capacity=cap)
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-5, atol=1e-5)
+
+
+def test_masked_matmul_padding_capacity_overshoot():
+    """Capacity above the occupied count and non-divisible shapes are both
+    handled (zero-masked padding picks, padded edge tiles)."""
+    a = _random_block_sparse(np.random.default_rng(7), 64, 16, 0.2)[:50, :50]
+    b = np.random.default_rng(8).standard_normal((50, 30)).astype(np.float32)
+    mask = matops.block_mask(jnp.asarray(a), 16)
+    out = matops.masked_matmul(jnp.asarray(a), jnp.asarray(b), mask,
+                               block_size=16, capacity=15)
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-5, atol=1e-5)
+
+
+def test_dispatch_takes_dense_path_above_threshold():
+    """Above the crossover threshold the dispatch MUST route dense: the
+    sparse branch's capacity could not cover the occupied blocks, so value
+    equality with the dense product proves the dense branch ran."""
+    r = np.random.default_rng(3)
+    a = _random_block_sparse(r, 64, 8, 0.8)
+    b = r.standard_normal((64, 48)).astype(np.float32)
+    mask = matops.block_mask(jnp.asarray(a), 8)
+    assert float(matops.block_density(mask)) > 0.25
+    policy = matops.MatmulPolicy("on", 8, 0.25)
+    out = jax.jit(
+        lambda a_, b_, m_: matops.matmul(a_, b_, mask=m_, policy=policy)
+    )(jnp.asarray(a), jnp.asarray(b), mask)
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-6, atol=1e-6)
+
+
+def test_dispatch_exact_at_every_tier_capacity_boundary():
+    """The rung selected by the dispatch must cover the occupied blocks
+    EXACTLY at each tier capacity (the boundary where an off-by-one in
+    searchsorted/capacity_tiers would silently drop blocks).  Occupied
+    blocks all carry values, so any dropped block changes the product."""
+    rng = np.random.default_rng(11)
+    p, bs = 64, 8                   # 8x8 = 64 blocks
+    total = (p // bs) ** 2
+    policy = matops.MatmulPolicy("on", bs, 0.5)
+    b = rng.standard_normal((p, 48)).astype(np.float32)
+    fn = jax.jit(lambda a_, b_, m_: matops.matmul(a_, b_, mask=m_,
+                                                  policy=policy))
+    counts = {c for cap in matops.capacity_tiers(total, policy.threshold)
+              for c in (cap, cap + 1)}
+    for nnz in sorted(counts | {1, total - 1}):
+        a = np.zeros((p, p), np.float32)
+        ids = rng.choice(total, size=nnz, replace=False)
+        for blk_id in ids:
+            r, c = divmod(int(blk_id), p // bs)
+            a[r * bs:(r + 1) * bs, c * bs:(c + 1) * bs] = \
+                rng.standard_normal((bs, bs))
+        mask = matops.block_mask(jnp.asarray(a), bs)
+        assert int(np.asarray(mask).sum()) == nnz
+        out = fn(jnp.asarray(a), jnp.asarray(b), mask)
+        np.testing.assert_allclose(np.asarray(out), a @ b,
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# block-sparse solve vs dense solve (cov and obs)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2), st.sampled_from([0.25, 0.35, 0.5]))
+@settings(max_examples=6, deadline=None)
+def test_sparse_solve_matches_dense_solve(seed, lam1):
+    """Property: with sparse_matmul on, the solver output agrees with the
+    dense path to 1e-5 on random problems (random sparsity patterns arise
+    from the iterates themselves), for BOTH cov and obs variants.
+
+    Runs in float64 so summation-order noise cannot flip line-search
+    accepts: sparse and dense then follow identical trajectories and the
+    1e-5 bound is meaningful (f32 fixed-point scatter is ~1e-4 even
+    between two dense variants, see test_prox_solver tolerances)."""
+    from repro.core import graphs
+    from repro.core.prox import solve_reference
+
+    jax.config.update("jax_enable_x64", True)
+    try:
+        prob = graphs.make_problem("chain", p=40, n=120, seed=seed)
+        policy = matops.MatmulPolicy("on", 4, 0.6)
+        for variant, data in (("cov", prob.s), ("obs", prob.x)):
+            arr = jnp.asarray(data, jnp.float64)
+            r0 = solve_reference(arr, lam1, 0.05, variant=variant,
+                                 tol=1e-7, max_iters=400)
+            r1 = solve_reference(arr, lam1, 0.05, variant=variant,
+                                 tol=1e-7, max_iters=400,
+                                 sparse_matmul=policy)
+            np.testing.assert_allclose(np.asarray(r1.omega),
+                                       np.asarray(r0.omega),
+                                       rtol=0, atol=1e-5)
+            assert 0.0 < float(r1.block_density) <= 1.0
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_sparse_solve_f32_same_support_and_objective():
+    """In float32 the trajectories may diverge at line-search margins, but
+    both paths must reach the same minimum: objectives agree tightly and
+    the recovered edge sets match."""
+    from repro.core import graphs
+    from repro.core.objective import full_objective_cov
+    from repro.core.prox import solve_reference
+
+    prob = graphs.make_problem("chain", p=48, n=150, seed=1)
+    s = jnp.asarray(prob.s)
+    policy = matops.MatmulPolicy("on", 4, 0.6)
+    r0 = solve_reference(s, 0.3, 0.05, tol=1e-6, max_iters=300)
+    r1 = solve_reference(s, 0.3, 0.05, tol=1e-6, max_iters=300,
+                         sparse_matmul=policy)
+    f0 = float(full_objective_cov(r0.omega, s, 0.3, 0.05))
+    f1 = float(full_objective_cov(r1.omega, s, 0.3, 0.05))
+    assert abs(f0 - f1) < 1e-3, (f0, f1)
+    np.testing.assert_array_equal(np.abs(np.asarray(r0.omega)) > 1e-4,
+                                  np.abs(np.asarray(r1.omega)) > 1e-4)
+
+
+def test_pallas_harvested_mask_matches_jnp_harvest():
+    """use_pallas harvests the occupancy from the fused prox kernel's nnz
+    lane; the solve must match the jnp-harvested one exactly in routing
+    (same observed density) and to solver accuracy in values."""
+    from repro.core import graphs
+    from repro.core.prox import solve_reference
+
+    prob = graphs.make_problem("chain", p=48, n=150, seed=1)
+    s = jnp.asarray(prob.s)
+    policy = matops.MatmulPolicy("on", 8, 0.6)
+    r_jnp = solve_reference(s, 0.3, 0.05, tol=1e-6, max_iters=300,
+                            sparse_matmul=policy)
+    r_pal = solve_reference(s, 0.3, 0.05, tol=1e-6, max_iters=300,
+                            sparse_matmul=policy, use_pallas=True)
+    assert float(r_jnp.block_density) == float(r_pal.block_density)
+    np.testing.assert_allclose(np.asarray(r_pal.omega),
+                               np.asarray(r_jnp.omega), atol=2e-4)
+
+
+@pytest.mark.slow
+def test_distributed_sparse_matches_dense():
+    run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import graphs, matops
+from repro.core.distributed import fit_cov, fit_obs
+from repro.comm.grid import Grid1p5D
+prob = graphs.make_problem("chain", p=48, n=120, seed=0)
+pol = matops.MatmulPolicy("on", 2, 0.6)
+for cx, co in [(1,1),(2,2)]:
+    g = Grid1p5D(8, cx, co)
+    r0 = fit_cov(jnp.asarray(prob.s), 0.3, 0.05, grid=g, tol=1e-6, max_iters=200)
+    r1 = fit_cov(jnp.asarray(prob.s), 0.3, 0.05, grid=g, tol=1e-6, max_iters=200,
+                 sparse_matmul=pol)
+    assert np.abs(np.asarray(r0.omega)-np.asarray(r1.omega)).max() < 2e-3
+    assert 0.0 < float(r1.block_density) < 1.0
+for cx, co in [(1,1),(4,2),(1,8)]:
+    g = Grid1p5D(8, cx, co)
+    r0 = fit_obs(jnp.asarray(prob.x), 0.3, 0.05, grid=g, tol=1e-6, max_iters=200)
+    r1 = fit_obs(jnp.asarray(prob.x), 0.3, 0.05, grid=g, tol=1e-6, max_iters=200,
+                 sparse_matmul=pol)
+    assert np.abs(np.asarray(r0.omega)-np.asarray(r1.omega)).max() < 2e-3
+    assert 0.0 < float(r1.block_density) < 1.0
+print("OK")
+""", n_devices=8)
+
+
+# ---------------------------------------------------------------------------
+# estimator facade plumbing
+# ---------------------------------------------------------------------------
+
+def test_estimator_reports_density_and_nnz():
+    from repro.core import graphs
+    from repro.estimator import SolverConfig, fit
+
+    prob = graphs.make_problem("chain", p=48, n=150, seed=1)
+    s = jnp.asarray(prob.s)
+    rep = fit(s=s, lam1=0.3, lam2=0.05, n_samples=150, backend="reference",
+              variant="cov", tol=1e-6, sparse_matmul="on", sparse_block=4,
+              sparse_threshold=0.6)
+    assert rep.sparse_matmul == "on"
+    assert rep.nnz_per_row is not None and rep.nnz_per_row >= 1.0
+    assert 0.0 < rep.block_density < 1.0
+    assert "density=" in rep.summary()
+    # dense solves still populate the density column (post hoc)
+    rep0 = fit(s=s, lam1=0.3, lam2=0.05, n_samples=150, backend="reference",
+               variant="cov", tol=1e-6, sparse_block=4)
+    assert 0.0 < rep0.block_density <= 1.0
+    # config validation of the new knobs
+    with pytest.raises(ValueError, match="sparse_matmul"):
+        SolverConfig(sparse_matmul="sometimes")
+    with pytest.raises(ValueError, match="sparse_block"):
+        SolverConfig(sparse_block=0)
+    with pytest.raises(ValueError, match="sparse_threshold"):
+        SolverConfig(sparse_threshold=1.5)
+
+
+def test_observed_density_feeds_model_selection():
+    """A warm start's observed nnz/row replaces the static prior in the
+    cost-model shape (the previous lambda step drives the next tune)."""
+    from repro.core import distributed as dist
+    from repro.estimator.backends import Problem, _problem_shape
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((100, 40)).astype(np.float32)
+    problem = Problem.from_data(x=jnp.asarray(x))
+    prior = _problem_shape(problem, 0.3)
+    assert prior.d == dist.estimate_density(40, 100, 0.3)
+    omega0 = np.eye(40, dtype=np.float32)
+    omega0[0, 1] = omega0[1, 0] = 0.5
+    observed = _problem_shape(problem, 0.3, omega0=omega0)
+    assert observed.d == pytest.approx((40 + 2) / 40)
+
+
+def test_auto_policy_threshold_is_cost_model_crossover():
+    from repro.estimator import SolverConfig
+    from repro.estimator.backends import _matmul_policy
+
+    cfg = SolverConfig(sparse_matmul="auto", sparse_block=128)
+    pol = _matmul_policy(cfg, 4096, 4096)
+    model_thr = crossover_density(4096, 4096, 128)
+    if pol is None:
+        assert model_thr <= 0.0
+    else:
+        assert pol.threshold == pytest.approx(model_thr)
+        # a user cap can only lower it
+        cfg2 = cfg.replace(sparse_threshold=min(0.5, model_thr) / 2)
+        pol2 = _matmul_policy(cfg2, 4096, 4096)
+        assert pol2.threshold <= pol.threshold
+    assert _matmul_policy(SolverConfig(), 4096, 4096) is None
+
+
+# ---------------------------------------------------------------------------
+# cost-model crossover
+# ---------------------------------------------------------------------------
+
+def test_crossover_density_sane_and_monotone():
+    d = crossover_density(2048, 2048, 128)
+    assert 0.0 < d < 1.0
+    # cheaper gathers -> later crossover (sparse pays off at higher density)
+    fast_gather = BlockSparseModel(gather_eff=1.0)
+    slow_gather = BlockSparseModel(gather_eff=0.1)
+    assert crossover_density(2048, 2048, 128, model=fast_gather) > \
+        crossover_density(2048, 2048, 128, model=slow_gather)
+    # at the crossover, modeled times match
+    m, model = 2048, BlockSparseModel()
+    dx = crossover_density(2048, m, 128, model=model)
+    t_s = blocksparse_matmul_time(2048, m, dx, 128, model=model)
+    t_d = dense_matmul_time(2048, m, model=model)
+    assert t_s == pytest.approx(t_d, rel=1e-6)
+
+
+def test_calibrate_block_model_roundtrip():
+    """Calibration recovers a model whose predicted crossover matches the
+    one implied by synthetic measurements generated from known constants."""
+    truth = BlockSparseModel(dense_eff=0.7, sparse_eff=0.35, gather_eff=0.4)
+    rows = []
+    for p in (1024, 2048):
+        for density in (0.05, 0.1, 0.2, 0.5, 1.0):
+            rows.append({
+                "p": p, "m": p, "block_size": 128, "density": density,
+                "t_dense": dense_matmul_time(p, p, model=truth),
+                "t_sparse": blocksparse_matmul_time(p, p, density, 128,
+                                                    model=truth),
+            })
+    fitted = calibrate_block_model(rows)
+    for p in (1024, 2048):
+        assert crossover_density(p, p, 128, model=fitted) == pytest.approx(
+            crossover_density(p, p, 128, model=truth), rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# lazy kernel interpret mode
+# ---------------------------------------------------------------------------
+
+def test_kernel_interpret_is_lazy_and_overridable():
+    from repro.kernels import ops
+
+    assert ops.interpret_default() is (jax.default_backend() != "tpu")
+    try:
+        ops.set_interpret(False)
+        assert ops.interpret_default() is False
+        ops.set_interpret(True)
+        assert ops.interpret_default() is True
+        with pytest.raises(TypeError):
+            ops.set_interpret("yes")
+    finally:
+        ops.set_interpret(None)
+    assert ops.interpret_default() is (jax.default_backend() != "tpu")
+
+
+def test_kernel_module_has_no_import_time_backend_probe():
+    """Importing repro.kernels.ops must not evaluate the backend at import
+    time (the INTERPRET module constant is gone; resolution is per call)."""
+    import repro.kernels.ops as ops
+    assert not hasattr(ops, "INTERPRET")
+    assert ops._INTERPRET_OVERRIDE is None

@@ -12,7 +12,7 @@ import pytest
 
 import repro.configs as C
 from repro.models import lm, transformer as T
-from repro.train.optim import AdamW, cosine_schedule
+from repro.train.optim import AdamW
 
 
 @pytest.mark.parametrize("arch", C.ARCHS)

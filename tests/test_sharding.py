@@ -1,12 +1,9 @@
 """Logical-axis -> PartitionSpec resolution + grid index math."""
-import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # minimal CPU image — deterministic fallback
     from _hypothesis_fallback import given, settings, st
 
-import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.comm.grid import Grid1p5D
@@ -27,8 +24,8 @@ def test_basic_mapping():
 
 def test_indivisible_falls_back_to_replicated():
     mesh = FakeMesh({"data": 16, "model": 16})
-    spec = logical_to_spec(("embed", "kv"), (2560, 2 * 128), mesh,
-                           DEFAULT_RULES)
+    logical_to_spec(("embed", "kv"), (2560, 2 * 128), mesh,
+                    DEFAULT_RULES)
     # kv dim 256 % 16 == 0 -> sharded; but 2 heads * 80 = 160 % 16 == 0;
     # now an actually indivisible one:
     spec2 = logical_to_spec(("embed", "kv"), (2560, 250), mesh,

@@ -11,7 +11,7 @@ except ImportError:  # minimal CPU image — deterministic fallback
     from _hypothesis_fallback import given, settings, st
 
 from repro.train import checkpoint as ckpt
-from repro.train.data import SyntheticLM, make_source
+from repro.train.data import SyntheticLM
 from repro.train.fault import Heartbeat, StragglerMonitor, retry
 from repro.train.optim import (AdamW, SGDM, accumulate_gradients,
                                clip_by_global_norm, cosine_schedule,
