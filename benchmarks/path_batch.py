@@ -1,0 +1,133 @@
+"""Batched vs sequential lambda-path benchmark (BENCH_path_batch.json).
+
+Solves the same descending lam1 grid twice in float64:
+
+  * sequential — one cold ``solve_reference`` per path point (the
+    apples-to-apples baseline: identical settings, identical solves);
+  * batched — the ENTIRE grid as ONE compiled multi-problem program
+    through ``core.batch.solve_path_batched`` (vmap'd prox loop, finished
+    points frozen by carry masking while stragglers iterate).
+
+Per-point estimates must agree to 1e-5 (float64, where summation-order
+noise sits far below line-search decision margins; per project memory f32
+fixed points scatter ~1e-4).  Emits results/BENCH_path_batch.csv and
+results/BENCH_path_batch.json — the JSON is uploaded as a CI artifact to
+track the throughput trajectory of the batched engine.
+
+  PYTHONPATH=src python -m benchmarks.path_batch [--quick]
+
+Default: 8-point path at p=512 (the acceptance-criteria shape);
+``--quick`` shrinks to p=128 for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import OUT_DIR, emit
+
+AGREEMENT_ATOL = 1e-5
+
+
+def run(p: int = 512, n: int = 1024, points: int = 8, tol: float = 1e-6,
+        max_iters: int = 300, repeats: int = 2):
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+
+    from repro.core import batch, graphs
+    from repro.core.prox import solve_reference
+
+    prob = graphs.make_problem("chain", p, n, seed=0)
+    s = jnp.asarray(prob.s, jnp.float64)
+    grid = np.geomspace(0.4, 0.08, points)
+    lam2 = 0.05
+    kw = dict(tol=tol, max_iters=max_iters)
+
+    def run_sequential():
+        return [solve_reference(s, float(l1), lam2, variant="cov", **kw)
+                for l1 in grid]
+
+    def run_batched():
+        res = batch.solve_path_batched(s, jnp.asarray(grid), lam2,
+                                       variant="cov", **kw)
+        jax.block_until_ready(res.omega)
+        return res
+
+    # warmup (compile both programs), then timed repeats
+    seq = run_sequential()
+    bat = run_batched()
+    t_seq, t_bat = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        seq = run_sequential()
+        jax.block_until_ready(seq[-1].omega)
+        t_seq.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        bat = run_batched()
+        t_bat.append(time.perf_counter() - t0)
+    t_sequential = float(np.median(t_seq))
+    t_batched = float(np.median(t_bat))
+
+    rows, max_err = [], 0.0
+    for i, l1 in enumerate(grid):
+        err = float(jnp.max(jnp.abs(bat.omega[i] - seq[i].omega)))
+        max_err = max(max_err, err)
+        rows.append({
+            "lam1": round(float(l1), 5),
+            "seq_iters": int(seq[i].iters),
+            "bat_iters": int(bat.iters[i]),
+            "seq_ls": int(seq[i].ls_total),
+            "bat_ls": int(bat.ls_total[i]),
+            "converged": bool(bat.converged[i]),
+            "stalled": bool(bat.stalled[i]),
+            "max_abs_err": err,
+        })
+    emit("BENCH_path_batch", rows)
+
+    agrees = max_err <= AGREEMENT_ATOL
+    summary = {
+        "p": p, "n": n, "points": points, "dtype": "float64",
+        "tol": tol, "max_iters": max_iters,
+        "t_sequential_s": round(t_sequential, 4),
+        "t_batched_s": round(t_batched, 4),
+        "speedup_batched": round(t_sequential / t_batched, 3),
+        "agreement_atol": AGREEMENT_ATOL,
+        "max_abs_err": max_err,
+        "agrees": agrees,
+        "points_detail": rows,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_path_batch.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"# {points}-point f64 path at p={p}: sequential "
+          f"{t_sequential:.2f}s, batched {t_batched:.2f}s as one program "
+          f"({t_sequential / t_batched:.2f}x); max |dOmega| {max_err:.2e} "
+          f"(atol {AGREEMENT_ATOL:g}) -> {path}")
+    assert agrees, (
+        f"batched path disagrees with the sequential reference: "
+        f"max err {max_err:.2e} > {AGREEMENT_ATOL:g}")
+    return summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shape for CI (p=128, n=320)")
+    ap.add_argument("--p", type=int, default=None)
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--points", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=2)
+    args = ap.parse_args(argv)
+    p = args.p or (128 if args.quick else 512)
+    n = args.n or (320 if args.quick else 1024)
+    return run(p=p, n=n, points=args.points, repeats=args.repeats)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,8 +10,8 @@ import time
 import traceback
 
 MODULES = ["fig2_crossover", "fig3_replication", "fig4_scaling",
-           "table1_recovery", "path_warmstart", "kernel_bench",
-           "sparse_crossover", "lm_roofline"]
+           "table1_recovery", "path_warmstart", "path_batch",
+           "kernel_bench", "sparse_crossover", "lm_roofline"]
 
 
 def main(argv=None):

@@ -15,11 +15,14 @@ These are the masked entry points for the two Ω-side products of
     a dynamic column-slice of it, gated by the matching block-column slice
     of the fixed mask.
 
-The mask is tiny — (rows/bs, cols/bs) — so rotating it adds a negligible
-``bs^2``-th of the Ω traffic to the ring; in exchange, the local dgemm of
-every round skips absent blocks once the iterate is past the density
-crossover.  Both paths are exact (see ``core.matops``): the dispatch only
-takes the block-gather branch when its capacity provably covers the
+The mask is tiny — (rows/bs, cols/bs) entries of the compact fixed
+``core.matops.MASK_DTYPE`` (int8, one byte per block, independent of the
+operand dtype — an f64 solve must not ship 8-byte masks around the ring)
+— so rotating it adds a negligible fraction of the Ω traffic; in
+exchange, the local dgemm of every round skips absent blocks once the
+iterate is past the density crossover.  Both paths are exact (see
+``core.matops``): the dispatch only takes the block-gather branch when
+its capacity provably covers the
 occupied blocks, so results match the dense rotation up to float
 summation order.
 

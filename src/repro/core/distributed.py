@@ -56,11 +56,12 @@ class FitResult(NamedTuple):
     omega: jax.Array
     iters: jax.Array
     ls_total: jax.Array
-    converged: jax.Array
+    converged: jax.Array    # genuine delta < tol exit (never set on a stall)
     g_final: jax.Array
     variant: str
     grid: Grid1p5D
     block_density: jax.Array | float = 1.0
+    stalled: jax.Array | bool = False   # line search exhausted without accept
 
 
 def _shard_policy(policy: matops.MatmulPolicy | None,
@@ -180,7 +181,7 @@ def _dist_sparse_ops(policy: matops.MatmulPolicy, use_pallas: bool, dtype,
             from ..kernels import ops as kops
             out, _, _, _, _, bnnz = kops.fused_prox_stats(
                 z, diag_mask_of(), alpha, block=(bs, bs))
-            return out, (bnnz > 0).astype(dtype)
+            return out, (bnnz > 0).astype(matops.MASK_DTYPE)
         out = prox(z, alpha, data)
         return out, matops.block_mask(out, bs)
 
@@ -326,7 +327,8 @@ def _obs_local_ops(grid: Grid1p5D, p_pad: int, p_real: int, n: int, lam2,
 
 def _scalar_specs():
     return ProxResult(omega=None, iters=P(), ls_total=P(), converged=P(),
-                      g_final=P(), delta_final=P(), block_density=P())
+                      g_final=P(), delta_final=P(), stalled=P(),
+                      block_density=P())
 
 
 def _pad_omega0(omega0, p: int, p_pad: int, dtype):
@@ -398,7 +400,7 @@ def fit_cov(
         res = jax.jit(fn)(*args)
     return FitResult(res.omega[:p, :p], res.iters, res.ls_total,
                      res.converged, res.g_final, "cov", grid,
-                     res.block_density)
+                     res.block_density, res.stalled)
 
 
 def fit_obs(
@@ -454,7 +456,7 @@ def fit_obs(
         res = jax.jit(fn)(*args)
     return FitResult(res.omega[:p, :p], res.iters, res.ls_total,
                      res.converged, res.g_final, "obs", grid,
-                     res.block_density)
+                     res.block_density, res.stalled)
 
 
 # ---------------------------------------------------------------------------
@@ -500,6 +502,8 @@ def fit(
     m = machine or Machine()
     shape = ProblemShape(p=p, n=n, d=estimate_density(p, n, lam1))
 
+    pinned_cx, pinned_co = c_x is not None, c_omega is not None
+    user_pinned = pinned_cx or pinned_co
     if variant == "auto":
         variants = ("cov", "obs") if x is not None else ("cov",)
         best = tune(shape, P_, m, variants)
@@ -509,8 +513,24 @@ def fit(
     c_x = c_x or 1
     c_omega = c_omega or 1
     if variant == "cov":
+        if pinned_co and c_omega != c_x:
+            # same error as estimator.backends._check_grid — a pinned
+            # c_omega must not be silently coerced to c_x
+            raise ValueError(
+                f"Cov keeps Omega in the X-like layout, so c_x must equal "
+                f"c_omega (got c_x={c_x}, c_omega={c_omega})")
         c_omega = c_x  # Cov keeps Omega X-like
-        if P_ % (c_x * c_omega):
+        if c_x * c_omega > P_ or P_ % (c_x * c_omega):
+            if user_pinned:
+                # Same error as estimator.backends._check_grid: never
+                # silently rewrite a USER-pinned replication layout (the
+                # old behaviour reset it to 1x1 behind the caller's back).
+                raise ValueError(
+                    f"replication c_x*c_omega={c_x * c_omega} must divide "
+                    f"n_devices={P_} (got c_x={c_x}, c_omega={c_omega})")
+            # tuner-derived factors may become infeasible after the Cov
+            # c_omega = c_x coercion; repairing the tuner's own choice is
+            # not a user-visible rewrite
             c_x = c_omega = 1
         grid = Grid1p5D(P_, c_x, c_omega)
         s_mat = s if s is not None else (x.T @ x) / n

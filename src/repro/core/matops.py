@@ -51,6 +51,13 @@ from jax import lax
 #: instead of always paying for the full threshold capacity.
 TIER_FRACTIONS = (0.125, 0.25, 0.5, 1.0)
 
+#: dtype of every block-occupancy mask.  Fixed and compact on purpose: the
+#: distributed drivers ppermute the mask around the 1.5D ring alongside the
+#: Ω operand, so an operand-dtype mask would move 4-8 bytes per block where
+#: one is enough (an f64 solve used to ship 8-byte masks).  Consumers only
+#: ever test ``mask > 0``.
+MASK_DTYPE = jnp.int8
+
 
 class MatmulPolicy(NamedTuple):
     """Static (hashable) routing policy for Ω-side products.
@@ -89,16 +96,18 @@ def _pad2(a, rows: int, cols: int):
 def block_mask(a, block_size: int):
     """Block-occupancy mask: out[i, j] = 1 iff tile (i, j) has any nonzero.
 
-    Shape is (cdiv(r, bs), cdiv(c, bs)); partial edge tiles are zero-padded
-    (padding never flips a tile on).  Semantically identical to the per-tile
-    nnz counts the fused prox kernel emits (``kernels.softthresh``).
+    Shape is (cdiv(r, bs), cdiv(c, bs)), dtype ``MASK_DTYPE`` (compact and
+    independent of the operand dtype — the distributed drivers rotate this
+    around the ring); partial edge tiles are zero-padded (padding never
+    flips a tile on).  Semantically identical to the per-tile nnz counts
+    the fused prox kernel emits (``kernels.softthresh``).
     """
     r, c = a.shape
     bs = block_size
     nbr, nbc = _cdiv(r, bs), _cdiv(c, bs)
     ap = _pad2(a, nbr * bs, nbc * bs)
     tiles = jnp.abs(ap).reshape(nbr, bs, nbc, bs)
-    return (tiles.max(axis=(1, 3)) > 0).astype(a.dtype)
+    return (tiles.max(axis=(1, 3)) > 0).astype(MASK_DTYPE)
 
 
 def block_density(mask):

@@ -35,6 +35,14 @@ The distributed drivers run this exact function INSIDE shard_map: `omega`
 and `aux` are then per-device shards and the ops close over collectives.
 Control flow is fully jax.lax (while_loop both levels) so a whole solve
 lowers as one XLA program with the 1.5D collectives inlined.
+
+The loop is also ``jax.vmap``-able over a stacked problem axis (the batched
+multi-problem engine in ``core.batch``): under vmap a ``while_loop`` keeps
+running until EVERY lane's condition is false and the body executes for all
+lanes each round, so both loop bodies freeze their already-finished lanes
+(accepted line searches, converged/stalled outer iterations) by selecting
+the old carry — finished problems hold their state bit-exactly while
+stragglers keep iterating.
 """
 from __future__ import annotations
 
@@ -69,9 +77,11 @@ class ProxResult(NamedTuple):
     omega: jax.Array
     iters: jax.Array        # outer proximal-gradient iterations taken (s)
     ls_total: jax.Array     # total line-search trials (s*t)
-    converged: jax.Array
+    converged: jax.Array    # genuine delta < tol exit (never set on a stall)
     g_final: jax.Array
     delta_final: jax.Array
+    stalled: jax.Array = False      # line search exhausted max_ls without
+                                    # accepting a step; iterate unchanged
     block_density: jax.Array = 1.0  # observed final block density (1.0 dense)
 
 
@@ -84,6 +94,7 @@ class _Carry(NamedTuple):
     ls_total: jax.Array
     delta: jax.Array
     tau_prev: jax.Array
+    stalled: jax.Array
 
 
 class _LsCarry(NamedTuple):
@@ -164,7 +175,12 @@ def prox_gradient(
         def ls_body(ls: _LsCarry) -> _LsCarry:
             tau = ls.tau * 0.5
             cand, aux_c, mask_c, g_c, ok = ls_try(tau)
-            return _LsCarry(tau, cand, aux_c, mask_c, g_c, ok, ls.trials + 1)
+            nxt = _LsCarry(tau, cand, aux_c, mask_c, g_c, ok, ls.trials + 1)
+            # Freeze lanes that already accepted: under vmap the loop keeps
+            # running while ANY lane still searches, and the body executes
+            # for all of them.
+            return jax.tree.map(
+                lambda n, o: jnp.where(ls.accepted, o, n), nxt, ls)
 
         cand0, aux_c0, mask_c0, g_c0, ok0 = ls_try(tau0)
         ls = jax.lax.while_loop(
@@ -178,8 +194,11 @@ def prox_gradient(
         delta = jnp.sqrt(ops.dot(diff, diff)) / jnp.maximum(
             1.0, jnp.sqrt(ops.dot(carry.omega, carry.omega))
         )
-        # If line search exhausted without acceptance, keep the old iterate
-        # and report convergence (no progress possible at machine precision).
+        # If the line search exhausted max_ls without acceptance, keep the
+        # old iterate and STALL: delta is zeroed so the outer loop exits,
+        # and the stalled flag records that this was not a genuine
+        # delta < tol convergence (the old behaviour reported
+        # converged=True here, which lied).
         omega_next = jnp.where(ls.accepted, ls.omega_new, carry.omega)
         aux_next = jax.tree.map(
             lambda a, b: jnp.where(ls.accepted, a, b), ls.aux_new, carry.aux
@@ -189,7 +208,7 @@ def prox_gradient(
         )
         g_next = jnp.where(ls.accepted, ls.g_new, carry.g_val)
         delta = jnp.where(ls.accepted, delta, jnp.asarray(0.0, dtype))
-        return _Carry(
+        nxt = _Carry(
             omega=omega_next,
             aux=aux_next,
             mask=mask_next,
@@ -198,7 +217,14 @@ def prox_gradient(
             ls_total=carry.ls_total + ls.trials,
             delta=delta,
             tau_prev=ls.tau,
+            stalled=~ls.accepted,
         )
+        # Freeze finished lanes (converged, stalled or iteration-capped):
+        # under vmap the outer while_loop runs until every lane is done and
+        # the body executes for all of them, so a finished problem must
+        # hold its carry bit-exactly while stragglers keep iterating.
+        active = outer_cond(carry)
+        return jax.tree.map(lambda n, o: jnp.where(active, n, o), nxt, carry)
 
     def outer_cond(carry: _Carry):
         return (carry.step < max_iters) & (carry.delta >= tol)
@@ -212,6 +238,7 @@ def prox_gradient(
         ls_total=jnp.asarray(0, jnp.int32),
         delta=jnp.asarray(jnp.inf, dtype),
         tau_prev=jnp.asarray(tau_init, dtype),
+        stalled=jnp.asarray(False),
     )
     final = jax.lax.while_loop(outer_cond, outer_body, init)
     if sparse:
@@ -224,9 +251,10 @@ def prox_gradient(
         omega=final.omega,
         iters=final.step,
         ls_total=final.ls_total,
-        converged=final.delta < tol,
+        converged=(final.delta < tol) & ~final.stalled,
         g_final=final.g_val,
         delta_final=final.delta,
+        stalled=final.stalled,
         block_density=density,
     )
 
@@ -257,7 +285,7 @@ def _ref_sparse_ops(policy: matops.MatmulPolicy, use_pallas: bool):
             eye = jnp.eye(z.shape[-1], dtype=z.dtype)
             out, _, _, _, _, bnnz = kops.fused_prox_stats(
                 z, eye, alpha, block=(bs, bs))
-            return out, (bnnz > 0).astype(z.dtype)
+            return out, (bnnz > 0).astype(matops.MASK_DTYPE)
         out = prox_l1_offdiag(z, alpha)
         return out, matops.block_mask(out, bs)
 

@@ -9,10 +9,16 @@ estimation (the HP-CONCORD facade).
     path = est.fit_path(X, lam1_grid=[0.3, 0.25, 0.2, 0.15, 0.1])
     best = path.best_bic()          # model selection in one call
 
+    # whole grid as ONE compiled multi-problem program (core.batch):
+    path = est.fit_path(X, lam1_grid=[...], mode="batched")
+    # B stacked datasets (multi-subject / server micro-batch):
+    rep = fit_batch(x=X_stack, lam1=0.15)       # -> BatchReport
+
 Layers:
   config    SolverConfig — every solver knob, frozen + validated
   backends  registry: "reference" | "distributed" | "auto" (cost-model)
-  report    FitReport / PathResult — rich results + pseudo-BIC scoring
+  report    FitReport / PathResult / BatchReport — rich results + BIC
+  batch     fit_batch + the batched lam1-path engine (one XLA program)
   estimator ConcordEstimator + functional ``fit`` / ``fit_path``
 
 The old entry points (``core.prox.fit_reference``, ``core.distributed.fit``)
@@ -27,11 +33,18 @@ from .backends import (  # noqa: F401
     reference_backend,
     register_backend,
 )
+from .batch import fit_batch  # noqa: F401
 from .config import SolverConfig  # noqa: F401
 from .estimator import ConcordEstimator, fit, fit_path  # noqa: F401
-from .report import FitReport, PathResult, pseudo_bic  # noqa: F401
+from .report import (  # noqa: F401
+    BatchReport,
+    FitReport,
+    PathResult,
+    pseudo_bic,
+)
 
 __all__ = [
+    "BatchReport",
     "ConcordEstimator",
     "FitReport",
     "PathResult",
@@ -41,6 +54,7 @@ __all__ = [
     "available_backends",
     "distributed_backend",
     "fit",
+    "fit_batch",
     "fit_path",
     "get_backend",
     "pseudo_bic",

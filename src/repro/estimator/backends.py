@@ -254,6 +254,7 @@ def _report(res, *, lam1, lam2, wall, backend, variant, config=None,
         lam1=float(lam1), lam2=float(lam2),
         iters=int(res.iters), ls_total=int(res.ls_total),
         converged=bool(res.converged),
+        stalled=bool(res.stalled),
         objective=g + float(lam1) * _offdiag_l1(res.omega),
         objective_smooth=g,
         wall_time_s=float(wall),

@@ -2,7 +2,16 @@
 
 ``FitReport`` is the per-solve record (estimate + solver telemetry + the
 backend/grid the dispatcher actually chose); ``PathResult`` aggregates the
-reports of a warm-started regularization path and adds model selection.
+reports of a regularization path (warm-started sequential or batched) and
+adds model selection; ``BatchReport`` aggregates the per-problem reports
+of one batched multi-problem solve (``fit_batch``).
+
+Convergence semantics: ``converged`` is True only on a genuine
+``delta < tol`` exit.  ``stalled`` is True when the line search exhausted
+``max_ls`` trials without accepting a step (the iterate stopped moving at
+machine precision — the solver used to misreport this as convergence).
+The two flags are mutually exclusive; both False means the iteration cap
+hit first.
 """
 from __future__ import annotations
 
@@ -34,6 +43,8 @@ class FitReport:
     block_density: float | None = None  # occupied-block fraction at
                                         # sparse_block granularity
     sparse_matmul: str = "off"          # Ω-product routing mode that ran
+    stalled: bool = False       # line search exhausted max_ls with no accept
+                                # (mutually exclusive with converged)
 
     def summary(self) -> str:
         dens = ""
@@ -42,10 +53,11 @@ class FitReport:
                     f"[{self.sparse_matmul}]")
         if self.nnz_per_row is not None:
             dens += f" nnz/row={self.nnz_per_row:.1f}"
+        stall = " STALLED" if self.stalled else ""
         return (f"[{self.backend}/{self.variant} c_x={self.c_x} "
                 f"c_omega={self.c_omega}] lam1={self.lam1:g} "
                 f"iters={self.iters} ls={self.ls_total} "
-                f"converged={self.converged} obj={self.objective:.4f}"
+                f"converged={self.converged}{stall} obj={self.objective:.4f}"
                 f"{dens} t={self.wall_time_s:.3f}s")
 
 
@@ -66,9 +78,14 @@ def pseudo_bic(omega, s, n: int, *, tol: float = 1e-8) -> float:
 
 @dataclass(frozen=True)
 class PathResult:
-    """Result of a warm-started regularization path (descending lam1)."""
+    """Result of a regularization path (descending lam1).
+
+    ``mode`` records how the grid ran: ``"sequential"`` (one solve per
+    point, optionally warm-started) or ``"batched"`` (the whole grid as
+    one compiled multi-problem program, ``core.batch``)."""
     reports: tuple[FitReport, ...] = field(default_factory=tuple)
     warm_start: bool = True
+    mode: str = "sequential"
 
     def __post_init__(self):
         object.__setattr__(self, "reports", tuple(self.reports))
@@ -111,7 +128,64 @@ class PathResult:
 
     def summary(self) -> str:
         lines = [r.summary() for r in self.reports]
+        how = ("batched" if self.mode == "batched"
+               else ("warm" if self.warm_start else "cold") + " starts")
         lines.append(f"path total: {self.total_iters} outer iters, "
                      f"{self.total_ls} ls trials, {self.wall_time_s:.3f}s "
-                     f"({'warm' if self.warm_start else 'cold'} starts)")
+                     f"({how})")
+        return "\n".join(lines)
+
+
+@dataclass(frozen=True)
+class BatchReport:
+    """Result of one batched multi-problem solve (``fit_batch``).
+
+    ``reports`` holds one :class:`FitReport` per stacked problem, in input
+    order.  The whole batch ran as ONE compiled program, so only the
+    aggregate wall time is physical; each report carries its 1/B share.
+    """
+    reports: tuple[FitReport, ...] = field(default_factory=tuple)
+    wall_time_s: float = 0.0    # end-to-end time of the one batched solve
+
+    def __post_init__(self):
+        object.__setattr__(self, "reports", tuple(self.reports))
+
+    @property
+    def n_problems(self) -> int:
+        return len(self.reports)
+
+    @property
+    def omegas(self) -> list:
+        return [r.omega for r in self.reports]
+
+    @property
+    def total_iters(self) -> int:
+        return int(sum(r.iters for r in self.reports))
+
+    @property
+    def all_converged(self) -> bool:
+        return all(r.converged for r in self.reports)
+
+    @property
+    def any_stalled(self) -> bool:
+        return any(r.stalled for r in self.reports)
+
+    def __len__(self) -> int:
+        return len(self.reports)
+
+    def __iter__(self):
+        return iter(self.reports)
+
+    def __getitem__(self, i):
+        return self.reports[i]
+
+    def summary(self) -> str:
+        lines = [r.summary() for r in self.reports]
+        lines.append(
+            f"batch total: {self.n_problems} problems, {self.total_iters} "
+            f"outer iters, {self.wall_time_s:.3f}s as one compiled solve "
+            f"(converged {sum(r.converged for r in self.reports)}"
+            f"/{self.n_problems}"
+            + (f", stalled {sum(r.stalled for r in self.reports)}"
+               if self.any_stalled else "") + ")")
         return "\n".join(lines)

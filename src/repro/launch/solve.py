@@ -6,8 +6,9 @@
 
 The cost model (paper Lemmas 3.1-3.5) picks the backend's Cov/Obs variant
 and the (c_X, c_Omega) replication factors unless pinned.  ``--path`` runs
-a warm-started lam1 path (the Section-5 model-selection sweep) and reports
-the BIC-best point.
+a lam1 path (the Section-5 model-selection sweep) and reports the BIC-best
+point; ``--path-mode batched`` lowers the whole grid to one compiled
+multi-problem program instead of sequential warm-started solves.
 """
 from __future__ import annotations
 
@@ -48,8 +49,13 @@ def main(argv=None):
     ap.add_argument("--sparse-threshold", type=float, default=None,
                     help="block-density crossover override in (0, 1]")
     ap.add_argument("--path", default=None, metavar="LAM1S",
-                    help="comma-separated lam1 grid: run a warm-started "
+                    help="comma-separated lam1 grid: run a "
                          "regularization path instead of a single fit")
+    ap.add_argument("--path-mode", default="sequential",
+                    choices=["sequential", "batched"],
+                    help="sequential: one warm-started solve per path "
+                         "point; batched: the whole grid as ONE compiled "
+                         "multi-problem program (core.batch)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -76,7 +82,7 @@ def main(argv=None):
 
     if args.path:
         grid = [float(v) for v in args.path.split(",")]
-        path = est.fit_path(x, lam1_grid=grid)
+        path = est.fit_path(x, lam1_grid=grid, mode=args.path_mode)
         print(path.summary())
         chosen = path.best_bic()
         print(f"BIC-best lam1={chosen.lam1:g} (bic={chosen.bic:.1f})")

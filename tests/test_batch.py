@@ -1,0 +1,260 @@
+"""Batched multi-problem solve engine (core.batch + estimator surface) and
+the solver-loop status-reporting fixes that ride with it: the stalled
+line-search flag, the distributed-shim grid validation, and the compact
+occupancy-mask dtype."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batch, graphs, matops
+from repro.core.prox import cov_ops, prox_gradient, solve_reference
+
+
+@pytest.fixture(scope="module")
+def chain_problem():
+    return graphs.make_problem("chain", p=48, n=150, seed=1)
+
+
+# ---------------------------------------------------------------------------
+# stalled line-search flag (the converged=True lie)
+# ---------------------------------------------------------------------------
+
+def test_exhausted_line_search_reports_stalled_not_converged(chain_problem):
+    """With max_ls=1 and a huge initial step, the single line-search trial
+    overshoots (non-positive diagonal -> +inf objective) and the search
+    exhausts without accepting: the solver must report stalled=True and
+    converged=False, and the iterate must not move (the old code zeroed
+    delta and claimed convergence)."""
+    s = jnp.asarray(chain_problem.s)
+    data = {"s": s, "lam2": jnp.asarray(0.05, s.dtype)}
+    om0 = jnp.eye(s.shape[0], dtype=s.dtype)
+    r = prox_gradient(om0, data, cov_ops(), lam1=0.2, tol=1e-6,
+                      max_ls=1, tau_init=1e6)
+    assert bool(r.stalled)
+    assert not bool(r.converged)
+    assert int(r.iters) == 1
+    np.testing.assert_array_equal(np.asarray(r.omega), np.asarray(om0))
+
+
+def test_genuine_convergence_is_not_stalled(chain_problem):
+    r = solve_reference(jnp.asarray(chain_problem.s), 0.2, 0.05, tol=1e-6)
+    assert bool(r.converged) and not bool(r.stalled)
+
+
+def test_stalled_threads_through_fit_report(chain_problem):
+    from repro.estimator import fit
+
+    rep = fit(s=jnp.asarray(chain_problem.s), lam1=0.2, lam2=0.05,
+              n_samples=150, backend="reference", variant="cov", tol=1e-6)
+    assert rep.stalled is False and rep.converged is True
+    assert "STALLED" not in rep.summary()
+
+
+def test_stalled_threads_through_distributed_result(chain_problem):
+    """FitResult/_scalar_specs carry the flag through shard_map."""
+    from repro.comm.grid import Grid1p5D
+    from repro.core.distributed import fit_cov
+
+    r = fit_cov(jnp.asarray(chain_problem.s), 0.2, 0.05,
+                grid=Grid1p5D(1, 1, 1), tol=1e-6, max_iters=200)
+    assert bool(r.converged) and not bool(r.stalled)
+
+
+# ---------------------------------------------------------------------------
+# deprecated distributed.fit shim: no silent replication rewrite
+# ---------------------------------------------------------------------------
+
+def test_fit_shim_raises_on_infeasible_pinned_grid(chain_problem):
+    from repro.core import distributed as dist
+
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="must divide"):
+            dist.fit(s=jnp.asarray(chain_problem.s), lam1=0.2,
+                     variant="cov", c_x=3, c_omega=3)
+
+
+def test_fit_shim_raises_on_pinned_cov_layout_mismatch(chain_problem):
+    """A pinned c_omega != c_x for Cov must raise (the old code silently
+    coerced c_omega = c_x), matching estimator.backends._check_grid."""
+    from repro.core import distributed as dist
+
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="must equal"):
+            dist.fit(s=jnp.asarray(chain_problem.s), lam1=0.2,
+                     variant="cov", c_x=1, c_omega=2, n_devices=2)
+
+
+# ---------------------------------------------------------------------------
+# compact occupancy-mask dtype
+# ---------------------------------------------------------------------------
+
+def test_block_mask_dtype_is_compact():
+    """The occupancy mask travels the 1.5D ring with the operand, so it
+    must be MASK_DTYPE (1 byte) regardless of the operand's dtype."""
+    a32 = jnp.zeros((16, 16), jnp.float32).at[0, 0].set(1.0)
+    assert matops.block_mask(a32, 4).dtype == matops.MASK_DTYPE
+    prev_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        a64 = jnp.zeros((16, 16), jnp.float64).at[3, 9].set(2.0)
+        m = matops.block_mask(a64, 4)
+        assert m.dtype == matops.MASK_DTYPE
+        assert jnp.dtype(matops.MASK_DTYPE).itemsize == 1
+        assert int(m.sum()) == 1
+    finally:
+        jax.config.update("jax_enable_x64", prev_x64)
+
+
+# ---------------------------------------------------------------------------
+# batched engine vs the sequential reference (f64, per project memory
+# f32 fixed points scatter ~1e-4, so agreement is asserted at 1e-5 in f64)
+# ---------------------------------------------------------------------------
+
+def test_batched_path_matches_sequential_reference_f64():
+    prev_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        prob = graphs.make_problem("chain", p=48, n=150, seed=0)
+        s = jnp.asarray(prob.s, jnp.float64)
+        grid = np.geomspace(0.4, 0.1, 6)
+        seq = [solve_reference(s, float(l1), 0.05, variant="cov",
+                               tol=1e-7, max_iters=400) for l1 in grid]
+        bat = batch.solve_path_batched(s, jnp.asarray(grid), 0.05,
+                                       variant="cov", tol=1e-7,
+                                       max_iters=400)
+        for i in range(len(grid)):
+            np.testing.assert_allclose(np.asarray(bat.omega[i]),
+                                       np.asarray(seq[i].omega),
+                                       rtol=0, atol=1e-5)
+            # finished lanes freeze: per-problem telemetry is identical to
+            # what the sequential solve reports
+            assert int(bat.iters[i]) == int(seq[i].iters)
+            assert int(bat.ls_total[i]) == int(seq[i].ls_total)
+            assert bool(bat.converged[i]) == bool(seq[i].converged)
+            assert not bool(bat.stalled[i])
+    finally:
+        jax.config.update("jax_enable_x64", prev_x64)
+
+
+def test_batched_stacked_datasets_match_per_problem_solves_f64():
+    prev_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        lam1s = [0.2, 0.25, 0.3]
+        xs = jnp.stack([
+            jnp.asarray(graphs.make_problem("chain", p=32, n=100,
+                                            seed=k).x, jnp.float64)
+            for k in range(3)])
+        bat = batch.solve_batch(xs, jnp.asarray(lam1s), 0.05, variant="obs",
+                                tol=1e-6)
+        for k, l1 in enumerate(lam1s):
+            ref = solve_reference(xs[k], l1, 0.05, variant="obs", tol=1e-6)
+            np.testing.assert_allclose(np.asarray(bat.omega[k]),
+                                       np.asarray(ref.omega),
+                                       rtol=0, atol=1e-5)
+            assert int(bat.iters[k]) == int(ref.iters)
+    finally:
+        jax.config.update("jax_enable_x64", prev_x64)
+
+
+def test_solve_batch_rejects_unstacked_data():
+    with pytest.raises(ValueError, match="stacked"):
+        batch.solve_batch(jnp.eye(8), 0.2)
+
+
+# ---------------------------------------------------------------------------
+# estimator surface: fit_path(mode="batched"), fit_batch, BatchReport
+# ---------------------------------------------------------------------------
+
+def test_fit_path_batched_mode_matches_sequential(chain_problem):
+    from repro.estimator import ConcordEstimator, SolverConfig
+
+    x = jnp.asarray(chain_problem.x)
+    grid = [0.35, 0.25, 0.18]
+    est = ConcordEstimator(lam1=0.2, lam2=0.05,
+                           config=SolverConfig(backend="reference",
+                                               variant="cov", tol=1e-6))
+    pseq = est.fit_path(x, lam1_grid=grid, warm_start=False)
+    pbat = est.fit_path(x, lam1_grid=grid, mode="batched")
+    assert pbat.mode == "batched" and not pbat.warm_start
+    assert pbat.lam1_grid == pseq.lam1_grid
+    for a, b in zip(pseq, pbat):
+        # f32 cold-vs-cold: identical trajectories, tight agreement
+        np.testing.assert_allclose(np.asarray(b.omega), np.asarray(a.omega),
+                                   rtol=0, atol=1e-4)
+        assert b.iters == a.iters
+        assert b.bic == pytest.approx(a.bic, rel=1e-3)
+    assert pbat.best_bic().lam1 == pseq.best_bic().lam1
+    assert "batched" in pbat.summary()
+    # estimator state mirrors the last path point (sklearn convention)
+    assert est.report_ is pbat.reports[-1]
+    with pytest.raises(ValueError, match="mode"):
+        est.fit_path(x, lam1_grid=grid, mode="vectorized")
+
+
+def test_fit_batch_smoke_stacked_datasets():
+    from repro.estimator import BatchReport, ConcordEstimator, SolverConfig
+
+    xs = np.stack([graphs.make_problem("chain", p=32, n=100, seed=k).x
+                   for k in range(3)])
+    est = ConcordEstimator(lam1=0.2, lam2=0.05,
+                           config=SolverConfig(backend="reference",
+                                               variant="obs", tol=1e-5))
+    rep = est.fit_batch(x=xs, lam1=[0.2, 0.25, 0.3])
+    assert isinstance(rep, BatchReport)
+    assert rep.n_problems == len(rep) == 3
+    assert [r.lam1 for r in rep] == [0.2, 0.25, 0.3]
+    for r in rep:
+        assert r.backend == "batched" and r.variant == "obs"
+        assert np.asarray(r.omega).shape == (32, 32)
+        assert r.converged and not r.stalled
+    assert rep.all_converged and not rep.any_stalled
+    assert rep.wall_time_s > 0
+    assert sum(r.wall_time_s for r in rep) == pytest.approx(rep.wall_time_s)
+    assert "one compiled solve" in rep.summary()
+    assert est.report_ is rep.reports[-1]
+
+
+def test_fit_batch_validation():
+    from repro.estimator import fit_batch
+
+    xs = np.zeros((2, 10, 8), np.float32)
+    with pytest.raises(ValueError, match="exactly one"):
+        fit_batch(x=xs, s=xs, lam1=0.1)
+    with pytest.raises(ValueError, match="3-D"):
+        fit_batch(x=np.zeros((10, 8), np.float32), lam1=0.1)
+    with pytest.raises(ValueError, match="square"):
+        fit_batch(s=xs, lam1=0.1)
+    with pytest.raises(ValueError, match="reference"):
+        fit_batch(x=xs, lam1=0.1, backend="distributed")
+
+
+def test_fit_batch_cov_variant_forms_covariances():
+    """variant='cov' with stacked raw datasets forms per-problem S and
+    solves the Cov variant — same estimate as the Obs variant."""
+    from repro.estimator import fit_batch
+
+    xs = np.stack([graphs.make_problem("chain", p=32, n=100, seed=k).x
+                   for k in range(2)])
+    r_cov = fit_batch(x=xs, lam1=0.25, lam2=0.05, backend="reference",
+                      variant="cov", tol=1e-6)
+    r_obs = fit_batch(x=xs, lam1=0.25, lam2=0.05, backend="reference",
+                      variant="obs", tol=1e-6)
+    for a, b in zip(r_cov, r_obs):
+        assert a.variant == "cov" and b.variant == "obs"
+        np.testing.assert_allclose(np.asarray(a.omega), np.asarray(b.omega),
+                                   atol=2e-3)
+
+
+def test_fit_batch_reports_dense_routing():
+    """The batched engine always runs dense products, so its reports must
+    say sparse_matmul='off' even when the config asked for routing."""
+    from repro.estimator import fit_batch
+
+    xs = np.stack([graphs.make_problem("chain", p=32, n=100, seed=k).x
+                   for k in range(2)])
+    rep = fit_batch(x=xs, lam1=0.25, backend="reference", variant="obs",
+                    tol=1e-5, sparse_matmul="auto")
+    assert all(r.sparse_matmul == "off" for r in rep)
