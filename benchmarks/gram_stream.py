@@ -1,0 +1,151 @@
+"""Streamed vs dense Gram benchmark (BENCH_gram_stream.json).
+
+For each (transform, chunk_rows) cell the same scenario stream is reduced
+two ways:
+
+  * dense   — materialize the full (n, p) X once, one-shot XᵀX/n of the
+              transformed matrix (the only mode the repo had before the
+              data subsystem);
+  * streamed— ``data.gram.GramAccumulator`` over the seeded chunked
+              sampler: X never exists, resident working set is one chunk
+              plus the (p, p) f64 state.
+
+Reported per cell: throughput (rows/s), the streamed/dense wall ratio,
+a peak-memory proxy (resident bytes of each mode — chunk+state vs full
+matrix+state), and the f64 agreement gap (gated at 1e-10; the benchmark
+doubles as an integration check).  Emits results/BENCH_gram_stream.csv
+and results/BENCH_gram_stream.json — the JSON is uploaded as a CI
+artifact to track the streaming layer's throughput trajectory.
+
+  PYTHONPATH=src python -m benchmarks.gram_stream [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import OUT_DIR, emit
+
+AGREEMENT_ATOL = 1e-10
+
+
+def _dense_gram(x: np.ndarray, transform: str) -> np.ndarray:
+    from repro.data.transforms import rank_transform_column
+    x = np.asarray(x, np.float64)
+    if transform == "center":
+        x = x - x.mean(0)
+    elif transform == "standardize":
+        x = (x - x.mean(0)) / x.std(0)
+    elif transform == "rank":
+        x = np.stack([rank_transform_column(x[:, j])
+                      for j in range(x.shape[1])], axis=1)
+    return x.T @ x / x.shape[0]
+
+
+def run(p: int = 256, n: int = 200_000, family: str = "erdos_renyi",
+        transforms=("none", "standardize", "rank"),
+        chunk_grid=(1024, 8192, 65536), repeats: int = 2):
+    from repro.data import compute_gram, make_scenario
+
+    sc = make_scenario(family, p, cond=10.0, seed=0)
+    rows, max_err = [], 0.0
+    state_bytes = p * p * 8
+    for transform in transforms:
+        for chunk_rows in chunk_grid:
+            src = sc.source(n, chunk_rows=chunk_rows, seed=1)
+
+            def run_stream():
+                return compute_gram(src, transform=transform,
+                                    chunk_rows=chunk_rows)
+
+            def run_dense():
+                x = sc.sample(n, seed=1, chunk_rows=chunk_rows)
+                return _dense_gram(x, transform)
+
+            t_s, t_d = [], []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                g = run_stream()
+                t_s.append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                ref = run_dense()
+                t_d.append(time.perf_counter() - t0)
+            t_stream = float(np.median(t_s))
+            t_dense = float(np.median(t_d))
+            err = float(np.abs(g.s - ref).max())
+            max_err = max(max_err, err)
+            # resident-set proxy: what each mode must hold at once.  The
+            # chunk is capped at n rows; the rank transform's true
+            # resident set is its n x w column-sweep buffer (it also
+            # uses n*p*8 of scratch DISK, not RAM)
+            eff_chunk = min(chunk_rows, n)
+            stream_bytes = eff_chunk * p * 8 * 2 + state_bytes
+            if transform == "rank":
+                from repro.data.gram import RANK_BUDGET_BYTES
+                w = max(1, min(p, RANK_BUDGET_BYTES // (n * 8)))
+                stream_bytes = max(stream_bytes, n * w * 8 + state_bytes)
+            dense_bytes = n * p * 8 + state_bytes
+            rows.append({
+                "family": family, "transform": transform,
+                "p": p, "n": n, "chunk_rows": chunk_rows,
+                "n_chunks": int(g.n_chunks),
+                "t_streamed_s": round(t_stream, 4),
+                "t_dense_s": round(t_dense, 4),
+                "stream_rows_per_s": round(n / max(t_stream, 1e-9), 1),
+                "wall_ratio": round(t_stream / max(t_dense, 1e-9), 3),
+                "peak_bytes_streamed": stream_bytes,
+                "peak_bytes_dense": dense_bytes,
+                "memory_ratio": round(dense_bytes / stream_bytes, 2),
+                "max_abs_err": err,
+            })
+            print(f"  {family}/{transform:11s} chunk={chunk_rows:6d}: "
+                  f"streamed {t_stream:.2f}s vs dense {t_dense:.2f}s, "
+                  f"mem {dense_bytes / stream_bytes:.1f}x smaller, "
+                  f"err {err:.1e}")
+    emit("BENCH_gram_stream", rows)
+
+    agrees = max_err <= AGREEMENT_ATOL
+    summary = {
+        "family": family, "p": p, "n": n,
+        "gram_dtype": "float64",
+        "agreement_atol": AGREEMENT_ATOL,
+        "max_abs_err": max_err,
+        "agrees": agrees,
+        "best_memory_ratio": max(r["memory_ratio"] for r in rows),
+        "cells": rows,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_gram_stream.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"# streamed Gram at p={p}, n={n}: up to "
+          f"{summary['best_memory_ratio']:.0f}x smaller resident set; "
+          f"max |dS| {max_err:.2e} (atol {AGREEMENT_ATOL:g}) -> {path}")
+    assert agrees, (
+        f"streamed Gram disagrees with dense: {max_err:.2e} > "
+        f"{AGREEMENT_ATOL:g}")
+    return summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shape for CI (p=64, n=20000)")
+    ap.add_argument("--p", type=int, default=None)
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--family", default="erdos_renyi")
+    ap.add_argument("--repeats", type=int, default=2)
+    args = ap.parse_args(argv)
+    p = args.p or (64 if args.quick else 256)
+    n = args.n or (20_000 if args.quick else 200_000)
+    chunks = (512, 4096) if args.quick else (1024, 8192, 65536)
+    return run(p=p, n=n, family=args.family, chunk_grid=chunks,
+               repeats=args.repeats)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,8 @@ import traceback
 
 MODULES = ["fig2_crossover", "fig3_replication", "fig4_scaling",
            "table1_recovery", "path_warmstart", "path_batch",
-           "kernel_bench", "sparse_crossover", "lm_roofline"]
+           "gram_stream", "kernel_bench", "sparse_crossover",
+           "lm_roofline"]
 
 
 def main(argv=None):

@@ -66,11 +66,18 @@ def get_abstract_mesh():
 
 
 def make_mesh(axis_shapes, axis_names, devices=None):
-    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    """``jax.make_mesh`` with explicit Auto axis types where supported.
+
+    With an explicit ``devices`` sequence the mesh is built directly from
+    ``jax.sharding.Mesh`` in the GIVEN order — ``jax.make_mesh`` may
+    permute explicit devices for locality, which would silently scramble
+    the 1.5D ring's flat-rank numbering (``comm.grid``)."""
+    if devices is not None:
+        import numpy as np
+        devs = np.asarray(devices).reshape(tuple(axis_shapes))
+        return jax.sharding.Mesh(devs, tuple(axis_names))
     if hasattr(jax.sharding, "AxisType"):
         kwargs = {"axis_types": (jax.sharding.AxisType.Auto,) * len(axis_names)}
     else:
         kwargs = {}
-    if devices is not None:
-        kwargs["devices"] = devices
     return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

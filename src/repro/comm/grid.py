@@ -77,11 +77,11 @@ class Grid1p5D:
         return (self.n_i, self.c_omega, self.c_x)
 
     def make_mesh(self, devices=None) -> jax.sharding.Mesh:
+        from .compat import make_mesh
         if devices is None:
-            from .compat import make_mesh
             return make_mesh(self.mesh_shape(), AXES)
-        devs = np.asarray(devices).reshape(self.mesh_shape())
-        return jax.sharding.Mesh(devs, AXES)
+        return make_mesh(self.mesh_shape(), AXES,
+                         devices=np.asarray(devices).reshape(-1))
 
     # -- flat-index conversions (all return x-major flat rank) ----------
     def coords_to_flat(self, i: int, j: int, k: int) -> int:

@@ -234,6 +234,48 @@ def crossover_density(p: int, m: int, block_size: int,
     return max(0.0, min(1.0, td / ts1))
 
 
+def gram_chunk_rows(p: int, *, machine: Machine | None = None,
+                    budget_bytes: float | None = None,
+                    dtype_bytes: int = 8) -> int:
+    """Chunk-size guidance for the streaming Gram pipeline (``data.gram``).
+
+    Two constraints pick the row-block size m of a streamed XᵀX:
+
+      * memory — the resident working set is the f64 chunk (m·p·8 B), one
+        transform copy of it, and the (p, p) f64 accumulator; chunk +
+        copy must fit what the budget leaves AFTER the accumulator
+        (default budget: 1/8 of the machine's HBM, leaving room for the
+        solve that follows);
+      * efficiency — the panel product (panel, m) @ (m, p) has arithmetic
+        intensity ~m flops/byte on the streamed operand, so m below a few
+        hundred rows turns the accumulation bandwidth-bound.  We floor at
+        256 rows and never ask for more than 2^20 (diminishing returns,
+        and shard files are typically smaller anyway).
+
+    Raises when the (p, p) accumulator alone exhausts the budget — at
+    that point no chunk size makes the pipeline fit and the caller needs
+    the distributed twin (one accumulator shard per host) or a bigger
+    budget, not a smaller chunk.
+
+    Used as the default by ``launch/gram.py prep`` and documented in the
+    README's chunk-size guidance.
+    """
+    if p < 1:
+        raise ValueError(f"p must be >= 1, got {p}")
+    machine = machine or Machine()
+    budget = budget_bytes if budget_bytes is not None \
+        else machine.hbm_bytes / 8.0
+    left = budget - float(p) * p * dtype_bytes
+    if left <= 0:
+        raise ValueError(
+            f"the (p, p) f64 accumulator alone ({p}^2 x {dtype_bytes} B = "
+            f"{p * p * dtype_bytes / 1e9:.1f} GB) exceeds the "
+            f"{budget / 1e9:.1f} GB budget; shard the Gram across hosts "
+            f"(data.distributed_gram) or raise budget_bytes")
+    rows = int(left // (2 * p * dtype_bytes))
+    return max(256, min(rows, 1 << 20))
+
+
 def calibrate_block_model(rows, machine: Machine | None = None
                           ) -> BlockSparseModel:
     """Refit :class:`BlockSparseModel` from measured sweep rows (dicts with

@@ -43,6 +43,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 #: capacity ladder, as fractions of the policy threshold.  The dispatch
@@ -195,3 +196,36 @@ def matmul(a, b, *, mask=None, policy: MatmulPolicy | None = None):
     branches = [_make_sparse(c) for c in caps]
     branches.append(lambda a_, b_, m_: a_ @ b_)
     return lax.switch(ix, branches, a, b, mask)
+
+
+def panel_gram(x, *, panel: int = 512):
+    """Blocked XᵀX: the (p, p) Gram of an (n, p) row-block, accumulated by
+    column panels so each product is a bounded (panel, n) @ (n, p) slab —
+    the data-side sibling of the Ω-product dispatch above, and the unit of
+    work the streaming Gram accumulator (``data.gram``) folds per chunk.
+
+    Every panel routes through :func:`matmul` (the dense path of the
+    dispatch; the X operand carries no exploitable block sparsity).  The
+    f64 contract of the accumulator is preserved: a float64 numpy input
+    stays float64 even with jax x64 disabled — the panels then run
+    host-side in numpy, because ``jnp.asarray`` would silently downcast
+    to f32 and break the streamed-vs-dense 1e-10 agreement.
+    """
+    if panel < 1:
+        raise ValueError(f"panel must be >= 1, got {panel}")
+    if x.ndim != 2:
+        raise ValueError(f"x must be 2-D (n, p), got shape {x.shape}")
+    p = x.shape[1]
+    host_f64 = (not isinstance(x, jax.Array)
+                and np.asarray(x).dtype == np.float64
+                and not jax.config.jax_enable_x64)
+    if host_f64:
+        xh = np.asarray(x)
+        out = np.empty((p, p), np.float64)
+        for lo in range(0, p, panel):
+            out[lo:lo + panel] = xh[:, lo:lo + panel].T @ xh
+        return out
+    xj = jnp.asarray(x)
+    blocks = [matmul(xj[:, lo:lo + panel].T, xj)
+              for lo in range(0, p, panel)]
+    return blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=0)

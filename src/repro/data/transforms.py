@@ -1,0 +1,183 @@
+"""Pluggable per-chunk transforms for the streaming Gram pipeline.
+
+A transform decides what matrix the Gram is taken OF, without the pipeline
+ever materializing that matrix:
+
+  ``none``         S = XᵀX / n                     (raw second moment)
+  ``center``       S = (X-μ)ᵀ(X-μ) / n            (covariance)
+  ``standardize``  S = correlation matrix          (center + unit scale)
+  ``rank``         S = ZᵀZ / n with z_ij = Φ⁻¹((rank_j(x_ij)-½)/n), each
+                   column rescaled to unit variance — the nonparanormal /
+                   Spearman-via-ranks transform backing CONCORD's
+                   "no Gaussianity assumed" claim: S is invariant under
+                   ANY strictly monotone distortion of the marginals.
+
+``none``/``center``/``standardize`` are *moment transforms*: the
+accumulator streams raw f64 moments (Welford mean/variance + ΣXᵀX) in ONE
+pass and the transform is applied algebraically at ``finalize()`` —
+standardization never needs a second sweep:
+
+    S_center = ΣXᵀX/n − μμᵀ          S_std[i,j] = S_center[i,j]/(σ_i σ_j)
+
+``rank`` is genuinely order-based and needs a bounded TWO-PASS mode (see
+``gram.rank_gram``).  Memory contract: ceil(p / panel) sweeps of the
+source build the per-column rank transform with O(n_rows · panel) resident
+f64 values per sweep; the transformed columns go to an on-disk scratch
+memmap (n·p·8 bytes) that the final streaming Gram pass reads back.  The
+source must be re-iterable (``ChunkSource.reiterable``).
+
+``register_transform`` lets downstream code plug in new names without
+touching the accumulator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import numpy as np
+
+try:                                    # scipy ships with jax; f64 ndtri
+    from scipy.special import ndtri as _ndtri
+except ImportError:                     # pragma: no cover - minimal envs
+    def _ndtri(q):
+        import jax.numpy as jnp
+        from jax.scipy.special import ndtri
+        return np.asarray(ndtri(jnp.asarray(q, jnp.float32)), np.float64)
+
+__all__ = [
+    "StreamStats", "Transform", "available_transforms", "average_ranks",
+    "get_transform", "rank_transform_column", "register_transform",
+]
+
+#: columns with population std below this are treated as constant (scale 1)
+#: by ``standardize`` so a degenerate column cannot NaN the whole Gram.
+STD_FLOOR = 1e-12
+
+
+class StreamStats(NamedTuple):
+    """One-pass f64 stream moments of the raw data (the accumulator's
+    finalized state): everything a moment transform needs."""
+    n: int                  # rows seen
+    mean: np.ndarray        # (p,) column means
+    var: np.ndarray         # (p,) population variances (M2 / n)
+    xx: np.ndarray          # (p, p) RAW second-moment sum  Σ xᵀx  (not /n)
+
+    @property
+    def std(self) -> np.ndarray:
+        sd = np.sqrt(np.maximum(self.var, 0.0))
+        return np.where(sd < STD_FLOOR, 1.0, sd)
+
+
+@dataclass(frozen=True)
+class Transform:
+    """A named Gram transform.
+
+    ``finalize_gram(stats)`` turns one-pass stream moments into the (p, p)
+    Gram of the transformed data (moment transforms only — ``two_pass``
+    transforms raise here and are handled by ``gram.rank_gram``).
+    ``apply(chunk, stats)`` maps a raw chunk into transformed coordinates
+    given full-data stats (for scoring new data with training statistics).
+    """
+    name: str
+    two_pass: bool = False
+    _finalize: Callable | None = None
+    _apply: Callable | None = None
+
+    def finalize_gram(self, stats: StreamStats) -> np.ndarray:
+        if self.two_pass or self._finalize is None:
+            raise ValueError(
+                f"transform {self.name!r} is order-based (two-pass); "
+                f"stream it through gram.rank_gram / compute_gram, not "
+                f"GramAccumulator.finalize")
+        return self._finalize(stats)
+
+    def apply(self, chunk, stats: StreamStats) -> np.ndarray:
+        if self._apply is None:
+            raise ValueError(
+                f"transform {self.name!r} has no per-chunk application "
+                f"(rank scores depend on the whole sample, not one chunk)")
+        return self._apply(np.asarray(chunk, np.float64), stats)
+
+
+# ---------------------------------------------------------------------------
+# moment transforms
+# ---------------------------------------------------------------------------
+
+def _finalize_none(st: StreamStats) -> np.ndarray:
+    return st.xx / st.n
+
+
+def _finalize_center(st: StreamStats) -> np.ndarray:
+    return st.xx / st.n - np.outer(st.mean, st.mean)
+
+
+def _finalize_standardize(st: StreamStats) -> np.ndarray:
+    sd = st.std
+    return _finalize_center(st) / np.outer(sd, sd)
+
+
+# ---------------------------------------------------------------------------
+# rank / nonparanormal
+# ---------------------------------------------------------------------------
+
+def average_ranks(col: np.ndarray) -> np.ndarray:
+    """Average ranks in [1, n] with ties sharing their group mean (the
+    Spearman convention); pure numpy, exact."""
+    col = np.asarray(col)
+    _, inv, counts = np.unique(col, return_inverse=True, return_counts=True)
+    ends = np.cumsum(counts)
+    avg = (ends - counts + 1 + ends) / 2.0
+    return avg[inv]
+
+
+def rank_transform_column(col: np.ndarray) -> np.ndarray:
+    """Nonparanormal scores of one column: z = Φ⁻¹((rank - ½)/n), rescaled
+    to exactly unit population variance (so the Gram has unit diagonal and
+    Spearman-like off-diagonals).  Depends on the ORDER of the values only.
+    """
+    n = col.shape[0]
+    z = _ndtri((average_ranks(col) - 0.5) / n).astype(np.float64)
+    sd = float(np.sqrt(np.mean(z * z) - np.mean(z) ** 2))
+    if sd < STD_FLOOR:          # all-tied column -> all-zero scores
+        return np.zeros_like(z)
+    return z / sd
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Transform] = {}
+
+
+def register_transform(tf: Transform, *, overwrite: bool = False) -> None:
+    if not overwrite and tf.name in _REGISTRY:
+        raise ValueError(f"transform {tf.name!r} already registered")
+    _REGISTRY[tf.name] = tf
+
+
+def get_transform(name: str | Transform) -> Transform:
+    if isinstance(name, Transform):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown transform {name!r}; available: "
+            f"{available_transforms()}") from None
+
+
+def available_transforms() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+register_transform(Transform(
+    "none", _finalize=_finalize_none,
+    _apply=lambda c, st: c))
+register_transform(Transform(
+    "center", _finalize=_finalize_center,
+    _apply=lambda c, st: c - st.mean))
+register_transform(Transform(
+    "standardize", _finalize=_finalize_standardize,
+    _apply=lambda c, st: (c - st.mean) / st.std))
+register_transform(Transform("rank", two_pass=True))

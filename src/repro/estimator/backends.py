@@ -48,6 +48,31 @@ NNZ_TOL = 1e-8
 DEFAULT_SPARSE_THRESHOLD = 0.25
 
 
+#: relative asymmetry above this rejects an input "covariance" — genuine
+#: sample covariances are symmetric to machine precision; anything worse
+#: is a transposed/buggy input, not rounding.
+SYMMETRY_RTOL = 1e-6
+
+
+def _require_finite(name: str, arr) -> None:
+    if not bool(np.all(np.isfinite(np.asarray(arr)))):
+        raise ValueError(
+            f"{name} contains NaN/Inf; refusing to fit (a non-finite input "
+            f"silently produces a garbage estimate — clean or impute the "
+            f"data first)")
+
+
+def _require_symmetric(s) -> None:
+    sh = np.asarray(s)
+    scale = float(np.max(np.abs(sh))) if sh.size else 0.0
+    asym = float(np.max(np.abs(sh - sh.T))) if sh.size else 0.0
+    if asym > SYMMETRY_RTOL * max(scale, 1.0):
+        raise ValueError(
+            f"s must be symmetric: max |s - s^T| = {asym:.3e} at scale "
+            f"{scale:.3e} — pass a genuine Gram/covariance (see "
+            f"data.compute_gram for streamed construction)")
+
+
 class Problem(NamedTuple):
     """Input data for one estimation problem (either x or s, maybe both)."""
     x: jax.Array | None         # (n, p) observations
@@ -59,14 +84,24 @@ class Problem(NamedTuple):
     def from_data(x=None, s=None, n_samples: int | None = None) -> "Problem":
         if x is None and s is None:
             raise ValueError("pass x (n, p) or s (p, p)")
+        if n_samples is not None and (not isinstance(n_samples, (int,
+                np.integer)) or n_samples < 1):
+            raise ValueError(f"n_samples must be a positive int, got "
+                             f"{n_samples!r}")
         if x is not None:
             x = jnp.asarray(x)
             if x.ndim != 2:
                 raise ValueError(f"x must be 2-D (n, p), got shape {x.shape}")
+            _require_finite("x", x)
         if s is not None:
             s = jnp.asarray(s)
             if s.ndim != 2 or s.shape[0] != s.shape[1]:
                 raise ValueError(f"s must be square (p, p), got {s.shape}")
+            _require_finite("s", s)
+            _require_symmetric(s)
+        if x is not None and s is not None and x.shape[1] != s.shape[0]:
+            raise ValueError(
+                f"x has p={x.shape[1]} columns but s is {s.shape}")
         p = (x if x is not None else s).shape[-1]
         n = x.shape[0] if x is not None else (n_samples or p)
         return Problem(x=x, s=s, n=int(n), p=int(p))

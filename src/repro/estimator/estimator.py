@@ -1,10 +1,12 @@
 """``ConcordEstimator`` — the sklearn-style front door to every solver.
 
-One object, four entry points:
+One object, five entry points:
 
     est = ConcordEstimator(lam1=0.15, lam2=0.05)
-    est.fit(X)                      # (n, p) observations
+    est.fit(X)                      # (n, p) observations — or ANY chunk
+                                    # stream (generator, shard paths, ...)
     est.fit_cov(S, n_samples=n)     # (p, p) sample covariance
+    est.fit_gram(gram_result)       # streamed Gram from repro.data
     path = est.fit_path(X, lam1_grid=[...])        # warm-started lam1 path
     best = path.best_bic()                         # model selection
 
@@ -82,8 +84,23 @@ class ConcordEstimator:
         self.n_iter_ = report.iters
         return self
 
-    def fit(self, x, *, omega0=None) -> "ConcordEstimator":
-        """Fit from an (n, p) observation matrix (either variant works)."""
+    def fit(self, x, *, omega0=None, transform: str | None = None,
+            chunk_rows: int | None = None) -> "ConcordEstimator":
+        """Fit from observations (either variant works).
+
+        ``x`` may be an in-memory (n, p) matrix, OR any chunk stream the
+        data subsystem understands — a generator/iterator of row-blocks,
+        a ``ChunkSource``, shard file paths, or a zero-arg factory (see
+        ``repro.data.shards``).  Streams (and arrays with ``transform``
+        set) are reduced to their f64 Gram by ``data.compute_gram``
+        without ever materializing X, then solved through the Cov
+        variant — the out-of-core front door."""
+        from ..data.shards import is_streaming_input
+        if is_streaming_input(x) or transform is not None:
+            from ..data.gram import compute_gram
+            gram = compute_gram(x, transform=transform or "none",
+                                chunk_rows=chunk_rows)
+            return self.fit_gram(gram, omega0=omega0)
         problem = Problem.from_data(x=x)
         return self._finish(self._solve(problem, self.lam1, omega0))
 
@@ -91,6 +108,25 @@ class ConcordEstimator:
                 omega0=None) -> "ConcordEstimator":
         """Fit from a (p, p) sample covariance (forces the Cov variant)."""
         problem = Problem.from_data(s=s, n_samples=n_samples)
+        return self._finish(self._solve(problem, self.lam1, omega0))
+
+    def fit_gram(self, gram, *, omega0=None) -> "ConcordEstimator":
+        """Fit from a streamed Gram (``data.compute_gram`` /
+        ``distributed_gram`` / the ``launch.gram prep`` artifact).
+
+        Accepts a :class:`repro.data.GramResult` or anything exposing
+        ``.s`` (the (p, p) Gram) and ``.n`` (rows streamed); the sample
+        count rides along so BIC model selection downstream stays
+        meaningful.  Validation (symmetry, finiteness) applies as in
+        ``fit_cov``."""
+        s = getattr(gram, "s", None)
+        n = getattr(gram, "n", None)
+        if s is None or n is None:
+            raise TypeError(
+                f"fit_gram wants a GramResult-like object with .s and .n "
+                f"(got {type(gram).__name__}); for a plain covariance "
+                f"array use fit_cov(s, n_samples=...)")
+        problem = Problem.from_data(s=s, n_samples=int(n))
         return self._finish(self._solve(problem, self.lam1, omega0))
 
     # -- regularization path --------------------------------------------
@@ -185,15 +221,18 @@ class ConcordEstimator:
 # ---------------------------------------------------------------------------
 
 def fit(x=None, *, s=None, lam1: float, lam2: float = 0.0,
-        n_samples: int | None = None,
+        n_samples: int | None = None, transform: str | None = None,
+        chunk_rows: int | None = None,
         config: SolverConfig | None = None, **knobs) -> FitReport:
-    """One-call fit through the facade.  Extra keyword args are SolverConfig
-    fields (e.g. ``backend="distributed"``, ``tol=1e-6``)."""
+    """One-call fit through the facade.  ``x`` may be a matrix or a chunk
+    stream (``transform``/``chunk_rows`` ride through to the streaming
+    Gram pipeline).  Extra keyword args are SolverConfig fields (e.g.
+    ``backend="distributed"``, ``tol=1e-6``)."""
     cfg = (config or SolverConfig()).replace(**knobs) if knobs else \
         (config or SolverConfig())
     est = ConcordEstimator(lam1=lam1, lam2=lam2, config=cfg)
     if x is not None:
-        est.fit(x)
+        est.fit(x, transform=transform, chunk_rows=chunk_rows)
     else:
         est.fit_cov(s, n_samples=n_samples)
     return est.report_

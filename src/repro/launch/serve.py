@@ -23,10 +23,23 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class ConcordServeStats(NamedTuple):
+    """What one concord-workload drain did — returned (not just printed)
+    so the micro-batching behavior is testable."""
+    reports: list               # one FitReport per request, input order
+    lam1s: np.ndarray           # the per-request penalties served
+    n_groups: int               # compiled-program launches (ceil(R/batch))
+    group_shapes: list          # (B, n, p) of each fit_batch call
+    t_batched: float
+    t_sequential: float
+    max_gap: float              # max |Ω_batched - Ω_sequential| across queue
 
 
 def serve_batch(cfg, params, prompts, gen: int, max_len: int,
@@ -76,12 +89,14 @@ def serve_concord(args):
 
     # batched drain: pad the tail group to bsz for compiled-program reuse
     t0 = time.time()
-    reports = []
+    reports, group_shapes = [], []
     for lo in range(0, args.requests, bsz):
         hi = min(lo + bsz, args.requests)
         take = hi - lo
         idx = list(range(lo, hi)) + [hi - 1] * (bsz - take)
-        rep = fit_batch(x=jnp.asarray(xs[idx]), lam1=lam1s[idx],
+        xg = jnp.asarray(xs[idx])
+        group_shapes.append(tuple(xg.shape))
+        rep = fit_batch(x=xg, lam1=lam1s[idx],
                         lam2=args.lam2, config=config)
         reports.extend(rep.reports[:take])
     t_batched = time.time() - t0
@@ -104,7 +119,10 @@ def serve_concord(args):
           f"{t_sequential:.2f}s ({args.requests / t_sequential:.2f} req/s) "
           f"incl. compile; converged {n_conv}/{args.requests}; "
           f"max |Ω_batch - Ω_seq| {gap:.2e}")
-    return reports
+    return ConcordServeStats(
+        reports=reports, lam1s=lam1s, n_groups=len(group_shapes),
+        group_shapes=group_shapes, t_batched=t_batched,
+        t_sequential=t_sequential, max_gap=gap)
 
 
 def main(argv=None):

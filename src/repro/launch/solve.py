@@ -9,6 +9,12 @@ and the (c_X, c_Omega) replication factors unless pinned.  ``--path`` runs
 a lam1 path (the Section-5 model-selection sweep) and reports the BIC-best
 point; ``--path-mode batched`` lowers the whole grid to one compiled
 multi-problem program instead of sequential warm-started solves.
+
+``--from-gram DIR`` solves straight from a ``launch.gram prep`` artifact
+(S.npy + metadata) — the raw observations never enter this process:
+
+  PYTHONPATH=src python -m repro.launch.solve --from-gram results/gram_sf \
+      --lam1 0.15
 """
 from __future__ import annotations
 
@@ -21,6 +27,36 @@ import numpy as np
 from ..core import distributed, graphs
 from ..core.costmodel import Machine, ProblemShape, tune
 from ..estimator import ConcordEstimator, SolverConfig
+
+
+def _solve_from_gram(args):
+    """Solve from a prepped Gram artifact: the raw data never loads."""
+    from .gram import load_gram
+
+    gram = load_gram(args.from_gram)
+    config = SolverConfig(
+        backend=args.backend, variant="cov",
+        c_x=args.cx, c_omega=args.comega,
+        tol=args.tol, max_iters=args.max_iters,
+        sparse_matmul=args.sparse_matmul, sparse_block=args.sparse_block,
+        sparse_threshold=args.sparse_threshold)
+    est = ConcordEstimator(lam1=args.lam1, lam2=args.lam2, config=config)
+    print(f"[gram] {gram.transform} Gram: n={gram.n} p={gram.p} "
+          f"({gram.n_chunks} chunks, source dtype {gram.source_dtype})")
+    if args.path:
+        grid = [float(v) for v in args.path.split(",")]
+        path = est.fit_path(s=jnp.asarray(gram.s), n_samples=gram.n,
+                            lam1_grid=grid, mode=args.path_mode)
+        print(path.summary())
+        chosen = path.best_bic()
+        print(f"BIC-best lam1={chosen.lam1:g} (bic={chosen.bic:.1f})")
+        rep = chosen
+    else:
+        rep = est.fit_gram(gram).report_
+    print(rep.summary())
+    est_omega = np.asarray(rep.omega)
+    print(f"avg degree {graphs.avg_degree(est_omega):.2f}")
+    return rep
 
 
 def main(argv=None):
@@ -56,8 +92,15 @@ def main(argv=None):
                     help="sequential: one warm-started solve per path "
                          "point; batched: the whole grid as ONE compiled "
                          "multi-problem program (core.batch)")
+    ap.add_argument("--from-gram", default=None, metavar="DIR",
+                    help="solve from a launch.gram prep artifact "
+                         "(S.npy + gram_meta.json) instead of "
+                         "synthesizing a problem")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.from_gram:
+        return _solve_from_gram(args)
 
     prob = graphs.make_problem(args.graph, args.p, args.n, seed=args.seed)
     P = len(jax.devices())

@@ -1,0 +1,411 @@
+"""Streaming data/Gram subsystem tests.
+
+Agreement convention (project memory): exactness asserts run in float64 —
+the accumulator's f64 contract holds with jax x64 BOTH off (host numpy
+panels) and on (jnp panels), and streamed-vs-dense must match at 1e-10.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from conftest import run_with_devices
+from repro.core.matops import panel_gram
+from repro.data import (
+    GramAccumulator,
+    as_source,
+    available_families,
+    compute_gram,
+    make_scenario,
+    open_shards,
+    write_shards,
+)
+from repro.data.shards import is_streaming_input
+from repro.data.transforms import get_transform, rank_transform_column
+
+AGREE = 1e-10
+
+MOMENT_TRANSFORMS = ["none", "center", "standardize"]
+
+
+@pytest.fixture(scope="module")
+def x_data():
+    rng = np.random.default_rng(7)
+    return rng.standard_normal((900, 41))
+
+
+def _dense_reference(x, transform):
+    x = np.asarray(x, np.float64)
+    if transform == "none":
+        z = x
+    elif transform == "center":
+        z = x - x.mean(0)
+    elif transform == "standardize":
+        z = (x - x.mean(0)) / x.std(0)
+    else:  # rank
+        z = np.stack([rank_transform_column(x[:, j])
+                      for j in range(x.shape[1])], axis=1)
+    return z.T @ z / x.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# streamed vs one-shot agreement (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("transform", MOMENT_TRANSFORMS + ["rank"])
+def test_streamed_gram_matches_dense_over_chunks(x_data, transform):
+    """>= 4 uneven chunks, any transform: the streamed f64 Gram matches
+    the dense XᵀX/n of the transformed matrix to 1e-10."""
+    g = compute_gram(x_data, transform=transform, chunk_rows=211)
+    assert g.n_chunks >= 4 and g.n == 900 and g.p == 41
+    ref = _dense_reference(x_data, transform)
+    assert np.abs(g.s - ref).max() < AGREE
+    assert g.s.dtype == np.float64
+    np.testing.assert_array_equal(g.s, g.s.T)
+
+
+@pytest.mark.parametrize("transform", MOMENT_TRANSFORMS)
+def test_streamed_gram_f64_with_x64_enabled(x_data, transform):
+    """Same agreement with the jnp panel path (jax x64 on)."""
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        g = compute_gram(as_source(x_data, chunk_rows=190),
+                         transform=transform)
+        assert np.abs(g.s - _dense_reference(x_data, transform)).max() < AGREE
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+def test_f64_accumulation_from_f32_chunks(x_data):
+    """bf16/f32 shards still produce an f64 Gram: agreement against the
+    dense product of the UPCAST data (dtype of the stream is recorded)."""
+    x32 = x_data.astype(np.float32)
+    g = compute_gram(as_source(x32, chunk_rows=180))
+    ref = x32.astype(np.float64)
+    assert np.abs(g.s - ref.T @ ref / 900).max() < AGREE
+    assert g.s.dtype == np.float64 and g.source_dtype == "float32"
+
+
+def test_chunk_order_invariance(x_data):
+    """Welford/Chan merging: permuting the chunk order moves the result
+    only at f64 summation-order level."""
+    chunks = [x_data[lo:lo + 225] for lo in range(0, 900, 225)]
+    g1 = compute_gram(chunks, transform="standardize")
+    g2 = compute_gram(chunks[::-1], transform="standardize")
+    assert np.abs(g1.s - g2.s).max() < 1e-12
+
+
+def test_accumulator_merge_matches_single(x_data):
+    a = GramAccumulator().update(x_data[:300]).update(x_data[300:400])
+    b = GramAccumulator().update(x_data[400:850]).update(x_data[850:])
+    merged = a.merge(b).finalize()
+    one = compute_gram(x_data, transform="none")
+    assert merged.n == 900
+    assert np.abs(merged.s - one.s).max() < AGREE
+    assert np.abs(merged.mean - one.mean).max() < 1e-12
+
+
+def test_panel_gram_blocked_matches_direct(x_data):
+    x64 = np.asarray(x_data, np.float64)
+    out = np.asarray(panel_gram(x64, panel=7))
+    assert out.dtype == np.float64            # host f64 path (x64 off)
+    assert np.abs(out - x64.T @ x64).max() < AGREE
+
+
+# ---------------------------------------------------------------------------
+# transforms
+# ---------------------------------------------------------------------------
+
+def test_standardize_gram_is_correlation(x_data):
+    g = compute_gram(x_data, transform="standardize")
+    assert np.abs(np.diag(g.s) - 1.0).max() < 1e-12
+    assert np.abs(g.s).max() <= 1.0 + 1e-12
+
+
+def test_rank_transform_invariant_under_monotone_marginals(x_data):
+    """The nonparanormal claim: strictly monotone per-column distortions
+    leave the rank Gram bit-identical."""
+    distorted = x_data.copy()
+    distorted[:, 0] = np.exp(distorted[:, 0])
+    distorted[:, 5] = distorted[:, 5] ** 3
+    distorted[:, 9] = np.arctan(distorted[:, 9]) * 10.0
+    g0 = compute_gram(x_data, transform="rank")
+    g1 = compute_gram(distorted, transform="rank")
+    np.testing.assert_array_equal(g0.s, g1.s)
+
+
+def test_rank_requires_reiterable_source(x_data):
+    gen = (x_data[lo:lo + 100] for lo in range(0, 900, 100))
+    with pytest.raises(ValueError, match="re-iterable"):
+        compute_gram(gen, transform="rank")
+
+
+def test_rank_bounded_panels_match_wide_panels(x_data):
+    """Shrinking the rank budget (1-column panels, many source sweeps)
+    cannot change the answer — only the memory footprint."""
+    tight = compute_gram(as_source(x_data, chunk_rows=300),
+                         transform="rank", budget_bytes=900 * 8)
+    wide = compute_gram(x_data, transform="rank")
+    assert np.abs(tight.s - wide.s).max() < AGREE
+
+
+def test_rank_rejects_accumulator_and_unknown_names():
+    with pytest.raises(ValueError, match="two-pass"):
+        GramAccumulator(transform="rank")
+    with pytest.raises(ValueError, match="unknown transform"):
+        get_transform("zscore")
+
+
+# ---------------------------------------------------------------------------
+# shard sources
+# ---------------------------------------------------------------------------
+
+def test_npy_shard_roundtrip(tmp_path, x_data):
+    write_shards(x_data.astype(np.float32), tmp_path, rows_per_shard=256)
+    src = open_shards(tmp_path, chunk_rows=100)
+    assert src.reiterable and src.p == 41 and src.n_rows == 900
+    g = compute_gram(src, transform="center")
+    ref = _dense_reference(x_data.astype(np.float32), "center")
+    assert np.abs(g.s - ref).max() < AGREE
+
+
+def test_raw_shard_roundtrip(tmp_path, x_data):
+    paths = write_shards(x_data, tmp_path, rows_per_shard=333, raw=True)
+    src = open_shards(paths, chunk_rows=128)
+    assert src.n_rows == 900
+    g = compute_gram(src)
+    assert np.abs(g.s - x_data.T @ x_data / 900).max() < AGREE
+
+
+def test_mixed_shard_formats_rejected(tmp_path, x_data):
+    """A stray .npy in a raw-shard set must refuse loudly — parsed as raw
+    binary its 128-byte header would fold into the Gram as a garbage row
+    (the size-multiple check can't catch it: the header is row-sized for
+    p=16 f64)."""
+    paths = write_shards(x_data, tmp_path, rows_per_shard=500, raw=True)
+    np.save(tmp_path / "stray.npy", x_data[:10])
+    with pytest.raises(ValueError, match="mixed shard formats"):
+        open_shards(paths + [str(tmp_path / "stray.npy")])
+
+
+def test_raw_shards_without_sidecar_rejected(tmp_path, x_data):
+    paths = write_shards(x_data, tmp_path, rows_per_shard=500, raw=True)
+    (tmp_path / "shards_meta.json").unlink()
+    with pytest.raises(ValueError, match="sidecar"):
+        open_shards(paths)
+
+
+def test_is_streaming_input_discriminates(x_data):
+    import jax.numpy as jnp
+    assert is_streaming_input(iter([x_data]))
+    assert is_streaming_input(lambda: iter([x_data]))
+    assert is_streaming_input(as_source(x_data))
+    assert not is_streaming_input(x_data)
+    assert not is_streaming_input(jnp.zeros((3, 3)))
+    assert not is_streaming_input([[1.0, 2.0], [3.0, 4.0]])
+
+
+def test_one_shot_iterator_single_sweep_only(x_data):
+    src = as_source(c for c in [x_data[:450], x_data[450:]])
+    g = compute_gram(src)
+    assert g.n == 900
+    with pytest.raises(ValueError, match="consumed"):
+        list(src.chunks())
+
+
+# ---------------------------------------------------------------------------
+# scenario suite
+# ---------------------------------------------------------------------------
+
+def test_scenario_registry_has_at_least_five_families():
+    assert len(available_families()) >= 5
+    assert {"banded", "hub", "erdos_renyi", "block",
+            "scale_free"} <= set(available_families())
+
+
+@pytest.mark.parametrize("family", sorted({"banded", "hub", "erdos_renyi",
+                                           "block", "scale_free"}))
+def test_scenario_omega_spd_exact_cond_and_stream(family):
+    sc = make_scenario(family, p=40, cond=12.0, seed=3)
+    ev = np.linalg.eigvalsh(sc.omega)
+    assert ev[0] > 0                                 # SPD
+    assert ev[-1] / ev[0] == pytest.approx(12.0, rel=1e-9)
+    np.testing.assert_allclose(np.diag(sc.omega), 1.0)
+    assert sc.avg_degree > 0                         # non-empty graph
+    # seeded chunked sampler: re-iterable + byte-identical across opens
+    s1, s2 = (sc.source(500, chunk_rows=128, seed=5) for _ in range(2))
+    c1 = np.concatenate(list(s1.chunks()))
+    c2 = np.concatenate(list(s2.chunks()))
+    np.testing.assert_array_equal(c1, c2)
+    assert c1.shape == (500, 40)
+    # the stream's covariance approaches inv(Omega)
+    big = sc.sample(6000, seed=1)
+    emp = big.T @ big / 6000
+    assert np.abs(emp - np.linalg.inv(sc.omega)).max() < 0.5
+
+
+@pytest.mark.parametrize("family", sorted({"banded", "hub", "erdos_renyi",
+                                           "block", "scale_free"}))
+def test_scenario_recovery_smoke(family):
+    """Per-generator end-to-end: stream -> Gram -> solve recovers a
+    meaningful share of the true support (bounds calibrated well below
+    the ~0.86+ PPV these settings actually achieve)."""
+    from repro.core import graphs
+    from repro.estimator import ConcordEstimator, SolverConfig
+
+    sc = make_scenario(family, p=32, cond=8.0, seed=0)
+    g = compute_gram(sc.source(1500, chunk_rows=400),
+                     transform="standardize")
+    cfg = SolverConfig(backend="reference", variant="cov", tol=1e-5,
+                       max_iters=200)
+    est = ConcordEstimator(lam1=0.1, lam2=0.05, config=cfg).fit_gram(g)
+    assert est.report_.converged
+    ppv, fdr = graphs.ppv_fdr(np.asarray(est.omega_), sc.omega)
+    assert ppv >= 0.6, f"{family}: PPV {ppv:.2f}"
+
+
+def test_scenario_heavy_tails():
+    sc = make_scenario("banded", p=12, heavy_tail_df=4.0, seed=0)
+    x = sc.sample(4000, seed=2)
+    kurt = float(np.mean(x ** 4) / np.mean(x ** 2) ** 2)
+    assert kurt > 4.0          # well above the Gaussian 3
+
+
+def test_scenario_unknown_family():
+    with pytest.raises(ValueError, match="unknown scenario family"):
+        make_scenario("smallworld", p=16)
+
+
+# ---------------------------------------------------------------------------
+# estimator integration + input validation (satellite)
+# ---------------------------------------------------------------------------
+
+def _cfg():
+    from repro.estimator import SolverConfig
+    return SolverConfig(backend="reference", variant="cov", tol=1e-5,
+                        max_iters=200)
+
+
+def test_fit_cov_rejects_nonfinite_and_asymmetric(x_data):
+    from repro.estimator import ConcordEstimator
+    s = np.cov(x_data.T)
+    bad = s.copy()
+    bad[3, 4] = np.nan
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        ConcordEstimator(lam1=0.2, config=_cfg()).fit_cov(bad, n_samples=900)
+    with pytest.raises(ValueError, match="symmetric"):
+        ConcordEstimator(lam1=0.2, config=_cfg()).fit_cov(
+            s + np.triu(np.ones_like(s), k=1), n_samples=900)
+    with pytest.raises(ValueError, match="square"):
+        ConcordEstimator(lam1=0.2, config=_cfg()).fit_cov(s[:, :5])
+    with pytest.raises(ValueError, match="n_samples"):
+        ConcordEstimator(lam1=0.2, config=_cfg()).fit_cov(s, n_samples=0)
+
+
+def test_fit_rejects_nonfinite_x(x_data):
+    from repro.estimator import ConcordEstimator
+    x = x_data.copy()
+    x[5, 5] = np.inf
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        ConcordEstimator(lam1=0.2, config=_cfg()).fit(x)
+
+
+def test_fit_gram_duck_typing_and_validation(x_data):
+    from repro.estimator import ConcordEstimator
+    with pytest.raises(TypeError, match="GramResult-like"):
+        ConcordEstimator(lam1=0.2).fit_gram(np.eye(4))
+    g = compute_gram(x_data, transform="standardize")
+    garbage = g._replace(s=np.full_like(g.s, np.nan))
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        ConcordEstimator(lam1=0.2, config=_cfg()).fit_gram(garbage)
+
+
+def test_streamed_fit_agrees_with_dense_solve_f64(x_data):
+    """f64 solver agreement: a >=4-chunk streamed fit and the dense
+    fit_cov of the same transformed data produce the same estimate."""
+    from repro.estimator import ConcordEstimator
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        est_s = ConcordEstimator(lam1=0.15, lam2=0.05, config=_cfg()).fit(
+            (x_data[lo:lo + 225] for lo in range(0, 900, 225)))
+        ref = _dense_reference(x_data, "none")
+        est_d = ConcordEstimator(lam1=0.15, lam2=0.05,
+                                 config=_cfg()).fit_cov(ref, n_samples=900)
+        gap = np.abs(np.asarray(est_s.omega_)
+                     - np.asarray(est_d.omega_)).max()
+        assert gap < 1e-8, gap
+        assert est_s.report_.variant == "cov"
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+def test_fit_transform_kwarg_routes_array_through_pipeline(x_data):
+    from repro.estimator import ConcordEstimator
+    est = ConcordEstimator(lam1=0.2, lam2=0.05, config=_cfg())
+    est.fit(x_data, transform="rank")
+    assert est.report_.converged
+    assert est.report_.variant == "cov"
+
+
+def test_gram_chunk_rows_guidance():
+    from repro.core.costmodel import Machine, gram_chunk_rows
+    rows = gram_chunk_rows(1024)
+    assert 256 <= rows <= 1 << 20
+    # tighter budget -> smaller chunks, floor respected once the (p, p)
+    # accumulator is accounted for
+    tight = gram_chunk_rows(1024, budget_bytes=1024 * 1024 * 8 + 1e6)
+    assert 256 <= tight <= rows
+    # accumulator alone over budget -> no chunk size can help: raise
+    with pytest.raises(ValueError, match="accumulator alone"):
+        gram_chunk_rows(10 ** 6, machine=Machine())
+    with pytest.raises(ValueError):
+        gram_chunk_rows(0)
+
+
+def test_gram_cli_prep_and_solve_from_gram(tmp_path):
+    from repro.launch import gram as gram_cli
+    from repro.launch import solve as solve_cli
+    out = str(tmp_path / "art")
+    gram_cli.main(["prep", "--scenario", "hub", "--p", "32", "--n", "3000",
+                   "--chunk-rows", "512", "--transform", "standardize",
+                   "--out", out])
+    import json
+    import os
+    assert os.path.exists(os.path.join(out, "S.npy"))
+    with open(os.path.join(out, "gram_meta.json")) as f:
+        meta = json.load(f)
+    assert meta["n"] == 3000 and meta["p"] == 32
+    assert meta["transform"] == "standardize"
+    assert meta["peak_bytes_streamed"] < meta["peak_bytes_dense"]
+    rep = solve_cli.main(["--from-gram", out, "--lam1", "0.2",
+                          "--backend", "reference", "--max-iters", "150"])
+    assert rep.variant == "cov" and rep.omega.shape == (32, 32)
+
+
+# ---------------------------------------------------------------------------
+# distributed twin (one psum through comm/compat)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_distributed_gram_psum_matches_oneshot():
+    run_with_devices("""
+import numpy as np, jax
+jax.config.update("jax_enable_x64", True)
+from repro.data import distributed_gram, compute_gram
+rng = np.random.default_rng(0)
+parts = [rng.standard_normal((n, 19)) for n in (210, 401, 88, 301)]
+full = np.concatenate(parts)
+for tf in ["none", "center", "standardize"]:
+    g = distributed_gram(parts, transform=tf, chunk_rows=97)
+    ref = compute_gram(full, transform=tf)
+    assert np.abs(g.s - ref.s).max() < 1e-10, tf
+    assert g.n == 1000
+try:
+    distributed_gram(parts, transform="rank")
+    raise SystemExit("rank must raise")
+except ValueError:
+    pass
+print("OK")
+""", n_devices=4)

@@ -1,0 +1,84 @@
+"""Serving-launcher coverage: the ``--workload concord`` micro-batching
+drain (queue bucketing, tail padding, compiled-program reuse) that was
+previously untested, plus the batched-vs-sequential agreement it prints.
+"""
+import argparse
+
+import numpy as np
+import pytest
+
+import repro.estimator as est_mod
+from repro.launch.serve import ConcordServeStats, serve_concord
+
+
+def _args(**overrides) -> argparse.Namespace:
+    base = dict(requests=5, batch=2, p=16, n=48, lam2=0.05,
+                tol=1e-4, max_iters=60, seed=0)
+    base.update(overrides)
+    return argparse.Namespace(**base)
+
+
+@pytest.fixture(scope="module")
+def drained():
+    """One real drain shared by the cheap asserts below (5 requests in
+    micro-batches of 2: two full groups + one padded tail group)."""
+    return serve_concord(_args())
+
+
+def test_serve_concord_returns_all_requests_in_order(drained):
+    assert isinstance(drained, ConcordServeStats)
+    assert len(drained.reports) == 5
+    # per-request penalties survive bucketing + padding in input order
+    for rep, lam1 in zip(drained.reports, drained.lam1s):
+        assert rep.lam1 == pytest.approx(float(lam1))
+
+
+def test_serve_concord_pads_tail_group_for_program_reuse(drained):
+    """5 requests at batch=2 -> 3 compiled launches, and the tail group is
+    PADDED to the same (B, n, p) shape as the full groups — shape equality
+    is exactly the compiled-program-reuse precondition (one executable
+    serves every group)."""
+    assert drained.n_groups == 3
+    assert len(set(drained.group_shapes)) == 1
+    assert drained.group_shapes[0] == (2, 48, 16)
+
+
+def test_serve_concord_padding_results_are_dropped(drained):
+    """The padding replica of the last request must not leak into the
+    drained queue: exactly `requests` reports, and the final report solves
+    the final request's lam1 (not a duplicate row)."""
+    assert len(drained.reports) == 5
+    assert drained.reports[-1].lam1 == pytest.approx(float(drained.lam1s[-1]))
+
+
+def test_serve_concord_batched_agrees_with_sequential(drained):
+    """The drain itself cross-checks every batched estimate against a
+    sequential solve of the same request; f32 fixed points scatter ~1e-4
+    (project memory), so the gate is loose but meaningful."""
+    assert np.isfinite(drained.max_gap)
+    assert drained.max_gap < 5e-3
+
+
+def test_serve_concord_exact_multiple_needs_no_padding():
+    """4 requests at batch=2: two groups, no padding anywhere."""
+    calls = []
+    real = est_mod.fit_batch
+
+    def spy(x=None, **kw):
+        calls.append(tuple(np.asarray(x).shape))
+        return real(x=x, **kw)
+
+    est_mod.fit_batch = spy
+    try:
+        stats = serve_concord(_args(requests=4))
+    finally:
+        est_mod.fit_batch = real
+    assert calls == [(2, 48, 16), (2, 48, 16)]
+    assert stats.n_groups == 2 and len(stats.reports) == 4
+
+
+def test_serve_concord_single_request_pads_to_full_batch():
+    stats = serve_concord(_args(requests=1, batch=3))
+    assert stats.n_groups == 1
+    assert stats.group_shapes == [(3, 48, 16)]
+    assert len(stats.reports) == 1
