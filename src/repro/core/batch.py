@@ -13,7 +13,15 @@ ONE compiled program:
     closed over (broadcast, one copy in memory); only the penalty and the
     iterates carry a batch axis.
   * ``solve_batch`` — stacked ``(B, ...)`` datasets (multi-subject /
-    multi-tenant workloads), each with its own lam1/lam2 if desired.
+    multi-tenant workloads), each with its own penalty if desired.
+
+Penalties are :class:`repro.core.penalty.PenaltySpec` pytrees whose
+numeric leaves are traced, so EVERY penalty parameter — not just lam1 —
+may differ per lane inside the one compiled program: a spec leaf with a
+leading (B,) axis (e.g. per-lane SCAD shapes, per-lane lam1) is vmapped,
+shared leaves (e.g. one weight matrix) broadcast without copies
+(``PenaltySpec.batch_axes``).  The legacy ``lam1``/``lam2`` arguments
+build the equivalent l1 spec, bit-identically.
 
 Correctness of the batched ``while_loop``s: under vmap a while_loop runs
 until EVERY lane's condition is false and the body executes for all lanes
@@ -41,6 +49,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .penalty import PenaltySpec, normalize_penalty
 from .prox import ProxResult, cov_ops, obs_ops, prox_gradient
 
 _SOLVER_STATICS = ("variant", "tol", "max_iters", "max_ls", "warm_start_tau")
@@ -59,12 +68,56 @@ def _data_of(arr, lam2, variant: str):
     return {key: arr, "lam2": jnp.asarray(lam2, arr.dtype)}
 
 
+def _resolve_spec(penalty, lam1, lam2) -> tuple[PenaltySpec, object]:
+    """(spec, ridge) from either a penalty spec/string or legacy floats.
+    The smooth ridge is returned separately (it feeds the per-lane data
+    dict exactly like the pre-spec plumbing)."""
+    spec = normalize_penalty(penalty, lam1, lam2)
+    return spec, spec.lam2
+
+
+def _omega0_axis(omega0, p, dtype):
+    if omega0 is None:
+        return jnp.eye(p, dtype=dtype), None
+    omega0 = jnp.asarray(omega0, dtype)
+    return omega0, (0 if omega0.ndim == 3 else None)
+
+
 @partial(jax.jit, static_argnames=_SOLVER_STATICS)
+def _solve_path_batched(
+    s_or_x: jax.Array,
+    penalty: PenaltySpec,
+    ridge,
+    omega0,
+    *,
+    variant: str,
+    tol: float,
+    max_iters: int,
+    max_ls: int,
+    warm_start_tau: bool,
+) -> ProxResult:
+    ops = _variant_ops(variant)
+    data = _data_of(s_or_x, ridge, variant)
+    omega0, om_axis = _omega0_axis(omega0, s_or_x.shape[-1], s_or_x.dtype)
+    b = penalty.lam1.shape[0]
+    pleaves, ptree = jax.tree_util.tree_flatten(penalty)
+
+    def one(om0, *pl):
+        pen = jax.tree_util.tree_unflatten(ptree, pl)
+        return prox_gradient(
+            om0, data, ops, penalty=pen, tol=tol, max_iters=max_iters,
+            max_ls=max_ls, warm_start_tau=warm_start_tau)
+
+    return jax.vmap(one, in_axes=(om_axis, *penalty.batch_axes(b)))(
+        omega0, *pleaves)
+
+
 def solve_path_batched(
     s_or_x: jax.Array,
     lam1_grid: jax.Array,
     lam2: float = 0.0,
     *,
+    penalty: PenaltySpec | str | None = None,
     omega0: jax.Array | None = None,
     variant: str = "cov",
     tol: float = 1e-5,
@@ -76,40 +129,66 @@ def solve_path_batched(
 
     ``s_or_x`` is the (p, p) sample covariance (variant="cov") or the
     (n, p) observations (variant="obs"), broadcast across the batch (one
-    copy); ``lam1_grid`` is the (B,) penalty vector.  ``omega0`` may be
-    None (identity start for every point), a single (p, p) warm start
-    shared by all points, or a stacked (B, p, p) per-point start.  Returns
-    a :class:`ProxResult` whose every field carries a leading (B,) axis;
-    ``lam1_grid`` and ``omega0`` are traced, so re-solving a same-length
-    grid reuses the compiled program.
+    copy); ``lam1_grid`` is the (B,) penalty vector.  ``penalty`` swaps
+    the penalty family for the whole grid (its lam1 is replaced by the
+    grid; other parameters — SCAD shape, a weight matrix — are shared
+    across lanes).  ``omega0`` may be None (identity start for every
+    point), a single (p, p) warm start shared by all points, or a stacked
+    (B, p, p) per-point start.  Returns a :class:`ProxResult` whose every
+    field carries a leading (B,) axis; all penalty parameters and
+    ``omega0`` are traced, so re-solving a same-length grid reuses the
+    compiled program.
     """
     lam1_grid = jnp.asarray(lam1_grid)
     if lam1_grid.ndim != 1:
         raise ValueError(f"lam1_grid must be 1-D, got shape {lam1_grid.shape}")
-    ops = _variant_ops(variant)
-    data = _data_of(s_or_x, lam2, variant)
-    p = s_or_x.shape[-1]
-    if omega0 is None:
-        omega0 = jnp.eye(p, dtype=s_or_x.dtype)
-        om_axis = None
+    if penalty is None:
+        spec, ridge = PenaltySpec("l1", lam1_grid), lam2
     else:
-        omega0 = jnp.asarray(omega0, s_or_x.dtype)
-        om_axis = 0 if omega0.ndim == 3 else None
-
-    def one(om0, lam1):
-        return prox_gradient(
-            om0, data, ops, lam1=lam1, tol=tol, max_iters=max_iters,
-            max_ls=max_ls, warm_start_tau=warm_start_tau)
-
-    return jax.vmap(one, in_axes=(om_axis, 0))(omega0, lam1_grid)
+        # the grid IS the strength here, so a string form needs only its
+        # kind/shape — feed a placeholder lam1 that the grid replaces
+        base, ridge = _resolve_spec(
+            penalty, 0.0 if isinstance(penalty, str) else None, lam2)
+        spec = base.with_lam1(lam1_grid)
+    return _solve_path_batched(
+        s_or_x, spec, ridge, omega0, variant=variant, tol=tol,
+        max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau)
 
 
 @partial(jax.jit, static_argnames=_SOLVER_STATICS)
+def _solve_batch(
+    s_or_x: jax.Array,
+    penalty: PenaltySpec,
+    ridge: jax.Array,
+    omega0,
+    *,
+    variant: str,
+    tol: float,
+    max_iters: int,
+    max_ls: int,
+    warm_start_tau: bool,
+) -> ProxResult:
+    b = s_or_x.shape[0]
+    omega0, om_axis = _omega0_axis(omega0, s_or_x.shape[-1], s_or_x.dtype)
+    pleaves, ptree = jax.tree_util.tree_flatten(penalty)
+
+    def one(om0, arr, l2, *pl):
+        pen = jax.tree_util.tree_unflatten(ptree, pl)
+        return prox_gradient(
+            om0, _data_of(arr, l2, variant), _variant_ops(variant),
+            penalty=pen, tol=tol, max_iters=max_iters, max_ls=max_ls,
+            warm_start_tau=warm_start_tau)
+
+    return jax.vmap(one, in_axes=(om_axis, 0, 0, *penalty.batch_axes(b)))(
+        omega0, s_or_x, ridge, *pleaves)
+
+
 def solve_batch(
     s_or_x: jax.Array,
-    lam1: jax.Array,
+    lam1: jax.Array | None = None,
     lam2: jax.Array = 0.0,
     *,
+    penalty: PenaltySpec | str | None = None,
     omega0: jax.Array | None = None,
     variant: str = "cov",
     tol: float = 1e-5,
@@ -123,6 +202,9 @@ def solve_batch(
     (B, n, p) stacked observation matrices (variant="obs") — every problem
     shares one shape, the server-side bucketing invariant.  ``lam1`` and
     ``lam2`` are scalars (shared) or (B,) vectors (per-problem);
+    equivalently ``penalty`` carries the whole spec, and ANY of its
+    numeric leaves may be (B,)-batched for per-lane penalty parameters
+    (e.g. per-lane SCAD shapes) inside the single compiled program.
     ``omega0`` is None, one shared (p, p) start, or stacked (B, p, p).
     Returns a :class:`ProxResult` with a leading (B,) axis on every field.
     """
@@ -132,21 +214,10 @@ def solve_batch(
             f"solve_batch expects stacked (B, n|p, p) data, got shape "
             f"{s_or_x.shape}")
     b = s_or_x.shape[0]
-    p = s_or_x.shape[-1]
-    lam1 = jnp.broadcast_to(jnp.asarray(lam1, s_or_x.dtype), (b,))
-    lam2 = jnp.broadcast_to(jnp.asarray(lam2, s_or_x.dtype), (b,))
-    if omega0 is None:
-        omega0 = jnp.eye(p, dtype=s_or_x.dtype)
-        om_axis = None
-    else:
-        omega0 = jnp.asarray(omega0, s_or_x.dtype)
-        om_axis = 0 if omega0.ndim == 3 else None
-
-    def one(om0, arr, l1, l2):
-        return prox_gradient(
-            om0, _data_of(arr, l2, variant), _variant_ops(variant),
-            lam1=l1, tol=tol, max_iters=max_iters, max_ls=max_ls,
-            warm_start_tau=warm_start_tau)
-
-    return jax.vmap(one, in_axes=(om_axis, 0, 0, 0))(
-        omega0, s_or_x, lam1, lam2)
+    spec, ridge = _resolve_spec(penalty, lam1, lam2)
+    lam1_b = jnp.broadcast_to(jnp.asarray(spec.lam1, s_or_x.dtype), (b,))
+    spec = spec.with_lam1(lam1_b)
+    ridge_b = jnp.broadcast_to(jnp.asarray(ridge, s_or_x.dtype), (b,))
+    return _solve_batch(
+        s_or_x, spec, ridge_b, omega0, variant=variant, tol=tol,
+        max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau)

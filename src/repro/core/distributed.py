@@ -32,6 +32,7 @@ so reported objectives match the reference solver.
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from typing import NamedTuple
 
@@ -46,6 +47,7 @@ from ..comm.compat import axis_size, shard_map, use_mesh
 from ..comm.grid import Grid1p5D
 from . import matops
 from .costmodel import Machine, ProblemShape, tune
+from .penalty import PenaltySpec, normalize_penalty
 from .prox import ProxResult, VariantOps, guard_nonpos_diag, prox_gradient
 
 SPEC_XCOL = mm.SPEC_XCOL
@@ -175,14 +177,15 @@ def _dist_sparse_ops(policy: matops.MatmulPolicy, use_pallas: bool, dtype,
     only the diag-mask layout and the psum axes differ between variants."""
     bs = policy.block_size
 
-    def prox_stats(z, alpha, data):
-        if use_pallas:
+    def prox_stats(z, pen, tau, data):
+        if use_pallas and pen.pallas_ok:
             # occupancy harvested for free from the fused kernel's nnz lane
             from ..kernels import ops as kops
             out, _, _, _, _, bnnz = kops.fused_prox_stats(
-                z, diag_mask_of(), alpha, block=(bs, bs))
+                z, diag_mask_of(), tau * pen.lam1, weights=pen.weights,
+                block=(bs, bs))
             return out, (bnnz > 0).astype(matops.MASK_DTYPE)
-        out = prox(z, alpha, data)
+        out = prox(z, pen, tau, data)
         return out, matops.block_mask(out, bs)
 
     def mask_of(omega_loc, data):
@@ -243,13 +246,13 @@ def _cov_local_ops(grid: Grid1p5D, p_pad: int, p_real: int, lam2, dtype,
     def dot(a, b):
         return _psum_x(jnp.sum(a * b))
 
-    def prox(z, alpha, data):
+    def prox(z, pen, tau, data):
         diag_mask, _ = _diag_mask_panel_x(p_pad, blk, p_real, dtype)
-        if use_pallas:
+        if use_pallas and pen.pallas_ok:
             from ..kernels import ops as kops
-            return kops.fused_prox(z, diag_mask, alpha)
-        st = jnp.sign(z) * jnp.maximum(jnp.abs(z) - alpha, 0.0)
-        return st * (1.0 - diag_mask) + z * diag_mask
+            return kops.fused_prox(z, diag_mask, tau * pen.lam1,
+                                   weights=pen.weights)
+        return pen.prox(z, tau, diag_mask)
 
     if policy is None:
         return VariantOps(aux_of, g_of, grad_of, dot, prox)
@@ -305,13 +308,13 @@ def _obs_local_ops(grid: Grid1p5D, p_pad: int, p_real: int, n: int, lam2,
     def dot(a, b):
         return _psum_om(jnp.sum(a * b))
 
-    def prox(z, alpha, data):
+    def prox(z, pen, tau, data):
         diag_mask, _ = _diag_mask_rows_om(p_pad, blk, p_real, dtype)
-        if use_pallas:
+        if use_pallas and pen.pallas_ok:
             from ..kernels import ops as kops
-            return kops.fused_prox(z, diag_mask, alpha)
-        st = jnp.sign(z) * jnp.maximum(jnp.abs(z) - alpha, 0.0)
-        return st * (1.0 - diag_mask) + z * diag_mask
+            return kops.fused_prox(z, diag_mask, tau * pen.lam1,
+                                   weights=pen.weights)
+        return pen.prox(z, tau, diag_mask)
 
     if policy is None:
         return VariantOps(aux_of, g_of, grad_of, dot, prox)
@@ -343,9 +346,34 @@ def _pad_omega0(omega0, p: int, p_pad: int, dtype):
     return omega0
 
 
+def _pad_spec_weights(spec: PenaltySpec, p: int, p_pad: int,
+                      dtype) -> PenaltySpec:
+    """Cast the weight matrix to the solve dtype and zero-pad it to the
+    grid-padded dimension (padded off-diagonal entries stay exactly zero
+    whatever their weight, so the pad value is inert)."""
+    if spec.weights is None:
+        return spec
+    w = jnp.asarray(spec.weights, dtype)
+    if w.shape != (p, p):
+        raise ValueError(
+            f"penalty weights shape {w.shape} must match the problem "
+            f"dimension ({p}, {p})")
+    if p_pad != p:
+        w = jnp.pad(w, ((0, p_pad - p), (0, p_pad - p)))
+    return dataclasses.replace(spec, weights=w)
+
+
+def _spec_partition(spec: PenaltySpec, mat_spec):
+    """shard_map in_specs tree for a penalty spec: the (p_pad, p_pad)
+    weight matrix shards with the Omega layout, scalars replicate."""
+    return jax.tree.map(
+        lambda leaf: mat_spec if getattr(leaf, "ndim", 0) == 2 else P(),
+        spec)
+
+
 def fit_cov(
     s: jax.Array,
-    lam1: float,
+    lam1: float | None = None,
     lam2: float = 0.0,
     *,
     grid: Grid1p5D,
@@ -356,10 +384,15 @@ def fit_cov(
     warm_start_tau: bool = False,
     use_pallas: bool = False,
     omega0: jax.Array | None = None,
+    penalty: PenaltySpec | str | None = None,
     sparse_matmul: matops.MatmulPolicy | None = None,
 ) -> FitResult:
     """Distributed Cov solve (Algorithm 2). ``s`` is the (p, p) sample cov.
     ``omega0`` optionally warm-starts the iterates (e.g. along a lam1 path).
+    ``penalty`` swaps the prox operator (``core.penalty``): scalar penalty
+    parameters travel replicated through the shard_map, a weighted-l1
+    weight matrix is sharded with the Omega panel layout.  Legacy
+    ``lam1``/``lam2`` floats build the equivalent l1 spec.
     ``sparse_matmul`` routes the W = Omega S rotation through the
     block-sparse local products of ``comm.sparse1p5d``."""
     if grid.c_x != grid.c_omega:
@@ -368,34 +401,38 @@ def fit_cov(
     p = s.shape[0]
     p_pad = grid.pad_p(p)
     dtype = s.dtype
+    spec = _pad_spec_weights(normalize_penalty(penalty, lam1, lam2),
+                             p, p_pad, dtype)
     if p_pad != p:
         s = jnp.pad(s, ((0, p_pad - p), (0, p_pad - p)))
     blk = p_pad // grid.n_x
-    ops = _cov_local_ops(grid, p_pad, p, jnp.asarray(lam2, dtype), dtype,
-                         use_pallas, sparse_matmul)
+    ops = _cov_local_ops(grid, p_pad, p, jnp.asarray(spec.lam2, dtype),
+                         dtype, use_pallas, sparse_matmul)
+    spec_parts = _spec_partition(spec, SPEC_XCOL)
 
-    def solve_local(om0_panel, s_panel):
+    def solve_local(om0_panel, s_panel, pen):
         return prox_gradient(
-            om0_panel, {"s": s_panel}, ops, lam1=lam1, tol=tol,
+            om0_panel, {"s": s_panel}, ops, penalty=pen, tol=tol,
             max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau)
 
     specs = _scalar_specs()._replace(omega=SPEC_XCOL)
     if omega0 is None:
         # cold start: build the identity panel per shard (never materialize
         # the full p_pad^2 identity on one device)
-        def local(s_panel):
-            return solve_local(_eye_panel_x(p_pad, blk, dtype), s_panel)
+        def local(s_panel, pen):
+            return solve_local(_eye_panel_x(p_pad, blk, dtype), s_panel, pen)
 
-        fn = shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL,),
+        fn = shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL, spec_parts),
                        out_specs=ProxResult(*specs), check_vma=False)
-        args = (s,)
+        args = (s, spec)
     else:
-        def local(s_panel, om0_panel):
-            return solve_local(om0_panel, s_panel)
+        def local(s_panel, pen, om0_panel):
+            return solve_local(om0_panel, s_panel, pen)
 
-        fn = shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL, SPEC_XCOL),
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=(SPEC_XCOL, spec_parts, SPEC_XCOL),
                        out_specs=ProxResult(*specs), check_vma=False)
-        args = (s, _pad_omega0(omega0, p, p_pad, dtype))
+        args = (s, spec, _pad_omega0(omega0, p, p_pad, dtype))
     with use_mesh(mesh):
         res = jax.jit(fn)(*args)
     return FitResult(res.omega[:p, :p], res.iters, res.ls_total,
@@ -405,7 +442,7 @@ def fit_cov(
 
 def fit_obs(
     x: jax.Array,
-    lam1: float,
+    lam1: float | None = None,
     lam2: float = 0.0,
     *,
     grid: Grid1p5D,
@@ -416,42 +453,50 @@ def fit_obs(
     warm_start_tau: bool = False,
     use_pallas: bool = False,
     omega0: jax.Array | None = None,
+    penalty: PenaltySpec | str | None = None,
     sparse_matmul: matops.MatmulPolicy | None = None,
 ) -> FitResult:
     """Distributed Obs solve (Algorithm 3). ``x`` is the (n, p) data matrix.
     ``omega0`` optionally warm-starts the iterates (e.g. along a lam1 path).
+    ``penalty`` swaps the prox operator (``core.penalty``); a weighted-l1
+    weight matrix is sharded with the Omega row-block layout.  Legacy
+    ``lam1``/``lam2`` floats build the equivalent l1 spec.
     ``sparse_matmul`` routes the Y = Omega X^T rotation through the
     block-sparse local products of ``comm.sparse1p5d``."""
     mesh = mesh or grid.make_mesh()
     n, p = x.shape
     p_pad = grid.pad_p(p)
     dtype = x.dtype
+    spec = _pad_spec_weights(normalize_penalty(penalty, lam1, lam2),
+                             p, p_pad, dtype)
     if p_pad != p:
         x = jnp.pad(x, ((0, 0), (0, p_pad - p)))
     blk = p_pad // grid.n_om
-    ops = _obs_local_ops(grid, p_pad, p, n, jnp.asarray(lam2, dtype), dtype,
-                         use_pallas, sparse_matmul)
+    ops = _obs_local_ops(grid, p_pad, p, n, jnp.asarray(spec.lam2, dtype),
+                         dtype, use_pallas, sparse_matmul)
+    spec_parts = _spec_partition(spec, SPEC_OM)
 
-    def solve_local(om0_rows, x_loc):
+    def solve_local(om0_rows, x_loc, pen):
         return prox_gradient(
-            om0_rows, {"x": x_loc}, ops, lam1=lam1, tol=tol,
+            om0_rows, {"x": x_loc}, ops, penalty=pen, tol=tol,
             max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau)
 
     specs = _scalar_specs()._replace(omega=SPEC_OM)
     if omega0 is None:
-        def local(x_loc):
-            return solve_local(_eye_rows_om(p_pad, blk, dtype), x_loc)
+        def local(x_loc, pen):
+            return solve_local(_eye_rows_om(p_pad, blk, dtype), x_loc, pen)
 
-        fn = shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL,),
+        fn = shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL, spec_parts),
                        out_specs=ProxResult(*specs), check_vma=False)
-        args = (x,)
+        args = (x, spec)
     else:
-        def local(x_loc, om0_rows):
-            return solve_local(om0_rows, x_loc)
+        def local(x_loc, pen, om0_rows):
+            return solve_local(om0_rows, x_loc, pen)
 
-        fn = shard_map(local, mesh=mesh, in_specs=(SPEC_XCOL, SPEC_OM),
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=(SPEC_XCOL, spec_parts, SPEC_OM),
                        out_specs=ProxResult(*specs), check_vma=False)
-        args = (x, _pad_omega0(omega0, p, p_pad, dtype))
+        args = (x, spec, _pad_omega0(omega0, p, p_pad, dtype))
     with use_mesh(mesh):
         res = jax.jit(fn)(*args)
     return FitResult(res.omega[:p, :p], res.iters, res.ls_total,

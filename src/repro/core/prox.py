@@ -14,11 +14,19 @@ driver (core/distributed.py) all share identical control flow:
                                            #        transpose W^T
                                            #   obs: forms Z = Y @ X / n, Z^T
     dot(a, b)                  -> scalar   # global <A, B> (psum'd on shards)
-    prox(z, alpha, data)       -> array    # prox of alpha*||.||_1 off-diag
+    prox(z, penalty, tau, data) -> array   # prox of tau*penalty, diag exempt
+
+The penalty is a :class:`repro.core.penalty.PenaltySpec`: a pytree whose
+kind (l1 / weighted_l1 / scad / mcp / ...) is static and whose numeric
+parameters are traced leaves, so a warm-started lambda path or a batched
+grid with per-lane penalty parameters reuses ONE compiled program.  The
+legacy ``lam1=`` float keyword still works everywhere and constructs the
+equivalent l1 spec (bit-identical solve).
 
 Three optional ops switch on the sparsity-aware matmul path (core.matops):
 
-    prox_stats(z, alpha, data) -> (array, mask)   # prox + the harvested
+    prox_stats(z, penalty, tau, data) -> (array, mask)
+                                           # prox + the harvested
                                            # block-occupancy mask of the
                                            # new iterate (free with the
                                            # fused Pallas prox kernel)
@@ -56,10 +64,10 @@ import jax.numpy as jnp
 from . import matops
 from .objective import (
     gradient_from_w,
-    prox_l1_offdiag,
     smooth_objective_cov,
     smooth_objective_obs,
 )
+from .penalty import PenaltySpec, normalize_penalty
 
 
 class VariantOps(NamedTuple):
@@ -118,7 +126,8 @@ def prox_gradient(
     data,
     ops: VariantOps,
     *,
-    lam1: float,
+    penalty: PenaltySpec | None = None,
+    lam1: float | None = None,
     tol: float = 1e-5,
     max_iters: int = 500,
     max_ls: int = 30,
@@ -127,11 +136,23 @@ def prox_gradient(
 ) -> ProxResult:
     """Run the CONCORD/PseudoNet proximal gradient method.
 
+    The penalty enters only through ``ops.prox``/``ops.prox_stats``;
+    pass a :class:`PenaltySpec` (its parameters stay traced), or the
+    legacy ``lam1=`` float which builds the equivalent l1 spec.
+
     warm_start_tau=False reproduces the paper exactly (tau restarts at
     tau_init every outer iteration); True starts from 2x the previously
     accepted step, which typically saves 20-40% of line-search trials
     (beyond-paper knob, still provably convergent by the same argument).
     """
+    if penalty is None:
+        if lam1 is None:
+            raise TypeError("prox_gradient needs penalty= (or the legacy "
+                            "lam1= float)")
+        # raw constructor on purpose: lam1 may be a tracer (vmapped lanes)
+        penalty = PenaltySpec("l1", lam1)
+    elif lam1 is not None:
+        raise ValueError("pass either penalty= or lam1=, not both")
     dtype = jnp.result_type(omega0)
     sparse = ops.prox_stats is not None
     if sparse:
@@ -157,10 +178,10 @@ def prox_gradient(
         def ls_try(tau):
             z = carry.omega - tau * grad
             if sparse:
-                cand, mask_c = ops.prox_stats(z, tau * lam1, data)
+                cand, mask_c = ops.prox_stats(z, penalty, tau, data)
                 aux_c = ops.aux_of(cand, data, mask_c)
             else:
-                cand = ops.prox(z, tau * lam1, data)
+                cand = ops.prox(z, penalty, tau, data)
                 mask_c = None
                 aux_c = ops.aux_of(cand, data)
             g_c = ops.g_of(cand, aux_c, data)
@@ -267,26 +288,28 @@ def _ref_dot(a, b):
     return jnp.sum(a * b)
 
 
-def _ref_prox(z, alpha, data):
-    return prox_l1_offdiag(z, alpha)
+def _ref_prox(z, pen, tau, data):
+    return pen.prox(z, tau)
 
 
 def _ref_sparse_ops(policy: matops.MatmulPolicy, use_pallas: bool):
     """(prox_stats, mask_of, density_of) for the single-device variants.
 
     With ``use_pallas`` the occupancy mask is harvested for free from the
-    fused prox kernel's per-tile nnz stats lane; the jnp path computes the
-    same mask in one extra cheap pass (it is the kernel's oracle)."""
+    fused prox kernel's per-tile nnz stats lane (soft-threshold penalty
+    family only; SCAD/MCP fall back to the jnp prox + one mask pass); the
+    jnp path computes the same mask in one extra cheap pass (it is the
+    kernel's oracle)."""
     bs = policy.block_size
 
-    def prox_stats(z, alpha, data):
-        if use_pallas:
+    def prox_stats(z, pen, tau, data):
+        if use_pallas and pen.pallas_ok:
             from ..kernels import ops as kops
             eye = jnp.eye(z.shape[-1], dtype=z.dtype)
             out, _, _, _, _, bnnz = kops.fused_prox_stats(
-                z, eye, alpha, block=(bs, bs))
+                z, eye, tau * pen.lam1, weights=pen.weights, block=(bs, bs))
             return out, (bnnz > 0).astype(matops.MASK_DTYPE)
-        out = prox_l1_offdiag(z, alpha)
+        out = pen.prox(z, tau)
         return out, matops.block_mask(out, bs)
 
     def mask_of(omega, data):
@@ -351,11 +374,46 @@ def obs_ops(sparse_matmul: matops.MatmulPolicy | None = None,
 @partial(jax.jit, static_argnames=("variant", "tol", "max_iters", "max_ls",
                                    "warm_start_tau", "sparse_matmul",
                                    "use_pallas"))
+def _solve_reference(
+    s_or_x: jax.Array,
+    penalty: PenaltySpec,
+    omega0: jax.Array | None,
+    *,
+    variant: str,
+    tol: float,
+    max_iters: int,
+    max_ls: int,
+    warm_start_tau: bool,
+    sparse_matmul: matops.MatmulPolicy | None,
+    use_pallas: bool,
+) -> ProxResult:
+    """Jitted engine behind :func:`solve_reference`.  The penalty spec's
+    numeric leaves (lam1, lam2, shape, weights) and ``omega0`` are traced,
+    so a regularization path over same-shape problems reuses one compiled
+    program per (shape, penalty kind, statics) key."""
+    if variant == "cov":
+        data = {"s": s_or_x, "lam2": jnp.asarray(penalty.lam2, s_or_x.dtype)}
+        ops = cov_ops(sparse_matmul, use_pallas)
+    elif variant == "obs":
+        data = {"x": s_or_x, "lam2": jnp.asarray(penalty.lam2, s_or_x.dtype)}
+        ops = obs_ops(sparse_matmul, use_pallas)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    p = s_or_x.shape[-1]
+    if omega0 is None:
+        omega0 = jnp.eye(p, dtype=s_or_x.dtype)
+    return prox_gradient(
+        omega0, data, ops, penalty=penalty, tol=tol,
+        max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau,
+    )
+
+
 def solve_reference(
     s_or_x: jax.Array,
-    lam1: float,
+    lam1: float | None = None,
     lam2: float = 0.0,
     *,
+    penalty: PenaltySpec | str | None = None,
     omega0: jax.Array | None = None,
     variant: str = "cov",
     tol: float = 1e-5,
@@ -366,9 +424,15 @@ def solve_reference(
     use_pallas: bool = False,
 ) -> ProxResult:
     """Single-device CONCORD/PseudoNet solve. variant='cov' expects S, 'obs'
-    expects X. ``omega0`` warm-starts the iterates (defaults to the identity);
-    ``lam1``/``lam2`` and ``omega0`` are traced, so a regularization path over
-    same-shape problems reuses one compiled program per (shape, statics) key.
+    expects X. ``omega0`` warm-starts the iterates (defaults to the identity).
+
+    The penalty comes either from ``penalty=`` (a
+    :class:`~repro.core.penalty.PenaltySpec` or string form, which also
+    carries the smooth ridge in its ``lam2`` field) or from the legacy
+    ``lam1``/``lam2`` floats (the equivalent l1 spec, bit-identical solve).
+    All penalty parameters and ``omega0`` are traced, so a regularization
+    path over same-shape problems reuses one compiled program per
+    (shape, penalty kind, statics) key.
 
     ``sparse_matmul`` (a hashable :class:`repro.core.matops.MatmulPolicy`)
     routes the Ω-side product through the block-sparse dispatch once the
@@ -376,20 +440,18 @@ def solve_reference(
     ``use_pallas`` additionally harvests the occupancy mask from the fused
     Pallas prox kernel instead of a separate jnp pass.
     """
-    if variant == "cov":
-        data = {"s": s_or_x, "lam2": jnp.asarray(lam2, s_or_x.dtype)}
-        ops = cov_ops(sparse_matmul, use_pallas)
-    elif variant == "obs":
-        data = {"x": s_or_x, "lam2": jnp.asarray(lam2, s_or_x.dtype)}
-        ops = obs_ops(sparse_matmul, use_pallas)
-    else:
-        raise ValueError(f"unknown variant {variant!r}")
-    p = s_or_x.shape[-1]
-    if omega0 is None:
-        omega0 = jnp.eye(p, dtype=s_or_x.dtype)
-    return prox_gradient(
-        omega0, data, ops, lam1=lam1, tol=tol,
+    spec = normalize_penalty(penalty, lam1, lam2)
+    if spec.weights is not None:
+        p = s_or_x.shape[-1]
+        wshape = getattr(spec.weights, "shape", None)
+        if wshape != (p, p):
+            raise ValueError(
+                f"penalty weights shape {wshape} must match the problem "
+                f"dimension ({p}, {p})")
+    return _solve_reference(
+        s_or_x, spec, omega0, variant=variant, tol=tol,
         max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau,
+        sparse_matmul=sparse_matmul, use_pallas=use_pallas,
     )
 
 

@@ -14,7 +14,15 @@ estimation (the HP-CONCORD facade).
     # B stacked datasets (multi-subject / server micro-batch):
     rep = fit_batch(x=X_stack, lam1=0.15)       # -> BatchReport
 
+    # pluggable penalties (core.penalty): SCAD path, adaptive lasso, ...
+    est = ConcordEstimator(lam1=0.15, penalty="scad:3.7")
+    est = ConcordEstimator(penalty=PenaltySpec.weighted_l1(0.15, W))
+    path = est.fit_path(X, lam1_grid=[...], adaptive=True)   # 2-stage refit
+
 Layers:
+  penalty   PenaltySpec — pluggable prox operators (re-exported from
+            ``repro.core.penalty``): l1 / elastic_net / weighted_l1
+            (adaptive lasso, 0/inf structural constraints) / scad / mcp
   config    SolverConfig — every solver knob, frozen + validated
   backends  registry: "reference" | "distributed" | "auto" (cost-model)
   report    FitReport / PathResult / BatchReport — rich results + BIC
@@ -22,8 +30,17 @@ Layers:
   estimator ConcordEstimator + functional ``fit`` / ``fit_path``
 
 The old entry points (``core.prox.fit_reference``, ``core.distributed.fit``)
-remain as deprecated shims.
+remain as deprecated shims; the bare ``lam1=``/``lam2=`` kwargs are the
+deprecated legacy penalty surface (shimmed into the equivalent l1 spec).
 """
+from ..core.penalty import (  # noqa: F401
+    PenaltySpec,
+    adaptive_weights,
+    as_penalty,
+    parse_penalty,
+    penalty_kinds,
+    register_penalty,
+)
 from .backends import (  # noqa: F401
     Problem,
     auto_backend,
@@ -48,8 +65,11 @@ __all__ = [
     "ConcordEstimator",
     "FitReport",
     "PathResult",
+    "PenaltySpec",
     "Problem",
     "SolverConfig",
+    "adaptive_weights",
+    "as_penalty",
     "auto_backend",
     "available_backends",
     "distributed_backend",
@@ -57,7 +77,10 @@ __all__ = [
     "fit_batch",
     "fit_path",
     "get_backend",
+    "parse_penalty",
+    "penalty_kinds",
     "pseudo_bic",
     "reference_backend",
     "register_backend",
+    "register_penalty",
 ]

@@ -2,9 +2,11 @@
 
 A *backend* is a callable
 
-    backend(problem, lam1, lam2, config, omega0=None) -> FitReport
+    backend(problem, penalty, config, omega0=None) -> FitReport
 
-registered under a name.  Three ship by default:
+registered under a name, where ``penalty`` is a
+:class:`repro.core.penalty.PenaltySpec` (a bare float is also accepted
+and treated as the lam1 of an l1 penalty).  Three ship by default:
 
   ``reference``    single-device jitted solve (``core.prox``); warm starts
                    and lam1/lam2 are traced so a regularization path reuses
@@ -30,6 +32,7 @@ import numpy as np
 from ..comm.grid import Grid1p5D
 from ..core import distributed as dist
 from ..core import matops, prox
+from ..core.penalty import PenaltySpec, as_penalty, penalty_value_np
 from ..core.costmodel import (
     Machine,
     ProblemShape,
@@ -266,10 +269,18 @@ def _offdiag_l1(omega) -> float:
     return float(np.sum(np.abs(om)) - np.sum(np.abs(np.diag(om))))
 
 
+def _as_spec(penalty) -> PenaltySpec:
+    """Backend-entry normalization: spec passes through, a bare number is
+    the lam1 of an l1 penalty (plugin-backend ergonomics)."""
+    return as_penalty(penalty)
+
+
 def _report(res, *, lam1, lam2, wall, backend, variant, config=None,
-            c_x=1, c_omega=1, n_devices=1) -> FitReport:
+            c_x=1, c_omega=1, n_devices=1, penalty=None) -> FitReport:
     g = float(res.g_final)
     config = config or SolverConfig()
+    if penalty is None:
+        penalty = PenaltySpec("l1", lam1, lam2)
     # Always compute the final estimate's occupancy post hoc: the solver's
     # in-loop telemetry (res.block_density) reads 1.0 both for genuinely
     # dense iterates AND whenever the policy was dropped downstream (e.g.
@@ -290,8 +301,9 @@ def _report(res, *, lam1, lam2, wall, backend, variant, config=None,
         iters=int(res.iters), ls_total=int(res.ls_total),
         converged=bool(res.converged),
         stalled=bool(res.stalled),
-        objective=g + float(lam1) * _offdiag_l1(res.omega),
+        objective=g + penalty_value_np(penalty, res.omega),
         objective_smooth=g,
+        penalty=penalty.label(),
         wall_time_s=float(wall),
         backend=backend, variant=variant,
         c_x=int(c_x), c_omega=int(c_omega), n_devices=int(n_devices),
@@ -305,9 +317,11 @@ def _report(res, *, lam1, lam2, wall, backend, variant, config=None,
 # built-in backends
 # ---------------------------------------------------------------------------
 
-def reference_backend(problem: Problem, lam1: float, lam2: float,
-                      config: SolverConfig, omega0=None) -> FitReport:
+def reference_backend(problem: Problem, penalty, config: SolverConfig,
+                      omega0=None) -> FitReport:
     """Single-device jitted solve; the workhorse of warm-started paths."""
+    spec = _as_spec(penalty)
+    lam1 = float(np.asarray(spec.lam1))
     variant = _resolve_variant_only(problem, lam1, config, omega0)
     if variant == "cov":
         data = _cast(problem.cov(), config)
@@ -321,19 +335,22 @@ def reference_backend(problem: Problem, lam1: float, lam2: float,
         config, problem.p, problem.p if variant == "cov" else problem.n)
     t0 = time.perf_counter()
     res = prox.solve_reference(
-        data, lam1, lam2, omega0=omega0, variant=variant,
+        data, penalty=spec, omega0=omega0, variant=variant,
         tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
         warm_start_tau=config.warm_start_tau,
         sparse_matmul=policy, use_pallas=config.use_pallas)
     jax.block_until_ready(res.omega)
     wall = time.perf_counter() - t0
-    return _report(res, lam1=lam1, lam2=lam2, wall=wall,
-                   backend="reference", variant=variant, config=config)
+    return _report(res, lam1=lam1, lam2=float(np.asarray(spec.lam2)),
+                   wall=wall, backend="reference", variant=variant,
+                   config=config, penalty=spec)
 
 
-def distributed_backend(problem: Problem, lam1: float, lam2: float,
-                        config: SolverConfig, omega0=None) -> FitReport:
+def distributed_backend(problem: Problem, penalty, config: SolverConfig,
+                        omega0=None) -> FitReport:
     """1.5D shard_map solve over all (or ``config.n_devices``) devices."""
+    spec = _as_spec(penalty)
+    lam1 = float(np.asarray(spec.lam1))
     n_dev = config.n_devices or len(jax.devices())
     variant, c_x, c_omega = _resolve_variant(problem, lam1, config, n_dev,
                                              omega0)
@@ -343,7 +360,7 @@ def distributed_backend(problem: Problem, lam1: float, lam2: float,
     if variant == "cov":
         t0 = time.perf_counter()
         res = dist.fit_cov(
-            _cast(problem.cov(), config), lam1, lam2, grid=grid,
+            _cast(problem.cov(), config), penalty=spec, grid=grid,
             tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
             warm_start_tau=config.warm_start_tau,
             use_pallas=config.use_pallas, omega0=omega0,
@@ -353,30 +370,32 @@ def distributed_backend(problem: Problem, lam1: float, lam2: float,
             raise ValueError("Obs variant requires the data matrix x")
         t0 = time.perf_counter()
         res = dist.fit_obs(
-            _cast(problem.x, config), lam1, lam2, grid=grid,
+            _cast(problem.x, config), penalty=spec, grid=grid,
             tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
             warm_start_tau=config.warm_start_tau,
             use_pallas=config.use_pallas, omega0=omega0,
             sparse_matmul=policy)
     jax.block_until_ready(res.omega)
     wall = time.perf_counter() - t0
-    return _report(res, lam1=lam1, lam2=lam2, wall=wall,
-                   backend="distributed", variant=res.variant, config=config,
-                   c_x=grid.c_x, c_omega=grid.c_omega, n_devices=n_dev)
+    return _report(res, lam1=lam1, lam2=float(np.asarray(spec.lam2)),
+                   wall=wall, backend="distributed", variant=res.variant,
+                   config=config, c_x=grid.c_x, c_omega=grid.c_omega,
+                   n_devices=n_dev, penalty=spec)
 
 
-def auto_backend(problem: Problem, lam1: float, lam2: float,
-                 config: SolverConfig, omega0=None) -> FitReport:
+def auto_backend(problem: Problem, penalty, config: SolverConfig,
+                 omega0=None) -> FitReport:
     """Cost-model-driven dispatch (the paper's decision procedure): resolve
     variant + replication via ``costmodel.tune``, then run on the reference
     engine (one device) or the distributed engine (several)."""
+    spec = _as_spec(penalty)
     n_dev = config.n_devices or len(jax.devices())
-    variant, c_x, c_omega = _resolve_variant(problem, lam1, config, n_dev,
-                                             omega0)
+    variant, c_x, c_omega = _resolve_variant(
+        problem, float(np.asarray(spec.lam1)), config, n_dev, omega0)
     pinned = config.replace(variant=variant, c_x=c_x, c_omega=c_omega)
     if n_dev == 1:
-        return reference_backend(problem, lam1, lam2, pinned, omega0)
-    return distributed_backend(problem, lam1, lam2, pinned, omega0)
+        return reference_backend(problem, spec, pinned, omega0)
+    return distributed_backend(problem, spec, pinned, omega0)
 
 
 register_backend("reference", reference_backend)

@@ -6,7 +6,9 @@ engine).  Two entry points:
   * ``fit_batch`` — solve B stacked independent problems (multi-subject /
     multi-tenant workloads, server micro-batches) as ONE compiled program;
     returns a :class:`BatchReport` aggregating per-problem
-    :class:`FitReport`s.
+    :class:`FitReport`s.  ``penalty`` accepts a
+    :class:`~repro.core.penalty.PenaltySpec` whose numeric leaves may be
+    (B,)-batched so different lanes run different penalty parameters.
   * ``batched_path_reports`` — the engine behind
     ``ConcordEstimator.fit_path(mode="batched")``: a whole lam1 grid
     against shared data as one program.
@@ -23,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import batch as core_batch
+from ..core.penalty import PenaltySpec, normalize_penalty
 from ..core.prox import ProxResult
 from .backends import Problem, _cast, _report
 from .config import SolverConfig
@@ -54,35 +57,46 @@ def _slice_result(res: ProxResult, i: int) -> ProxResult:
 
 def batch_reports(res: ProxResult, lam1s, lam2s, wall: float, *,
                   variant: str, config: SolverConfig,
-                  backend: str = "batched") -> list[FitReport]:
+                  backend: str = "batched",
+                  penalty: PenaltySpec | None = None) -> list[FitReport]:
     """Split one batched ProxResult into per-problem FitReports.
 
-    The batch ran as one compiled program, so per-problem wall time is not
-    physical — each report carries its 1/B share (sums reproduce the
-    measured total)."""
+    ``penalty`` is the (possibly lane-batched) spec the batch ran with;
+    each report gets its own lane (``PenaltySpec.lane``) so objectives
+    and labels reflect per-lane penalty parameters.  The batch ran as one
+    compiled program, so per-problem wall time is not physical — each
+    report carries its 1/B share (sums reproduce the measured total)."""
     b = len(lam1s)
     # the engine always runs dense products (the block-sparse lax.switch
     # would execute every branch under vmap) — report the routing mode
     # that actually ran, whatever the config asked for
     config = config.replace(sparse_matmul="off")
+    lanes = [None] * b
+    if penalty is not None:
+        lanes = [penalty.lane(i, b).with_lam1(float(lam1s[i]))
+                 for i in range(b)]
     return [
         _report(_slice_result(res, i), lam1=float(lam1s[i]),
                 lam2=float(lam2s[i]), wall=wall / b, backend=backend,
-                variant=variant, config=config)
+                variant=variant, config=config, penalty=lanes[i])
         for i in range(b)
     ]
 
 
-def fit_batch(x=None, *, s=None, lam1, lam2=0.0, omega0=None,
-              config: SolverConfig | None = None, **knobs) -> BatchReport:
+def fit_batch(x=None, *, s=None, lam1=None, lam2=0.0, penalty=None,
+              omega0=None, config: SolverConfig | None = None,
+              **knobs) -> BatchReport:
     """Solve B stacked problems as one compiled batched program.
 
     ``x``: (B, n, p) stacked observation matrices, or ``s``: (B, p, p)
     stacked sample covariances — one shape for the whole batch (bucket
     requests by shape before calling).  ``lam1``/``lam2`` are scalars
-    (shared) or length-B sequences (per-problem); ``omega0`` is None, one
-    shared (p, p) warm start, or stacked (B, p, p).  Extra keyword args
-    are ``SolverConfig`` fields.  Returns a :class:`BatchReport`.
+    (shared) or length-B sequences (per-problem); ``penalty`` instead
+    passes a full :class:`PenaltySpec` (or string form), any of whose
+    numeric leaves may carry a leading (B,) lane axis for per-lane
+    penalty parameters in the one compiled program.  ``omega0`` is None,
+    one shared (p, p) warm start, or stacked (B, p, p).  Extra keyword
+    args are ``SolverConfig`` fields.  Returns a :class:`BatchReport`.
     """
     cfg = (config or SolverConfig()).replace(**knobs) if knobs else \
         (config or SolverConfig())
@@ -104,28 +118,46 @@ def fit_batch(x=None, *, s=None, lam1, lam2=0.0, omega0=None,
         data = jnp.einsum("bni,bnj->bij", data, data) / n
     data = _cast(data, cfg)
     b = data.shape[0]
-    # exact user-passed penalties for the reports; compute-dtype casts only
-    # feed the solver (a float32 round-trip must not rewrite lam1=0.2)
-    lam1s = np.broadcast_to(np.asarray(lam1, np.float64), (b,))
-    lam2s = np.broadcast_to(np.asarray(lam2, np.float64), (b,))
-    t0 = time.perf_counter()
-    res = core_batch.solve_batch(
-        data, jnp.asarray(lam1s, data.dtype), jnp.asarray(lam2s, data.dtype),
-        omega0=omega0, variant=variant,
-        tol=cfg.tol, max_iters=cfg.max_iters, max_ls=cfg.max_ls,
-        warm_start_tau=cfg.warm_start_tau)
+    if penalty is not None:
+        spec = normalize_penalty(penalty, lam1, lam2)
+        # exact user-passed penalties for the reports (compute-dtype casts
+        # only feed the solver)
+        lam1s = np.broadcast_to(np.asarray(spec.lam1, np.float64), (b,))
+        lam2s = np.broadcast_to(np.asarray(spec.lam2, np.float64), (b,))
+        t0 = time.perf_counter()
+        res = core_batch.solve_batch(
+            data, penalty=spec, omega0=omega0, variant=variant,
+            tol=cfg.tol, max_iters=cfg.max_iters, max_ls=cfg.max_ls,
+            warm_start_tau=cfg.warm_start_tau)
+    else:
+        if lam1 is None:
+            raise TypeError("pass lam1 (or penalty=)")
+        spec = None
+        lam1s = np.broadcast_to(np.asarray(lam1, np.float64), (b,))
+        lam2s = np.broadcast_to(np.asarray(lam2, np.float64), (b,))
+        t0 = time.perf_counter()
+        res = core_batch.solve_batch(
+            data, jnp.asarray(lam1s, data.dtype),
+            jnp.asarray(lam2s, data.dtype),
+            omega0=omega0, variant=variant,
+            tol=cfg.tol, max_iters=cfg.max_iters, max_ls=cfg.max_ls,
+            warm_start_tau=cfg.warm_start_tau)
     jax.block_until_ready(res.omega)
     wall = time.perf_counter() - t0
     reports = batch_reports(res, lam1s, lam2s, wall, variant=variant,
-                            config=cfg)
+                            config=cfg, penalty=spec)
     return BatchReport(reports=tuple(reports), wall_time_s=wall)
 
 
-def batched_path_reports(problem: Problem, grid: list[float], lam2: float,
-                         config: SolverConfig,
+def batched_path_reports(problem: Problem, grid: list[float],
+                         config: SolverConfig, *,
+                         penalty: PenaltySpec | None = None,
+                         lam2: float = 0.0,
                          omega0=None) -> tuple[list[FitReport], float]:
     """Run a whole lam1 grid against shared data as one compiled program.
 
+    ``penalty`` (optional) is the spec template whose lam1 the grid
+    replaces — SCAD/MCP/weighted paths lower to the same single program.
     Returns (per-point reports in ``grid`` order, total wall seconds).
     Engine behind ``ConcordEstimator.fit_path(mode="batched")``."""
     _check_engine(config)
@@ -139,13 +171,17 @@ def batched_path_reports(problem: Problem, grid: list[float], lam2: float,
     if omega0 is not None:
         omega0 = jnp.asarray(omega0, data.dtype)
     lam1s = jnp.asarray(grid, data.dtype)
+    if penalty is not None:
+        lam2 = float(np.asarray(penalty.lam2))
     t0 = time.perf_counter()
     res = core_batch.solve_path_batched(
-        data, lam1s, lam2, omega0=omega0, variant=variant,
+        data, lam1s, lam2, penalty=penalty, omega0=omega0, variant=variant,
         tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
         warm_start_tau=config.warm_start_tau)
     jax.block_until_ready(res.omega)
     wall = time.perf_counter() - t0
     lam2s = [lam2] * len(grid)
+    spec_b = penalty.with_lam1(np.asarray(grid, np.float64)) \
+        if penalty is not None else None
     return batch_reports(res, grid, lam2s, wall, variant=variant,
-                         config=config), wall
+                         config=config, penalty=spec_b), wall

@@ -11,6 +11,8 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 
+from ..core.penalty import parse_penalty
+
 VARIANTS = ("auto", "cov", "obs")
 
 SPARSE_MATMUL_MODES = ("off", "on", "auto")
@@ -51,6 +53,14 @@ class SolverConfig:
     sparse_threshold
                    block-density crossover for ``"on"`` (default 0.25 when
                    None); for ``"auto"`` it caps the model's threshold.
+    penalty        penalty family as a string form parsed by
+                   ``core.penalty.parse_penalty``: ``"l1"`` (default),
+                   ``"elastic_net"``, ``"scad"``/``"scad:3.7"``,
+                   ``"mcp"``/``"mcp:2.5"``.  Strength comes from the
+                   estimator's ``lam1``/``lam2``; penalties needing
+                   matrix parameters (``weighted_l1``) are passed as a
+                   ``PenaltySpec`` on the estimator instead.  The config
+                   stays a hashable string so it can key jit statics.
     """
     backend: str = "auto"
     variant: str = "auto"
@@ -66,6 +76,7 @@ class SolverConfig:
     sparse_matmul: str = "off"
     sparse_block: int = 128
     sparse_threshold: float | None = None
+    penalty: str = "l1"
 
     def __post_init__(self):
         if not isinstance(self.backend, str) or not self.backend:
@@ -101,6 +112,12 @@ class SolverConfig:
                 0.0 < self.sparse_threshold <= 1.0):
             raise ValueError(f"sparse_threshold must be in (0, 1] or None, "
                              f"got {self.sparse_threshold!r}")
+        if not isinstance(self.penalty, str):
+            raise ValueError(
+                f"config.penalty must be a penalty string form (got "
+                f"{type(self.penalty).__name__}); pass PenaltySpec objects "
+                f"to the estimator, not the config")
+        parse_penalty(self.penalty)     # raises ValueError on bad forms
 
     def replace(self, **changes) -> "SolverConfig":
         """Functional update (frozen dataclass)."""

@@ -45,6 +45,9 @@ class FitReport:
     sparse_matmul: str = "off"          # Ω-product routing mode that ran
     stalled: bool = False       # line search exhausted max_ls with no accept
                                 # (mutually exclusive with converged)
+    penalty: str = "l1"         # penalty label ("l1", "scad:3.7",
+                                # "weighted_l1", ...); objective includes
+                                # this penalty's nonsmooth value
 
     def summary(self) -> str:
         dens = ""
@@ -54,8 +57,9 @@ class FitReport:
         if self.nnz_per_row is not None:
             dens += f" nnz/row={self.nnz_per_row:.1f}"
         stall = " STALLED" if self.stalled else ""
+        pen = f" pen={self.penalty}" if self.penalty != "l1" else ""
         return (f"[{self.backend}/{self.variant} c_x={self.c_x} "
-                f"c_omega={self.c_omega}] lam1={self.lam1:g} "
+                f"c_omega={self.c_omega}] lam1={self.lam1:g}{pen} "
                 f"iters={self.iters} ls={self.ls_total} "
                 f"converged={self.converged}{stall} obj={self.objective:.4f}"
                 f"{dens} t={self.wall_time_s:.3f}s")
@@ -82,10 +86,15 @@ class PathResult:
 
     ``mode`` records how the grid ran: ``"sequential"`` (one solve per
     point, optionally warm-started) or ``"batched"`` (the whole grid as
-    one compiled multi-problem program, ``core.batch``)."""
+    one compiled multi-problem program, ``core.batch``).
+
+    ``fit_path(adaptive=True)`` returns the STAGE-2 weighted path with
+    ``adaptive=True`` and the stage-1 l1 path attached as ``stage1``."""
     reports: tuple[FitReport, ...] = field(default_factory=tuple)
     warm_start: bool = True
     mode: str = "sequential"
+    adaptive: bool = False
+    stage1: "PathResult | None" = None
 
     def __post_init__(self):
         object.__setattr__(self, "reports", tuple(self.reports))
@@ -130,6 +139,8 @@ class PathResult:
         lines = [r.summary() for r in self.reports]
         how = ("batched" if self.mode == "batched"
                else ("warm" if self.warm_start else "cold") + " starts")
+        if self.adaptive:
+            how += ", adaptive stage 2"
         lines.append(f"path total: {self.total_iters} outer iters, "
                      f"{self.total_ls} ls trials, {self.wall_time_s:.3f}s "
                      f"({how})")

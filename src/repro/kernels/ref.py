@@ -14,9 +14,18 @@ import numpy as np
 # fused prox (softthresh.py)
 # ---------------------------------------------------------------------------
 
-def fused_prox(z: jax.Array, diag_mask: jax.Array, alpha) -> jax.Array:
-    """Soft-threshold off-diagonal entries, pass the diagonal through."""
-    st = jnp.sign(z) * jnp.maximum(jnp.abs(z) - alpha, 0.0)
+def fused_prox(z: jax.Array, diag_mask: jax.Array, alpha,
+               *, weights=None) -> jax.Array:
+    """Soft-threshold off-diagonal entries, pass the diagonal through.
+
+    ``weights`` (optional, same shape as ``z``) switches to the weighted
+    threshold ``alpha * w`` with ``w = inf`` forcing exact zeros."""
+    if weights is None:
+        thr = alpha
+    else:
+        w = jnp.asarray(weights, z.dtype)
+        thr = jnp.where(jnp.isinf(w), jnp.inf, alpha * w)
+    st = jnp.sign(z) * jnp.maximum(jnp.abs(z) - thr, 0.0)
     return st * (1.0 - diag_mask) + z * diag_mask
 
 
@@ -34,18 +43,18 @@ def block_nnz(a: jax.Array, block) -> jax.Array:
 
 
 def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha,
-                     *, block=(256, 256)):
+                     *, weights=None, block=(256, 256)):
     """Prox + the objective reduction pieces in one logical pass.
 
     Returns (out, logdet, l1_offdiag, sumsq, min_diag, block_nnz) where
       logdet     = sum over diag of log(out)
-      l1_offdiag = sum over off-diag of |out|
+      l1_offdiag = sum over off-diag of |out|  (unweighted, both lanes)
       sumsq      = ||out||_F^2
       min_diag   = min over diag of out  (positivity guard)
       block_nnz  = per-block-tile nonzero counts (the occupancy harvest
                    the block-sparse matmul dispatch consumes)
     """
-    out = fused_prox(z, diag_mask, alpha)
+    out = fused_prox(z, diag_mask, alpha, weights=weights)
     d = diag_mask > 0
     logdet = jnp.sum(jnp.where(d, jnp.log(jnp.maximum(out, 1e-30)), 0.0))
     l1 = jnp.sum(jnp.where(d, 0.0, jnp.abs(out)))

@@ -7,8 +7,15 @@ positivity guard).  The paper's CPU code makes 3+ passes over the p^2
 iterate for these elementwise steps; on TPU the whole state is streamed
 HBM->VMEM once per line-search trial.
 
+The kernel has an optional WEIGHT operand lane for the composable penalty
+API (``core.penalty``): with ``weights`` the per-entry threshold becomes
+``alpha * w_ij`` (``w_ij = inf`` forces an exact zero, the structural-
+exclusion convention), streamed through VMEM alongside the iterate.
+Without it the scalar-broadcast fast path is byte-for-byte the original
+kernel — no extra HBM traffic, bit-identical output.
+
 Tiles are (block_m, block_n) VMEM blocks; the per-tile partial stats land
-in a (grid_m, grid_n, 128) output (TPU lane-padded; only lanes 0..3 carry
+in a (grid_m, grid_n, 128) output (TPU lane-padded; only lanes 0..4 carry
 data) that the wrapper reduces.
 """
 from __future__ import annotations
@@ -25,25 +32,11 @@ DEFAULT_BLOCK = (256, 256)
 #   [0]=logdet [1]=l1 [2]=sumsq [3]=min_diag [4]=tile nnz count
 # lane 4 is the free block-occupancy harvest: with block == the matops
 # block size, stats[..., 4] > 0 IS the block-sparse dispatch mask.
+# (lane 1 stays the UNWEIGHTED |out| sum in the weighted kernel.)
 STATS_LANES = 128
 
 
-def _kernel(alpha_ref, z_ref, mask_ref, out_ref, stats_ref, *, nrows, ncols):
-    # mask out-of-bounds lanes of edge tiles (padding must not reach the
-    # reductions)
-    bm, bn = z_ref.shape
-    grow = pl.program_id(0) * bm + jax.lax.broadcasted_iota(
-        jnp.int32, (bm, bn), 0)
-    gcol = pl.program_id(1) * bn + jax.lax.broadcasted_iota(
-        jnp.int32, (bm, bn), 1)
-    valid = (grow < nrows) & (gcol < ncols)
-    z = jnp.where(valid, z_ref[...], 0.0)
-    m = jnp.where(valid, mask_ref[...], 0.0)
-    alpha = alpha_ref[0]
-    st = jnp.sign(z) * jnp.maximum(jnp.abs(z) - alpha, 0.0)
-    out = st * (1.0 - m) + z * m
-    out_ref[...] = out
-
+def _write_stats(out, m, valid, stats_ref):
     is_diag = m > 0
     logdet = jnp.sum(jnp.where(is_diag, jnp.log(jnp.maximum(out, 1e-30)), 0.0))
     l1 = jnp.sum(jnp.where(is_diag, 0.0, jnp.abs(out)))
@@ -59,38 +52,95 @@ def _kernel(alpha_ref, z_ref, mask_ref, out_ref, stats_ref, *, nrows, ncols):
     stats_ref[...] = stats.astype(stats_ref.dtype)
 
 
+def _tile_valid(shape, nrows, ncols):
+    # mask out-of-bounds lanes of edge tiles (padding must not reach the
+    # reductions)
+    bm, bn = shape
+    grow = pl.program_id(0) * bm + jax.lax.broadcasted_iota(
+        jnp.int32, (bm, bn), 0)
+    gcol = pl.program_id(1) * bn + jax.lax.broadcasted_iota(
+        jnp.int32, (bm, bn), 1)
+    return (grow < nrows) & (gcol < ncols)
+
+
+def _kernel(alpha_ref, z_ref, mask_ref, out_ref, stats_ref, *, nrows, ncols):
+    valid = _tile_valid(z_ref.shape, nrows, ncols)
+    z = jnp.where(valid, z_ref[...], 0.0)
+    m = jnp.where(valid, mask_ref[...], 0.0)
+    alpha = alpha_ref[0]
+    st = jnp.sign(z) * jnp.maximum(jnp.abs(z) - alpha, 0.0)
+    out = st * (1.0 - m) + z * m
+    out_ref[...] = out
+    _write_stats(out, m, valid, stats_ref)
+
+
+def _kernel_weighted(alpha_ref, z_ref, mask_ref, w_ref, out_ref, stats_ref,
+                     *, nrows, ncols):
+    valid = _tile_valid(z_ref.shape, nrows, ncols)
+    z = jnp.where(valid, z_ref[...], 0.0)
+    m = jnp.where(valid, mask_ref[...], 0.0)
+    w = jnp.where(valid, w_ref[...], 0.0)
+    alpha = alpha_ref[0]
+    # inf weights must force exact zeros even at alpha == 0 (inf*0 = nan)
+    thr = jnp.where(jnp.isinf(w), jnp.inf, alpha * w)
+    st = jnp.sign(z) * jnp.maximum(jnp.abs(z) - thr, 0.0)
+    out = st * (1.0 - m) + z * m
+    out_ref[...] = out
+    _write_stats(out, m, valid, stats_ref)
+
+
 @partial(jax.jit, static_argnames=("block", "interpret"))
 def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha,
-                     *, block=DEFAULT_BLOCK, interpret: bool = True):
+                     *, weights=None, block=DEFAULT_BLOCK,
+                     interpret: bool = True):
     """Returns (out, logdet, l1_offdiag, sumsq, min_diag, block_nnz).
 
     ``block_nnz`` is the (grid_m, grid_n) per-tile nonzero count of the
     prox output — with ``block`` set to the matops block size it is the
     block-occupancy mask the sparse matmul dispatch consumes, harvested
-    in the same HBM pass as the prox itself."""
+    in the same HBM pass as the prox itself.
+
+    ``weights`` (optional, (m, n)) switches the threshold to
+    ``alpha * weights`` elementwise (the weighted-l1/adaptive-lasso lane);
+    ``None`` keeps the scalar-broadcast fast path."""
     m, n = z.shape
     bm = min(block[0], m)
     bn = min(block[1], n)
     gm, gn = pl.cdiv(m, bm), pl.cdiv(n, bn)
     alpha_arr = jnp.asarray(alpha, z.dtype).reshape(1)
-    out, stats = pl.pallas_call(
-        partial(_kernel, nrows=m, ncols=n),
-        grid=(gm, gn),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1, STATS_LANES), lambda i, j: (i, j, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((m, n), z.dtype),
-            jax.ShapeDtypeStruct((gm, gn, STATS_LANES), jnp.float32),
-        ],
-        interpret=interpret,
-    )(alpha_arr, z, diag_mask)
+    tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    out_specs = [
+        pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        pl.BlockSpec((1, 1, STATS_LANES), lambda i, j: (i, j, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((m, n), z.dtype),
+        jax.ShapeDtypeStruct((gm, gn, STATS_LANES), jnp.float32),
+    ]
+    if weights is None:
+        out, stats = pl.pallas_call(
+            partial(_kernel, nrows=m, ncols=n),
+            grid=(gm, gn),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), tile, tile],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(alpha_arr, z, diag_mask)
+    else:
+        w = jnp.asarray(weights, z.dtype)
+        if w.shape != z.shape:
+            raise ValueError(
+                f"weights shape {w.shape} must match the iterate shape "
+                f"{z.shape}")
+        out, stats = pl.pallas_call(
+            partial(_kernel_weighted, nrows=m, ncols=n),
+            grid=(gm, gn),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), tile, tile,
+                      tile],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(alpha_arr, z, diag_mask, w)
     logdet = jnp.sum(stats[..., 0])
     l1 = jnp.sum(stats[..., 1])
     sumsq = jnp.sum(stats[..., 2])
@@ -101,7 +151,7 @@ def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha,
 
 @partial(jax.jit, static_argnames=("block", "interpret"))
 def fused_prox(z: jax.Array, diag_mask: jax.Array, alpha,
-               *, block=DEFAULT_BLOCK, interpret: bool = True):
+               *, weights=None, block=DEFAULT_BLOCK, interpret: bool = True):
     """Prox only (no stats) — the distributed drivers' inner step."""
-    return fused_prox_stats(z, diag_mask, alpha, block=block,
-                            interpret=interpret)[0]
+    return fused_prox_stats(z, diag_mask, alpha, weights=weights,
+                            block=block, interpret=interpret)[0]

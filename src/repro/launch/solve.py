@@ -9,6 +9,9 @@ and the (c_X, c_Omega) replication factors unless pinned.  ``--path`` runs
 a lam1 path (the Section-5 model-selection sweep) and reports the BIC-best
 point; ``--path-mode batched`` lowers the whole grid to one compiled
 multi-problem program instead of sequential warm-started solves.
+``--penalty scad:3.7`` (or ``mcp``, ``elastic_net``) swaps the prox
+operator through the composable penalty API (``core.penalty``), and
+``--path --adaptive`` runs the two-stage adaptive-lasso refit.
 
 ``--from-gram DIR`` solves straight from a ``launch.gram prep`` artifact
 (S.npy + metadata) — the raw observations never enter this process:
@@ -39,14 +42,15 @@ def _solve_from_gram(args):
         c_x=args.cx, c_omega=args.comega,
         tol=args.tol, max_iters=args.max_iters,
         sparse_matmul=args.sparse_matmul, sparse_block=args.sparse_block,
-        sparse_threshold=args.sparse_threshold)
+        sparse_threshold=args.sparse_threshold, penalty=args.penalty)
     est = ConcordEstimator(lam1=args.lam1, lam2=args.lam2, config=config)
     print(f"[gram] {gram.transform} Gram: n={gram.n} p={gram.p} "
           f"({gram.n_chunks} chunks, source dtype {gram.source_dtype})")
     if args.path:
         grid = [float(v) for v in args.path.split(",")]
         path = est.fit_path(s=jnp.asarray(gram.s), n_samples=gram.n,
-                            lam1_grid=grid, mode=args.path_mode)
+                            lam1_grid=grid, mode=args.path_mode,
+                            adaptive=args.adaptive)
         print(path.summary())
         chosen = path.best_bic()
         print(f"BIC-best lam1={chosen.lam1:g} (bic={chosen.bic:.1f})")
@@ -66,6 +70,15 @@ def main(argv=None):
     ap.add_argument("--n", type=int, default=400)
     ap.add_argument("--lam1", type=float, default=0.15)
     ap.add_argument("--lam2", type=float, default=0.05)
+    ap.add_argument("--penalty", default="l1", metavar="KIND",
+                    help="penalty family (core.penalty string form): l1, "
+                         "elastic_net, scad[:A], mcp[:GAMMA]; strength "
+                         "comes from --lam1/--lam2")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="two-stage adaptive-lasso refit of --path: "
+                         "stage-1 l1 path, then each grid point refit "
+                         "with weights 1/(|omega|+eps) built from its "
+                         "own stage-1 estimate (pointwise)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "reference", "distributed"])
     ap.add_argument("--variant", default="auto",
@@ -99,6 +112,9 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.adaptive and not args.path:
+        ap.error("--adaptive needs --path (it refits a lam1 grid)")
+
     if args.from_gram:
         return _solve_from_gram(args)
 
@@ -119,13 +135,14 @@ def main(argv=None):
         c_x=args.cx, c_omega=args.comega,
         tol=args.tol, max_iters=args.max_iters,
         sparse_matmul=args.sparse_matmul, sparse_block=args.sparse_block,
-        sparse_threshold=args.sparse_threshold)
+        sparse_threshold=args.sparse_threshold, penalty=args.penalty)
     est = ConcordEstimator(lam1=args.lam1, lam2=args.lam2, config=config)
     x = jnp.asarray(prob.x)
 
     if args.path:
         grid = [float(v) for v in args.path.split(",")]
-        path = est.fit_path(x, lam1_grid=grid, mode=args.path_mode)
+        path = est.fit_path(x, lam1_grid=grid, mode=args.path_mode,
+                            adaptive=args.adaptive)
         print(path.summary())
         chosen = path.best_bic()
         print(f"BIC-best lam1={chosen.lam1:g} (bic={chosen.bic:.1f})")

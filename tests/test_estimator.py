@@ -233,9 +233,12 @@ def test_registry_lists_builtins_and_accepts_plugins(chain_problem):
     assert {"reference", "distributed", "auto"} <= set(available_backends())
     calls = []
 
-    def myref(problem, lam1, lam2, config, omega0=None):
-        calls.append(lam1)
-        return get_backend("reference")(problem, lam1, lam2,
+    def myref(problem, penalty, config, omega0=None):
+        # backends receive the penalty spec; its parameters are the
+        # estimator's lam1/lam2
+        calls.append(float(penalty.lam1))
+        assert float(penalty.lam2) == 0.05
+        return get_backend("reference")(problem, penalty,
                                         config.replace(backend="reference"),
                                         omega0)
 

@@ -1,0 +1,632 @@
+"""Composable penalty API (core.penalty): closed-form prox identities,
+bit-exact l1 compatibility across all three backends, per-lane penalty
+params in one batched program, validation, and the two-stage adaptive
+refit."""
+import contextlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batch, graphs
+from repro.core.penalty import (
+    PenaltySpec,
+    adaptive_weights,
+    as_penalty,
+    parse_penalty,
+    penalty_value_np,
+)
+from repro.core.prox import solve_reference
+
+
+@contextlib.contextmanager
+def x64():
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+@pytest.fixture(scope="module")
+def chain_problem():
+    return graphs.make_problem("chain", p=48, n=150, seed=1)
+
+
+# ---------------------------------------------------------------------------
+# closed-form prox identities (f64, 1e-12)
+# ---------------------------------------------------------------------------
+
+def _z_grid(lam, hi):
+    # dense sweep crossing every regime boundary, both signs
+    pts = np.linspace(-hi, hi, 401)
+    return np.concatenate([pts, [-lam, lam, 0.0]])
+
+
+def test_l1_prox_matches_soft_threshold_f64():
+    with x64():
+        lam, tau = 0.3, 0.6
+        z = jnp.asarray(_z_grid(lam, 3.0))
+        spec = PenaltySpec.l1(lam)
+        out = np.asarray(spec.prox(z[None, :], tau,
+                                   diag_mask=jnp.zeros((1, z.size))))[0]
+        expect = np.sign(z) * np.maximum(np.abs(z) - tau * lam, 0.0)
+        np.testing.assert_allclose(out, expect, rtol=0, atol=1e-12)
+
+
+def test_scad_prox_three_regime_closed_form_f64():
+    with x64():
+        lam, a, tau = 0.4, 3.7, 0.8
+        z = np.asarray(_z_grid(lam, 4.0))
+        spec = PenaltySpec.scad(lam, a)
+        out = np.asarray(spec.prox(jnp.asarray(z)[None, :], tau,
+                                   diag_mask=jnp.zeros((1, z.size))))[0]
+        az = np.abs(z)
+        r1 = np.sign(z) * np.maximum(az - tau * lam, 0.0)
+        r2 = ((a - 1.0) * z - np.sign(z) * tau * a * lam) / (a - 1.0 - tau)
+        expect = np.where(az <= (1.0 + tau) * lam, r1,
+                          np.where(az <= a * lam, r2, z))
+        np.testing.assert_allclose(out, expect, rtol=0, atol=1e-12)
+        # the three-regime map is continuous at both boundaries
+        for b in [(1.0 + tau) * lam, a * lam]:
+            lo = np.asarray(spec.prox(jnp.asarray([[b - 1e-9]]), tau,
+                                      diag_mask=jnp.zeros((1, 1)))).item()
+            hi = np.asarray(spec.prox(jnp.asarray([[b + 1e-9]]), tau,
+                                      diag_mask=jnp.zeros((1, 1)))).item()
+            assert abs(lo - hi) < 1e-6
+
+
+def test_scad_prox_solves_the_scalar_subproblem_f64():
+    """prox_{tau*SCAD}(z) must beat a dense grid of alternatives on the
+    scalar objective (x - z)^2/(2 tau) + SCAD(x)."""
+    with x64():
+        lam, a, tau = 0.4, 3.7, 0.8
+        spec = PenaltySpec.scad(lam, a)
+
+        def scad_val(x):
+            ax = np.abs(x)
+            quad = (2 * a * lam * ax - ax ** 2 - lam ** 2) / (2 * (a - 1))
+            tail = 0.5 * lam * lam * (a + 1)
+            return np.where(ax <= lam, lam * ax,
+                            np.where(ax <= a * lam, quad, tail))
+
+        xs = np.linspace(-4.0, 4.0, 40001)
+        for z in [-3.0, -1.1, -0.5, 0.2, 0.9, 1.3, 2.5]:
+            got = np.asarray(spec.prox(
+                jnp.asarray([[z]]), tau,
+                diag_mask=jnp.zeros((1, 1)))).item()
+            obj = (xs - z) ** 2 / (2 * tau) + scad_val(xs)
+            got_obj = (got - z) ** 2 / (2 * tau) + float(scad_val(got))
+            assert got_obj <= obj.min() + 1e-6, (z, got, xs[obj.argmin()])
+
+
+def test_mcp_prox_closed_form_and_subproblem_f64():
+    with x64():
+        lam, gamma, tau = 0.35, 2.5, 0.7
+        z = np.asarray(_z_grid(lam, 3.0))
+        spec = PenaltySpec.mcp(lam, gamma)
+        out = np.asarray(spec.prox(jnp.asarray(z)[None, :], tau,
+                                   diag_mask=jnp.zeros((1, z.size))))[0]
+        az = np.abs(z)
+        st = np.sign(z) * np.maximum(az - tau * lam, 0.0)
+        expect = np.where(az <= gamma * lam, (gamma / (gamma - tau)) * st, z)
+        np.testing.assert_allclose(out, expect, rtol=0, atol=1e-12)
+
+        def mcp_val(x):
+            ax = np.abs(x)
+            return np.where(ax <= gamma * lam,
+                            lam * ax - ax ** 2 / (2 * gamma),
+                            0.5 * gamma * lam * lam)
+
+        xs = np.linspace(-4.0, 4.0, 40001)
+        for zz in [-2.0, -0.9, 0.3, 0.8, 1.5]:
+            got = np.asarray(spec.prox(
+                jnp.asarray([[zz]]), tau,
+                diag_mask=jnp.zeros((1, 1)))).item()
+            obj = (xs - zz) ** 2 / (2 * tau) + mcp_val(xs)
+            got_obj = (got - zz) ** 2 / (2 * tau) + float(mcp_val(got))
+            assert got_obj <= obj.min() + 1e-6
+
+
+def test_weighted_prox_masks_f64():
+    """w=0 leaves entries untouched, w=inf zeroes them exactly, finite
+    weights scale the threshold; the diagonal passes through."""
+    with x64():
+        z = jnp.asarray(np.array([[1.0, 0.5, -0.2], [0.5, 2.0, 0.05],
+                                  [-0.2, 0.05, 3.0]]))
+        w = np.array([[0.0, 0.0, np.inf], [0.0, 0.0, 2.0],
+                      [np.inf, 2.0, 0.0]])
+        spec = PenaltySpec.weighted_l1(0.1, w)
+        out = np.asarray(spec.prox(z, 1.0))
+        assert out[0, 1] == 0.5                   # w=0: unpenalized
+        assert out[0, 2] == 0.0 and out[2, 0] == 0.0   # w=inf: exact zero
+        np.testing.assert_allclose(out[1, 2], 0.0)     # |0.05| < 0.1*2
+        np.testing.assert_allclose(np.diag(out), np.diag(np.asarray(z)))
+        # inf weights force zeros even at zero strength (no nan leak)
+        out0 = np.asarray(spec.with_lam1(0.0).prox(z, 1.0))
+        assert out0[0, 2] == 0.0 and np.isfinite(out0).all()
+
+
+def test_penalty_value_closed_forms_f64():
+    with x64():
+        om = jnp.asarray(np.array([[2.0, 0.3, 0.0], [0.3, 1.0, -1.5],
+                                   [0.0, -1.5, 1.0]]))
+        l1 = PenaltySpec.l1(0.2)
+        np.testing.assert_allclose(float(l1.value(om)), 0.2 * 2 * 1.8,
+                                   atol=1e-12)
+        assert penalty_value_np(l1, np.asarray(om)) == pytest.approx(
+            float(l1.value(om)), abs=1e-12)
+        w = np.full((3, 3), 2.0)
+        np.fill_diagonal(w, 0.0)
+        w[0, 2] = w[2, 0] = np.inf
+        wl = PenaltySpec.weighted_l1(0.2, w)
+        # omega is 0 where w is inf -> finite value, inf otherwise
+        assert np.isfinite(float(wl.value(om)))
+        np.testing.assert_allclose(float(wl.value(om)), 0.2 * 2 * 2.0 * 1.8,
+                                   atol=1e-12)
+        scad = PenaltySpec.scad(0.4, 3.7)
+        mcp = PenaltySpec.mcp(0.4, 3.0)
+        for spec in (scad, mcp):
+            assert penalty_value_np(spec, np.asarray(om)) == pytest.approx(
+                float(spec.value(om)), abs=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# l1 spec is bit-exact against the legacy scalar-lam1 plumbing
+# ---------------------------------------------------------------------------
+
+def test_l1_spec_bit_exact_reference_f64(chain_problem):
+    with x64():
+        s = jnp.asarray(chain_problem.s, jnp.float64)
+        legacy = solve_reference(s, 0.2, 0.05, tol=1e-7, max_iters=400)
+        spec = solve_reference(s, penalty=PenaltySpec.l1(0.2, 0.05),
+                               tol=1e-7, max_iters=400)
+        en = solve_reference(s, penalty=PenaltySpec.elastic_net(0.2, 0.05),
+                             tol=1e-7, max_iters=400)
+        for r in (spec, en):
+            np.testing.assert_array_equal(np.asarray(legacy.omega),
+                                          np.asarray(r.omega))
+            assert int(legacy.iters) == int(r.iters)
+            assert int(legacy.ls_total) == int(r.ls_total)
+            assert float(legacy.g_final) == float(r.g_final)
+
+
+def test_l1_spec_bit_exact_distributed(chain_problem):
+    from repro.comm.grid import Grid1p5D
+    from repro.core.distributed import fit_cov, fit_obs
+
+    g = Grid1p5D(1, 1, 1)
+    s = jnp.asarray(chain_problem.s)
+    legacy = fit_cov(s, 0.2, 0.05, grid=g, tol=1e-6, max_iters=200)
+    spec = fit_cov(s, penalty=PenaltySpec.l1(0.2, 0.05), grid=g,
+                   tol=1e-6, max_iters=200)
+    np.testing.assert_array_equal(np.asarray(legacy.omega),
+                                  np.asarray(spec.omega))
+    assert int(legacy.iters) == int(spec.iters)
+    x = jnp.asarray(chain_problem.x)
+    legacy_o = fit_obs(x, 0.2, 0.05, grid=g, tol=1e-6, max_iters=200)
+    spec_o = fit_obs(x, penalty=PenaltySpec.l1(0.2, 0.05), grid=g,
+                     tol=1e-6, max_iters=200)
+    np.testing.assert_array_equal(np.asarray(legacy_o.omega),
+                                  np.asarray(spec_o.omega))
+
+
+def test_l1_spec_bit_exact_batched(chain_problem):
+    s = jnp.asarray(chain_problem.s)
+    # the lam grid must ride in the data dtype (an f64 grid against f32
+    # data trips the while_loop carry check — pre-existing solver contract)
+    grid = jnp.asarray([0.3, 0.2, 0.15], s.dtype)
+    legacy = batch.solve_path_batched(s, grid, 0.05, variant="cov", tol=1e-6)
+    spec = batch.solve_path_batched(s, grid, penalty=PenaltySpec("l1", 0.0,
+                                                                 0.05),
+                                    variant="cov", tol=1e-6)
+    np.testing.assert_array_equal(np.asarray(legacy.omega),
+                                  np.asarray(spec.omega))
+    np.testing.assert_array_equal(np.asarray(legacy.iters),
+                                  np.asarray(spec.iters))
+
+
+def test_l1_spec_bit_exact_fit_report(chain_problem):
+    """FitReport fields (objective, iters, ls, density columns) identical
+    between the legacy kwargs and the equivalent spec."""
+    from repro.estimator import ConcordEstimator, SolverConfig
+
+    cfg = SolverConfig(backend="reference", variant="cov", tol=1e-6,
+                       max_iters=300)
+    s = jnp.asarray(chain_problem.s)
+    a = ConcordEstimator(lam1=0.2, lam2=0.05, config=cfg).fit_cov(
+        s, n_samples=150).report_
+    b = ConcordEstimator(penalty=PenaltySpec.l1(0.2, 0.05),
+                         config=cfg).fit_cov(s, n_samples=150).report_
+    np.testing.assert_array_equal(np.asarray(a.omega), np.asarray(b.omega))
+    assert (a.iters, a.ls_total, a.objective, a.objective_smooth,
+            a.nnz_per_row, a.block_density, a.converged) == \
+           (b.iters, b.ls_total, b.objective, b.objective_smooth,
+            b.nnz_per_row, b.block_density, b.converged)
+    assert a.penalty == b.penalty == "l1"
+
+
+# ---------------------------------------------------------------------------
+# one compiled program: traced penalty params on paths and batched lanes
+# ---------------------------------------------------------------------------
+
+def _cache_size(jitted):
+    fn = getattr(jitted, "_cache_size", None)
+    if fn is None:
+        pytest.skip("jit cache introspection not available")
+    return fn()
+
+
+def test_warm_path_reuses_one_compiled_program(chain_problem):
+    """Across a lam1 grid (warm-started) the reference engine must not
+    recompile: penalty params and omega0 are traced."""
+    from repro.core import prox as prox_mod
+    from repro.estimator import ConcordEstimator, SolverConfig
+
+    cfg = SolverConfig(backend="reference", variant="cov", tol=1e-6,
+                       max_iters=200)
+    s = jnp.asarray(chain_problem.s)
+    est = ConcordEstimator(lam1=0.2, lam2=0.05, config=cfg)
+    est.fit_path(s=s, n_samples=150, lam1_grid=[0.3, 0.25])
+    base = _cache_size(prox_mod._solve_reference)
+    est.fit_path(s=s, n_samples=150, lam1_grid=[0.28, 0.22, 0.18, 0.12])
+    assert _cache_size(prox_mod._solve_reference) == base
+    # a scad path shares one program across its points too
+    est2 = ConcordEstimator(lam1=0.2, lam2=0.05, penalty="scad:3.7",
+                            config=cfg)
+    est2.fit_path(s=s, n_samples=150, lam1_grid=[0.3, 0.25])
+    grown = _cache_size(prox_mod._solve_reference)
+    est2.fit_path(s=s, n_samples=150, lam1_grid=[0.27, 0.21, 0.14])
+    assert _cache_size(prox_mod._solve_reference) == grown
+
+
+def test_batched_lanes_with_per_lane_penalty_params_f64():
+    """Different lanes carry different penalty params (lam1 AND the MCP
+    shape) in ONE compiled program, and each lane matches its sequential
+    solve bit-for-bit in telemetry / to 1e-5 in f64 values."""
+    with x64():
+        prob = graphs.make_problem("chain", p=32, n=100, seed=3)
+        s = jnp.asarray(prob.s, jnp.float64)
+        lam1s = [0.2, 0.3, 0.25]
+        gammas = [1.5, 3.0, 10.0]
+        spec_b = PenaltySpec("mcp", jnp.asarray(lam1s), 0.05,
+                             shape=jnp.asarray(gammas))
+        bat = batch.solve_batch(jnp.stack([s] * 3), penalty=spec_b,
+                                variant="cov", tol=1e-6)
+        for k in range(3):
+            ref = solve_reference(
+                s, penalty=PenaltySpec.mcp(lam1s[k], gammas[k], 0.05),
+                tol=1e-6)
+            np.testing.assert_allclose(np.asarray(bat.omega[k]),
+                                       np.asarray(ref.omega),
+                                       rtol=0, atol=1e-5)
+            assert int(bat.iters[k]) == int(ref.iters)
+        # lanes genuinely differ (different shapes -> different estimates)
+        assert float(np.abs(np.asarray(bat.omega[0])
+                            - np.asarray(bat.omega[2])).max()) > 1e-6
+        # same lane count, new param VALUES -> no recompile
+        base = _cache_size(batch._solve_batch)
+        spec_c = PenaltySpec("mcp", jnp.asarray([0.22, 0.28, 0.24]), 0.05,
+                             shape=jnp.asarray([2.0, 4.0, 8.0]))
+        batch.solve_batch(jnp.stack([s] * 3), penalty=spec_c,
+                          variant="cov", tol=1e-6)
+        assert _cache_size(batch._solve_batch) == base
+
+
+# ---------------------------------------------------------------------------
+# solver behaviour of the new penalties
+# ---------------------------------------------------------------------------
+
+def test_scad_mcp_solves_converge_and_are_symmetric(chain_problem):
+    s = jnp.asarray(chain_problem.s)
+    for spec in (PenaltySpec.scad(0.25, 3.7, 0.05),
+                 PenaltySpec.mcp(0.25, 3.0, 0.05)):
+        r = solve_reference(s, penalty=spec, tol=1e-6, max_iters=400)
+        assert bool(r.converged)
+        om = np.asarray(r.omega)
+        np.testing.assert_allclose(om, om.T, atol=1e-5)
+        assert np.all(np.diag(om) > 0)
+
+
+def test_scad_shrinks_large_entries_less_than_l1(chain_problem):
+    """SCAD's unbiasedness: large true edges survive with less shrinkage
+    than under l1 at the same lam1."""
+    s = jnp.asarray(chain_problem.s)
+    r_l1 = solve_reference(s, 0.3, 0.05, tol=1e-6, max_iters=400)
+    r_sc = solve_reference(s, penalty=PenaltySpec.scad(0.3, 3.7, 0.05),
+                           tol=1e-6, max_iters=400)
+    off = ~np.eye(48, dtype=bool)
+    big = np.abs(np.asarray(r_sc.omega))[off].max()
+    assert big >= np.abs(np.asarray(r_l1.omega))[off].max() - 1e-6
+
+
+def test_structural_constraints_through_estimator(chain_problem):
+    """0/inf weights as structural edge constraints end-to-end."""
+    from repro.estimator import ConcordEstimator, SolverConfig
+
+    p = chain_problem.s.shape[0]
+    w = np.ones((p, p))
+    np.fill_diagonal(w, 0.0)
+    w[0, 1] = w[1, 0] = np.inf       # forbid the strongest chain edge
+    w[0, 5] = w[5, 0] = 0.0          # leave a non-edge unpenalized
+    est = ConcordEstimator(
+        penalty=PenaltySpec.weighted_l1(0.2, w, lam2=0.05),
+        config=SolverConfig(backend="reference", variant="cov", tol=1e-6))
+    est.fit_cov(jnp.asarray(chain_problem.s), n_samples=150)
+    om = np.asarray(est.omega_)
+    assert om[0, 1] == 0.0 and om[1, 0] == 0.0
+    assert abs(om[0, 5]) > 0.0
+    assert est.report_.penalty == "weighted_l1"
+
+
+def test_weighted_pallas_kernel_matches_oracle(rng):
+    from repro.kernels import ops, ref
+
+    z = rng.standard_normal((96, 96)).astype(np.float32)
+    w = np.abs(rng.standard_normal((96, 96))).astype(np.float32)
+    w[3, 7] = np.inf
+    mask = np.eye(96, dtype=np.float32)
+    out, ld, l1, ss, md, bnnz = ops.fused_prox_stats(
+        jnp.asarray(z), jnp.asarray(mask), 0.2, weights=jnp.asarray(w),
+        block=(32, 32))
+    ro, rld, rl1, rss, rmd, rbnnz = ref.fused_prox_stats(
+        jnp.asarray(z), jnp.asarray(mask), 0.2, weights=jnp.asarray(w),
+        block=(32, 32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ro), atol=1e-6)
+    assert np.asarray(out)[3, 7] == 0.0
+    np.testing.assert_allclose(np.asarray(bnnz), np.asarray(rbnnz))
+    for a, b in [(ld, rld), (l1, rl1), (ss, rss), (md, rmd)]:
+        np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+
+
+def test_weighted_solve_with_pallas_and_sparse_harvest(chain_problem):
+    """use_pallas routes the weighted prox through the fused kernel's
+    weight lane; the harvested occupancy mask keeps the sparse dispatch
+    exact (f64 agreement with the dense jnp path)."""
+    with x64():
+        from repro.core.matops import MatmulPolicy
+
+        s = jnp.asarray(chain_problem.s, jnp.float64)
+        p = s.shape[0]
+        w = np.ones((p, p))
+        np.fill_diagonal(w, 0.0)
+        spec = PenaltySpec.weighted_l1(0.25, w, 0.05)
+        pol = MatmulPolicy("on", 16, 1.0)
+        r_plain = solve_reference(s, penalty=spec, tol=1e-6, max_iters=300)
+        r_pal = solve_reference(s, penalty=spec, tol=1e-6, max_iters=300,
+                                sparse_matmul=pol, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(r_pal.omega),
+                                   np.asarray(r_plain.omega),
+                                   rtol=0, atol=1e-8)
+
+
+def test_fit_batch_keeps_estimator_penalty_family():
+    """lam1/lam2 overrides on fit_batch retune strengths only — a SCAD
+    estimator batches SCAD lanes, not silently-l1 ones — and a penalty
+    string keeps the estimator's strength."""
+    from repro.estimator import ConcordEstimator, SolverConfig
+
+    xs = np.stack([graphs.make_problem("chain", p=24, n=80, seed=k).x
+                   for k in range(2)])
+    cfg = SolverConfig(backend="reference", variant="obs", tol=1e-5)
+    est = ConcordEstimator(lam1=0.2, lam2=0.05, penalty="scad:3.7",
+                           config=cfg)
+    rep = est.fit_batch(x=xs, lam1=[0.2, 0.3])
+    assert [r.penalty for r in rep] == ["scad:3.7", "scad:3.7"]
+    assert [r.lam1 for r in rep] == [0.2, 0.3]
+    assert all(r.lam2 == 0.05 for r in rep)
+    # a penalty string on the call takes strength from the estimator
+    rep2 = est.fit_batch(x=xs, penalty="mcp:2.5")
+    assert [r.penalty for r in rep2] == ["mcp:2.5", "mcp:2.5"]
+    assert all(r.lam1 == 0.2 and r.lam2 == 0.05 for r in rep2)
+    with pytest.raises(ValueError, match="already carries"):
+        est.fit_batch(x=xs, penalty=PenaltySpec.l1(0.1), lam1=0.3)
+
+
+def test_string_penalty_requires_strength():
+    """Solver entry points refuse a penalty string without lam1 — a
+    silently-defaulted strength would return a wrongly-regularized
+    estimate with no error."""
+    s = jnp.eye(8) + 0.1
+    with pytest.raises(TypeError, match="lam1"):
+        solve_reference(s, penalty="scad:3.7")
+    with pytest.raises(TypeError, match="lam1"):
+        batch.solve_batch(jnp.stack([s, s]), penalty="scad:3.7")
+    with pytest.raises(TypeError, match="lam1"):
+        as_penalty("scad:3.7")
+
+
+@pytest.mark.slow
+def test_weighted_spec_shards_across_devices():
+    """The weight matrix shards with the Omega layout through shard_map
+    (4 virtual devices, padded p): distributed weighted/SCAD solves agree
+    with the single-device reference and keep structural zeros exact."""
+    from conftest import run_with_devices
+
+    code = """
+import numpy as np, jax.numpy as jnp
+from repro.core import graphs
+from repro.core.distributed import fit_cov
+from repro.core.prox import solve_reference
+from repro.core.penalty import PenaltySpec
+from repro.comm.grid import Grid1p5D
+
+prob = graphs.make_problem("chain", p=37, n=120, seed=3)
+s = jnp.asarray(prob.s)
+w = np.ones((37, 37)); np.fill_diagonal(w, 0.0)
+w[0, 1] = w[1, 0] = np.inf
+spec = PenaltySpec.weighted_l1(0.25, w, 0.05)
+rd = fit_cov(s, penalty=spec, grid=Grid1p5D(4, 1, 1), tol=1e-6,
+             max_iters=200)
+rr = solve_reference(s, penalty=spec, tol=1e-6, max_iters=200)
+om = np.asarray(rd.omega)
+assert om[0, 1] == 0.0 and om[1, 0] == 0.0
+gap = float(np.abs(om - np.asarray(rr.omega)).max())
+assert gap < 2e-3, gap
+print("OK", gap)
+"""
+    out = run_with_devices(code, n_devices=4)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# adaptive two-stage refit
+# ---------------------------------------------------------------------------
+
+def test_adaptive_weights_shape_and_symmetry():
+    om = np.array([[2.0, 0.5, 0.0], [0.5001, 1.0, -0.2], [0.0, -0.2, 3.0]])
+    w = adaptive_weights(om, eps=1e-2)
+    assert w.shape == (3, 3)
+    np.testing.assert_array_equal(w, w.T)          # exactly symmetric
+    assert np.all(np.diag(w) == 0.0)
+    off = ~np.eye(3, dtype=bool)
+    assert w[off].mean() == pytest.approx(1.0)     # normalized
+    assert w[0, 2] == w[off].max()                 # zeros get max weight
+    with pytest.raises(ValueError, match="eps"):
+        adaptive_weights(om, eps=0.0)
+    with pytest.raises(ValueError, match="square"):
+        adaptive_weights(np.ones((2, 3)))
+
+
+def test_fit_path_adaptive_two_stage(chain_problem):
+    from repro.estimator import ConcordEstimator, SolverConfig
+
+    cfg = SolverConfig(backend="reference", variant="cov", tol=1e-6,
+                       max_iters=300)
+    s = jnp.asarray(chain_problem.s)
+    grid = [0.3, 0.2, 0.15]
+    est = ConcordEstimator(lam2=0.05, config=cfg)
+    path = est.fit_path(s=s, n_samples=150, lam1_grid=grid, adaptive=True)
+    assert path.adaptive and path.stage1 is not None
+    assert not path.stage1.adaptive
+    assert all(r.penalty == "l1" for r in path.stage1)
+    assert all(r.penalty == "weighted_l1" for r in path)
+    assert len(path) == len(path.stage1) == len(grid)
+    assert path.best_bic().bic is not None
+    assert "adaptive stage 2" in path.summary()
+    # the estimator lands on the stage-2 terminal fit
+    assert est.report_ is path.reports[-1]
+    # adaptive keeps (or improves) stage-1 recovery on the easy chain
+    ppv1, _ = graphs.ppv_fdr(np.asarray(path.stage1.best_bic().omega),
+                             chain_problem.omega0)
+    ppv2, _ = graphs.ppv_fdr(np.asarray(path.best_bic().omega),
+                             chain_problem.omega0)
+    assert ppv2 >= ppv1 - 0.1
+
+
+def test_fit_path_adaptive_batched_mode(chain_problem):
+    from repro.estimator import ConcordEstimator, SolverConfig
+
+    cfg = SolverConfig(backend="reference", variant="cov", tol=1e-6,
+                       max_iters=300)
+    path = ConcordEstimator(lam2=0.05, config=cfg).fit_path(
+        s=jnp.asarray(chain_problem.s), n_samples=150,
+        lam1_grid=[0.3, 0.2], adaptive=True, mode="batched")
+    assert path.adaptive and path.mode == "batched"
+    assert all(r.penalty == "weighted_l1" for r in path)
+
+
+# ---------------------------------------------------------------------------
+# validation + parsing + config/estimator surfaces
+# ---------------------------------------------------------------------------
+
+def test_spec_validation_rejects_bad_params():
+    with pytest.raises(ValueError, match="lam1"):
+        PenaltySpec.l1(-0.1)
+    with pytest.raises(ValueError, match="lam2"):
+        PenaltySpec.l1(0.1, float("nan"))
+    with pytest.raises(ValueError, match="scad"):
+        PenaltySpec.scad(0.1, a=2.0)
+    with pytest.raises(ValueError, match="scad"):
+        PenaltySpec.scad(0.1, a=-3.7)
+    with pytest.raises(ValueError, match="mcp"):
+        PenaltySpec.mcp(0.1, gamma=1.0)
+    with pytest.raises(ValueError, match="mcp"):
+        PenaltySpec.mcp(0.1, gamma=0.0)
+
+
+def test_weight_validation_mirrors_problem_validation():
+    ones = np.ones((4, 4))
+    with pytest.raises(ValueError, match="square"):
+        PenaltySpec.weighted_l1(0.1, np.ones((4, 3)))
+    bad = ones.copy()
+    bad[0, 1] = np.nan
+    with pytest.raises(ValueError, match="NaN"):
+        PenaltySpec.weighted_l1(0.1, bad)
+    neg = ones.copy()
+    neg[1, 2] = neg[2, 1] = -1.0
+    with pytest.raises(ValueError, match="nonnegative"):
+        PenaltySpec.weighted_l1(0.1, neg)
+    asym = ones.copy()
+    asym[0, 1] = 5.0
+    with pytest.raises(ValueError, match="symmetric"):
+        PenaltySpec.weighted_l1(0.1, asym)
+    inf_asym = ones.copy()
+    inf_asym[0, 1] = np.inf
+    with pytest.raises(ValueError, match="inf"):
+        PenaltySpec.weighted_l1(0.1, inf_asym)
+    with pytest.raises(ValueError, match="weight"):
+        PenaltySpec.weighted_l1(0.1, None)
+
+
+def test_parse_penalty_forms():
+    assert parse_penalty("l1") == ("l1", None)
+    assert parse_penalty("scad") == ("scad", 3.7)
+    assert parse_penalty("scad:3.5") == ("scad", 3.5)
+    assert parse_penalty("mcp:2.5") == ("mcp", 2.5)
+    with pytest.raises(ValueError, match="unknown penalty"):
+        parse_penalty("bogus")
+    with pytest.raises(ValueError, match="shape"):
+        parse_penalty("l1:3.0")
+    with pytest.raises(ValueError, match="not a number"):
+        parse_penalty("scad:abc")
+
+
+def test_as_penalty_normalization():
+    spec = as_penalty("scad:3.5", lam1=0.2, lam2=0.01)
+    assert spec.kind == "scad" and float(spec.shape) == 3.5
+    assert as_penalty(None, lam1=0.3).kind == "l1"
+    assert as_penalty(0.3).kind == "l1" and float(as_penalty(0.3).lam1) == 0.3
+    ready = PenaltySpec.l1(0.1)
+    assert as_penalty(ready) is ready
+    with pytest.raises(ValueError, match="already carries"):
+        as_penalty(ready, lam1=0.2)
+    with pytest.raises(ValueError, match="weight"):
+        as_penalty("weighted_l1", lam1=0.2)
+
+
+def test_solver_config_penalty_field():
+    from repro.estimator import SolverConfig
+
+    cfg = SolverConfig(penalty="mcp:2.5")
+    assert cfg.penalty == "mcp:2.5"
+    with pytest.raises(ValueError, match="unknown penalty"):
+        SolverConfig(penalty="bogus")
+    with pytest.raises(ValueError, match="penalty"):
+        SolverConfig(penalty=3)
+
+
+def test_estimator_penalty_resolution(chain_problem):
+    from repro.estimator import ConcordEstimator, SolverConfig
+
+    # config.penalty string applies when the ctor gets no penalty
+    cfg = SolverConfig(backend="reference", variant="cov", tol=1e-5,
+                       penalty="scad:3.7")
+    est = ConcordEstimator(lam1=0.25, lam2=0.05, config=cfg)
+    assert est.penalty.kind == "scad"
+    est.fit_cov(jnp.asarray(chain_problem.s), n_samples=150)
+    assert est.report_.penalty == "scad:3.7"
+    # an explicit spec wins over config.penalty, and rejects scalar kwargs
+    spec = PenaltySpec.mcp(0.2, 2.5)
+    assert ConcordEstimator(penalty=spec, config=cfg).penalty is spec
+    with pytest.raises(ValueError, match="already carries"):
+        ConcordEstimator(lam1=0.2, penalty=spec)
+    # the legacy mutation surface keeps retuning the spec
+    est2 = ConcordEstimator(lam1=0.1, lam2=0.05)
+    est2.lam1 = 0.4
+    assert float(est2.penalty.lam1) == 0.4
+    est2.lam2 = 0.01
+    assert float(est2.penalty.lam2) == 0.01
