@@ -1,0 +1,40 @@
+"""JAX-aware static analysis for the solver stack.
+
+Two engines over one rule registry (:mod:`repro.analysis.rules`):
+
+* :mod:`repro.analysis.astpass` — CA1xx, pure stdlib-``ast`` source
+  rules (host calls under trace, dtype literals in f64 modules,
+  collective-layer bypasses, ...);
+* :mod:`repro.analysis.jaxprpass` — CA2xx, semantic checks that trace
+  the per-layer ``ANALYSIS_ENTRIES`` manifests with ``jax.make_jaxpr``
+  (f64 downcasts, recompiles, unbound psum axes).
+
+Run it as ``python -m repro.analysis``; see README "Static analysis".
+"""
+from .findings import Finding, sort_findings
+from .recompile import RecompileGuard, cache_size
+from .rules import (
+    DEFAULT_PROFILE,
+    SCRIPTS_PROFILE,
+    Profile,
+    Rule,
+    all_rules,
+    get_rule,
+    profile_for_path,
+    register_rule,
+)
+
+__all__ = [
+    "Finding",
+    "sort_findings",
+    "RecompileGuard",
+    "cache_size",
+    "Rule",
+    "Profile",
+    "register_rule",
+    "get_rule",
+    "all_rules",
+    "profile_for_path",
+    "DEFAULT_PROFILE",
+    "SCRIPTS_PROFILE",
+]

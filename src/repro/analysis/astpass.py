@@ -1,0 +1,627 @@
+"""AST engine: syntactic JAX-contract rules (CA1xx), stdlib-``ast`` only.
+
+The engine is deliberately import-free with respect to jax — it parses
+source, so it can run on any file (including benchmarks) without
+initializing a backend.  Per module it works in three passes:
+
+  1. resolve import origins (``jnp`` -> ``jax.numpy``, ``shard_map`` ->
+     ``repro.comm.compat.shard_map`` / ``jax.experimental...``), so rules
+     key on *where a name came from*, not on spelling;
+  2. discover TRACED functions: decorated with jit/vmap/pmap/shard_map
+     (including ``partial(jax.jit, ...)``), passed by name into a tracing
+     call (``shard_map``, ``lax.while_loop``, ``pallas_call``,
+     ``make_jaxpr``, ...), then closed over nested defs and same-module
+     callees (a function called from a traced body is traced too);
+  3. run the rule visitors with that traced-scope map.
+
+This is a linter, not an interpreter: cross-module call graphs are out of
+scope (the jaxpr engine covers the real entry points semantically), and
+``static_argnames`` parsed off the jit decorator exempt the declared
+host-side parameters.
+
+Inline suppression: a line containing ``# ca: allow=CA1xx`` (comma list,
+or ``allow=*``) suppresses findings on that line; prefer the checked-in
+baseline file for anything longer-lived.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+
+from .findings import Finding
+from .rules import Profile
+
+# -- name sets --------------------------------------------------------------
+
+#: final path components that mark a callee/decorator as entering a trace
+TRACING_NAMES = frozenset({
+    "jit", "vmap", "pmap", "shard_map", "make_jaxpr", "eval_shape",
+    "while_loop", "fori_loop", "scan", "cond", "switch",
+    "pallas_call", "checkpoint", "remat", "grad", "value_and_grad",
+    "custom_jvp", "custom_vjp", "named_call",
+})
+
+#: origin prefixes under which TRACING_NAMES count (a bare builtin
+#: ``map``/``filter`` never resolves to these)
+_TRACING_PREFIXES = ("jax", "repro.", "functools")
+
+HOST_SCALAR_BUILTINS = frozenset({"float", "int", "bool", "complex"})
+HOST_PULL_METHODS = frozenset({"item", "tolist", "to_py"})
+
+#: lax collectives that must stay inside the collective layer (CA105)
+COLLECTIVE_PRIMS = frozenset({
+    "psum", "pmean", "pmin", "pmax", "ppermute", "pbroadcast",
+    "all_gather", "all_to_all", "psum_scatter", "axis_index", "axis_size",
+})
+
+#: mesh/shard_map entry APIs that must come from comm/compat (CA105)
+COMPAT_ONLY_ORIGINS = frozenset({
+    "jax.shard_map",
+    "jax.experimental.shard_map.shard_map",
+    "jax.make_mesh",
+    "jax.set_mesh",
+    "jax.sharding.get_abstract_mesh",
+    "jax.sharding.Mesh",
+})
+
+NARROW_FLOAT_DTYPES = frozenset({"float32", "float16", "bfloat16"})
+_NARROW_DTYPE_STRINGS = NARROW_FLOAT_DTYPES | {"f32", "f16", "bf16"}
+
+_ALLOW_RE = re.compile(r"#\s*ca:\s*allow=([A-Z0-9*,\s]+)")
+
+
+def _line_allows(source_lines: list[str], lineno: int, rule_id: str) -> bool:
+    if not (1 <= lineno <= len(source_lines)):
+        return False
+    m = _ALLOW_RE.search(source_lines[lineno - 1])
+    if not m:
+        return False
+    allowed = {t.strip() for t in m.group(1).split(",")}
+    return "*" in allowed or rule_id in allowed
+
+
+# -- import-origin resolution -----------------------------------------------
+
+def _collect_imports(tree: ast.Module) -> dict[str, str]:
+    """alias -> dotted origin ('jnp' -> 'jax.numpy'); relative imports
+    keep their module path with the leading dots stripped."""
+    origins: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                origins[(a.asname or a.name.split(".")[0])] = (
+                    a.name if a.asname else a.name.split(".")[0])
+                if a.asname is None and "." in a.name:
+                    # `import jax.numpy` binds `jax`; remember the root
+                    origins[a.name.split(".")[0]] = a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom):
+            mod = (node.module or "").lstrip(".") or ""
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                origin = f"{mod}.{a.name}" if mod else a.name
+                origins[a.asname or a.name] = origin
+    return origins
+
+
+def _origin_of(node: ast.AST, imports: dict[str, str]) -> str | None:
+    """Dotted origin of a Name/Attribute chain, or None if the base name
+    was not imported (a local def, builtin, or parameter)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        base = imports.get(node.id)
+        if base is None:
+            return None
+        parts.append(base)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jaxish(origin: str | None) -> bool:
+    return origin is not None and (
+        origin == "jax" or origin.startswith(("jax.", "numpy")))
+
+
+def _unwrap_partial(call: ast.Call, imports) -> ast.AST:
+    """partial(jax.jit, ...) -> jax.jit (first positional arg)."""
+    origin = _origin_of(call.func, imports)
+    if origin and origin.split(".")[-1] == "partial" and call.args:
+        return call.args[0]
+    return call.func
+
+
+# -- traced-function discovery ----------------------------------------------
+
+@dataclass
+class _FnInfo:
+    node: ast.AST
+    qualname: str
+    parent: "_FnInfo | None"
+    traced: bool = False
+    static_names: frozenset = frozenset()
+    callees: set = field(default_factory=set)   # local function names called
+
+
+def _static_names_from_decorators(fn, imports) -> frozenset:
+    """static_argnames declared on a jit decorator (strings only)."""
+    names: set[str] = set()
+    for dec in fn.decorator_list:
+        call = dec if isinstance(dec, ast.Call) else None
+        if call is None:
+            continue
+        target = _unwrap_partial(call, imports)
+        origin = _origin_of(target, imports)
+        if not origin or origin.split(".")[-1] != "jit":
+            continue
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                for n in ast.walk(kw.value):
+                    if isinstance(n, ast.Constant) and isinstance(n.value,
+                                                                  str):
+                        names.add(n.value)
+    return frozenset(names)
+
+
+class _FnCollector(ast.NodeVisitor):
+    """Collect function defs (with nesting), their local call edges, and
+    the set of function names referenced inside tracing calls."""
+
+    def __init__(self, imports: dict[str, str]):
+        self.imports = imports
+        self.fns: dict[int, _FnInfo] = {}        # id(node) -> info
+        self.by_name: dict[str, list[_FnInfo]] = {}
+        self.trace_marked: set[str] = set()      # names passed to tracers
+        self._stack: list[_FnInfo] = []
+        self._class_stack: list[str] = []
+
+    def _qual(self, name: str) -> str:
+        scope = [f.qualname for f in self._stack[-1:]] or self._class_stack[-1:]
+        return f"{scope[0]}.{name}" if scope else name
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self._class_stack.append(self._qual(node.name))
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    def _visit_fn(self, node):
+        info = _FnInfo(
+            node=node, qualname=self._qual(node.name),
+            parent=self._stack[-1] if self._stack else None,
+            static_names=_static_names_from_decorators(node, self.imports),
+        )
+        self.fns[id(node)] = info
+        self.by_name.setdefault(node.name, []).append(info)
+        for dec in node.decorator_list:
+            target = (_unwrap_partial(dec, self.imports)
+                      if isinstance(dec, ast.Call) else dec)
+            origin = _origin_of(target, self.imports)
+            if (origin and origin.split(".")[-1] in TRACING_NAMES
+                    and origin.startswith(_TRACING_PREFIXES)):
+                info.traced = True
+        self._stack.append(info)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_Call(self, node: ast.Call):
+        if self._stack:
+            callee = node.func
+            if isinstance(callee, ast.Name):
+                self._stack[-1].callees.add(callee.id)
+        origin = _origin_of(_unwrap_partial(node, self.imports), self.imports)
+        if (origin and origin.split(".")[-1] in TRACING_NAMES
+                and origin.startswith(_TRACING_PREFIXES)):
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                target = arg
+                if isinstance(target, ast.Call):
+                    target = _unwrap_partial(target, self.imports)
+                if isinstance(target, ast.Name):
+                    self.trace_marked.add(target.id)
+        self.generic_visit(node)
+
+
+def _resolve_traced(collector: _FnCollector) -> None:
+    """Fixpoint closure: decorator/marker-traced functions, their nested
+    defs, and their same-module callees are all traced."""
+    for name in collector.trace_marked:
+        for info in collector.by_name.get(name, []):
+            info.traced = True
+    changed = True
+    while changed:
+        changed = False
+        for info in collector.fns.values():
+            if info.traced:
+                continue
+            if info.parent is not None and info.parent.traced:
+                info.traced = changed = True
+        for info in collector.fns.values():
+            if not info.traced:
+                continue
+            for callee in info.callees:
+                for target in collector.by_name.get(callee, []):
+                    if not target.traced and target.parent is None:
+                        target.traced = changed = True
+
+
+# -- the rule pass ----------------------------------------------------------
+
+def _contains_jax_call(node: ast.AST, imports) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            if _is_jaxish(_origin_of(n.func, imports)):
+                return True
+            if (isinstance(n.func, ast.Attribute)
+                    and n.func.attr in ("any", "all")):
+                return True
+    return False
+
+
+_STATIC_ATTRS = ("shape", "ndim", "dtype", "size")
+
+
+def _is_static_metadata(node: ast.AST) -> bool:
+    """A (possibly subscripted) ``.shape``/``.ndim``/``.size``/``.dtype``
+    read: host metadata, not device data — never a sync."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    return isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS
+
+
+def _mentions_traced_param(node: ast.AST, params: frozenset) -> bool:
+    """A parameter Name occurs NOT as the base of a static attribute
+    (``x.shape`` is host-side metadata, ``x`` itself is traced)."""
+    static_bases = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            for b in ast.walk(n.value):
+                if isinstance(b, ast.Name):
+                    static_bases.add(id(b))
+    for n in ast.walk(node):
+        if (isinstance(n, ast.Name) and n.id in params
+                and id(n) not in static_bases):
+            return True
+    return False
+
+
+def _is_mutable_default(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    return (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in ("list", "dict", "set"))
+
+
+class _RuleVisitor(ast.NodeVisitor):
+    def __init__(self, relpath: str, source_lines: list[str],
+                 imports: dict[str, str], collector: _FnCollector,
+                 profile: Profile):
+        self.relpath = relpath
+        self.lines = source_lines
+        self.imports = imports
+        self.collector = collector
+        self.profile = profile
+        self.findings: list[Finding] = []
+        self._fn_stack: list[_FnInfo] = []
+        self._loop_depth = 0
+        self._dtype_exempt: set[int] = set()     # node ids inside *_DTYPE =
+        self._in_f64_module = any(
+            relpath.endswith(m) for m in profile.f64_modules)
+        self._in_collective_layer = any(
+            s in relpath or relpath.endswith(s.rstrip("/"))
+            for s in profile.collective_layer
+        ) or relpath.endswith("compat.py")
+        self._unregistered_dataclasses: set[str] = set()
+
+    # -- emission ----------------------------------------------------
+
+    def _emit(self, rule: str, node: ast.AST, message: str):
+        if rule not in self.profile.rules:
+            return
+        line = getattr(node, "lineno", 0)
+        if _line_allows(self.lines, line, rule):
+            return
+        snippet = (self.lines[line - 1].strip()
+                   if 1 <= line <= len(self.lines) else "")
+        ctx = self._fn_stack[-1].qualname if self._fn_stack else "<module>"
+        self.findings.append(Finding(
+            rule=rule, path=self.relpath, line=line, message=message,
+            context=ctx, snippet=snippet))
+
+    # -- module prep -------------------------------------------------
+
+    def scan_module(self, tree: ast.Module):
+        for node in tree.body:
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id.endswith("_DTYPE")):
+                for sub in ast.walk(node):
+                    self._dtype_exempt.add(id(sub))
+        self._find_unregistered_dataclasses(tree)
+        self.visit(tree)
+
+    def _find_unregistered_dataclasses(self, tree: ast.Module):
+        registered: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                origin = _origin_of(node.func, self.imports) or ""
+                if origin.split(".")[-1] in ("register_dataclass",
+                                             "register_pytree_node"):
+                    for arg in node.args:
+                        if isinstance(arg, ast.Name):
+                            registered.add(arg.id)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            is_dc = is_reg = False
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                origin = _origin_of(target, self.imports) or ""
+                leaf = origin.split(".")[-1] if origin else (
+                    target.id if isinstance(target, ast.Name) else "")
+                if leaf == "dataclass":
+                    is_dc = True
+                if leaf in ("register_pytree_node_class",
+                            "register_pytree_with_keys_class"):
+                    is_reg = True
+            if is_dc and not is_reg and node.name not in registered:
+                self._unregistered_dataclasses.add(node.name)
+
+    # -- scope bookkeeping -------------------------------------------
+
+    def _visit_fn(self, node):
+        info = self.collector.fns.get(id(node))
+        self._fn_stack.append(info)
+        if info is not None and info.traced:
+            self._check_fn_boundary(node, info)
+        outer_loops = self._loop_depth
+        self._loop_depth = 0
+        self.generic_visit(node)
+        self._loop_depth = outer_loops
+        self._fn_stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def _traced(self) -> _FnInfo | None:
+        for info in reversed(self._fn_stack):
+            if info is not None and info.traced:
+                return info
+        return None
+
+    def _traced_params(self) -> frozenset:
+        names: set[str] = set()
+        for info in self._fn_stack:
+            if info is None or not info.traced:
+                continue
+            a = info.node.args
+            for arg in (a.posonlyargs + a.args + a.kwonlyargs
+                        + ([a.vararg] if a.vararg else [])
+                        + ([a.kwarg] if a.kwarg else [])):
+                if arg.arg not in info.static_names:
+                    names.add(arg.arg)
+        return frozenset(names)
+
+    # -- CA103: jit-boundary impurities -------------------------------
+
+    def _check_fn_boundary(self, node, info: _FnInfo):
+        a = node.args
+        for arg, default in zip(
+                (a.posonlyargs + a.args)[-len(a.defaults):]
+                if a.defaults else [], a.defaults):
+            if _is_mutable_default(default):
+                self._emit(
+                    "CA103", default,
+                    f"traced function '{info.qualname}' has a mutable "
+                    f"default for '{arg.arg}': the default is created once "
+                    f"and aliased across every trace")
+        for arg, default in zip(a.kwonlyargs, a.kw_defaults):
+            if default is not None and _is_mutable_default(default):
+                self._emit(
+                    "CA103", default,
+                    f"traced function '{info.qualname}' has a mutable "
+                    f"default for '{arg.arg}'")
+        for arg in a.posonlyargs + a.args + a.kwonlyargs:
+            if arg.annotation is None:
+                continue
+            for n in ast.walk(arg.annotation):
+                if (isinstance(n, ast.Name)
+                        and n.id in self._unregistered_dataclasses):
+                    self._emit(
+                        "CA103", arg.annotation,
+                        f"parameter '{arg.arg}' of traced function "
+                        f"'{info.qualname}' is an unregistered dataclass "
+                        f"'{n.id}': register it as a pytree "
+                        f"(jax.tree_util.register_dataclass / "
+                        f"register_pytree_node_class) before it crosses "
+                        f"the jit boundary")
+
+    # -- loops (for CA106) --------------------------------------------
+
+    def visit_For(self, node):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_AsyncFor = visit_For
+
+    def visit_While(self, node):
+        self._check_branch(node.test, "while")
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    def _visit_comp(self, node):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_ListComp = _visit_comp
+    visit_SetComp = _visit_comp
+    visit_DictComp = _visit_comp
+    visit_GeneratorExp = _visit_comp
+
+    # -- CA102: python branch on traced value -------------------------
+
+    def visit_If(self, node):
+        self._check_branch(node.test, "if")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node):
+        self._check_branch(node.test, "assert")
+        self.generic_visit(node)
+
+    def _check_branch(self, test: ast.AST, kw: str):
+        info = self._traced()
+        if info is None:
+            return
+        if _contains_jax_call(test, self.imports):
+            self._emit(
+                "CA102", test,
+                f"python `{kw}` on a value computed by a jax call inside "
+                f"traced '{info.qualname}': concretizes a tracer (use "
+                f"lax.cond / jnp.where, or hoist the check out of the "
+                f"traced region)")
+
+    # -- calls: CA101 / CA105 / CA106 ---------------------------------
+
+    def visit_Call(self, node: ast.Call):
+        info = self._traced()
+        origin = _origin_of(node.func, self.imports)
+        if info is not None:
+            self._check_host_call(node, info, origin)
+        self._check_collective(node, origin)
+        self._check_host_sync_loop(node, origin)
+        self.generic_visit(node)
+
+    def _check_host_call(self, node: ast.Call, info: _FnInfo,
+                         origin: str | None):
+        func = node.func
+        if isinstance(func, ast.Name) and func.id in HOST_SCALAR_BUILTINS:
+            if node.args and (
+                    _contains_jax_call(node.args[0], self.imports)
+                    or _mentions_traced_param(node.args[0],
+                                              self._traced_params())):
+                self._emit(
+                    "CA101", node,
+                    f"`{func.id}()` on a traced value inside "
+                    f"'{info.qualname}': concretizes the tracer (keep it "
+                    f"a jax scalar, or mark the argument static)")
+            return
+        if isinstance(func, ast.Attribute) and func.attr in HOST_PULL_METHODS:
+            self._emit(
+                "CA101", node,
+                f"`.{func.attr}()` inside traced '{info.qualname}': "
+                f"device->host pull under trace")
+            return
+        if isinstance(func, ast.Name) and func.id == "print":
+            self._emit(
+                "CA101", node,
+                f"`print()` inside traced '{info.qualname}': runs once at "
+                f"trace time, not per step (use jax.debug.print)")
+            return
+        if origin and origin.startswith("numpy"):
+            self._emit(
+                "CA101", node,
+                f"numpy call `{origin}` inside traced '{info.qualname}': "
+                f"numpy executes at trace time on abstract values (use "
+                f"jnp, or hoist the constant out of the traced region)")
+
+    def _check_collective(self, node: ast.Call, origin: str | None):
+        if origin is None or self._in_collective_layer:
+            return
+        if origin in COMPAT_ONLY_ORIGINS:
+            leaf = origin.split(".")[-1]
+            self._emit(
+                "CA105", node,
+                f"raw `{origin}` bypasses comm/compat.py: import "
+                f"`{leaf if leaf != 'Mesh' else 'make_mesh'}` from "
+                f"repro.comm.compat so one module absorbs jax API skew")
+            return
+        parts = origin.split(".")
+        if (parts[-1] in COLLECTIVE_PRIMS
+                and origin.startswith(("jax.lax.", "jax."))
+                and "compat" not in origin):
+            self._emit(
+                "CA105", node,
+                f"raw collective `{origin}` outside the collective layer "
+                f"(comm/, core/distributed.py): import it from "
+                f"repro.comm.compat so call sites stay auditable")
+
+    def _check_host_sync_loop(self, node: ast.Call, origin: str | None):
+        if self._loop_depth == 0:
+            return
+        func = node.func
+        is_pull = (
+            (isinstance(func, ast.Name) and func.id in ("float", "int"))
+            or (isinstance(func, ast.Attribute)
+                and func.attr in HOST_PULL_METHODS))
+        if not is_pull:
+            return
+        probe = node.args[0] if node.args else (
+            func.value if isinstance(func, ast.Attribute) else None)
+        if probe is not None and _is_static_metadata(probe):
+            return      # .shape/.ndim/.size reads are host metadata
+        if probe is not None and _contains_jax_call(probe, self.imports):
+            self._emit(
+                "CA106", node,
+                "device->host scalar pull inside a loop/comprehension: "
+                "each iteration blocks on a transfer — stack the device "
+                "values and pull once outside the loop")
+
+    # -- CA104: dtype literals in f64-contract modules ----------------
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if self._in_f64_module and id(node) not in self._dtype_exempt:
+            origin = _origin_of(node, self.imports)
+            if origin:
+                parts = origin.split(".")
+                if (parts[-1] in NARROW_FLOAT_DTYPES
+                        and parts[0] in ("jax", "numpy", "jnp", "np")):
+                    self._emit(
+                        "CA104", node,
+                        f"narrow float dtype literal `{origin}` in an "
+                        f"f64-contract module: derive the dtype from the "
+                        f"operand, or name the policy once in a "
+                        f"module-level *_DTYPE constant")
+        self.generic_visit(node)
+
+    def visit_keyword(self, node: ast.keyword):
+        if (self._in_f64_module and node.arg == "dtype"
+                and isinstance(node.value, ast.Constant)
+                and isinstance(node.value.value, str)
+                and node.value.value in _NARROW_DTYPE_STRINGS
+                and id(node.value) not in self._dtype_exempt):
+            self._emit(
+                "CA104", node.value,
+                f"narrow float dtype string {node.value.value!r} in an "
+                f"f64-contract module")
+        self.generic_visit(node)
+
+
+# -- entry point ------------------------------------------------------------
+
+def scan_source(relpath: str, source: str, profile: Profile) -> list[Finding]:
+    """Run the AST rules over one file's source text."""
+    try:
+        tree = ast.parse(source, filename=relpath)
+    except SyntaxError as e:
+        return [Finding(rule="CA100", path=relpath, line=e.lineno or 0,
+                        message=f"syntax error: {e.msg}", context="<module>")]
+    imports = _collect_imports(tree)
+    collector = _FnCollector(imports)
+    collector.visit(tree)
+    _resolve_traced(collector)
+    visitor = _RuleVisitor(relpath, source.splitlines(), imports,
+                           collector, profile)
+    visitor.scan_module(tree)
+    return visitor.findings
+
+
+def scan_file(path, relpath: str, profile: Profile) -> list[Finding]:
+    with open(path, encoding="utf-8") as f:
+        return scan_source(relpath, f.read(), profile)

@@ -1,0 +1,140 @@
+"""``python -m repro.analysis`` — run both engines, gate on findings.
+
+Exit status: 0 = clean (after baseline), 1 = unsuppressed findings,
+2 = usage / internal error.  ``--format json`` (optionally with
+``--output``) emits the machine report CI uploads as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import astpass, jaxprpass
+from .baseline import load_baseline, split_by_baseline, write_baseline
+from .findings import sort_findings
+from .rules import DEFAULT_PROFILE, all_rules, profile_for_path
+
+DEFAULT_TARGETS = ("src", "benchmarks")
+DEFAULT_BASELINE = "analysis_baseline.json"
+
+_SKIP_PARTS = {"__pycache__", ".git", ".venv", "build", "dist"}
+
+
+def iter_python_files(targets, root: Path):
+    for target in targets:
+        path = (root / target) if not Path(target).is_absolute() \
+            else Path(target)
+        if path.is_file():
+            yield path
+            continue
+        if not path.is_dir():
+            raise FileNotFoundError(f"no such file or directory: {path}")
+        for f in sorted(path.rglob("*.py")):
+            if not _SKIP_PARTS.intersection(f.parts):
+                yield f
+
+
+def run_ast_engine(targets, root: Path) -> list:
+    findings = []
+    for f in iter_python_files(targets, root):
+        try:
+            rel = f.relative_to(root).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        findings.extend(astpass.scan_file(f, rel, profile_for_path(rel)))
+    return findings
+
+
+def run_jaxpr_engine() -> list:
+    from .manifest import load_entries
+    return jaxprpass.run_entries(load_entries(), DEFAULT_PROFILE)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-aware static analysis for the repro solver stack "
+                    "(AST rules CA1xx, jaxpr rules CA2xx).")
+    ap.add_argument("targets", nargs="*", default=list(DEFAULT_TARGETS),
+                    help="files/directories to scan with the AST engine "
+                         f"(default: {' '.join(DEFAULT_TARGETS)})")
+    ap.add_argument("--root", default=".",
+                    help="repo root paths are resolved against (default: .)")
+    ap.add_argument("--engine", choices=("ast", "jaxpr", "all"),
+                    default="all")
+    ap.add_argument("--format", choices=("human", "json"), default="human")
+    ap.add_argument("--output", default=None,
+                    help="write the report here as well as stdout")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="suppression baseline JSON, relative to --root "
+                         f"(default: {DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from current findings "
+                         "and exit 0")
+    ap.add_argument("--list-rules", action="store_true")
+    return ap
+
+
+def _render_report(new, suppressed, stale, fmt: str) -> str:
+    if fmt == "json":
+        return json.dumps({
+            "findings": [f.to_json() for f in new],
+            "suppressed": [f.to_json() for f in suppressed],
+            "stale_baseline": [list(e) for e in stale],
+            "counts": {
+                "findings": len(new),
+                "suppressed": len(suppressed),
+                "stale_baseline": len(stale),
+            },
+        }, indent=2)
+    lines = [f.render() for f in new]
+    if stale:
+        lines.append("")
+        lines.append(f"{len(stale)} stale baseline entr"
+                     f"{'y' if len(stale) == 1 else 'ies'} (no longer "
+                     f"match anything — remove them):")
+        lines.extend(f"  {e}" for e in stale)
+    lines.append("")
+    lines.append(f"{len(new)} finding{'s' if len(new) != 1 else ''}"
+                 + (f", {len(suppressed)} baseline-suppressed"
+                    if suppressed else "")
+                 + ".")
+    return "\n".join(lines).lstrip("\n")
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.id}  [{r.engine:5}]  {r.name}\n    {r.description}")
+        return 0
+
+    root = Path(args.root).resolve()
+    findings = []
+    try:
+        if args.engine in ("ast", "all"):
+            findings.extend(run_ast_engine(args.targets, root))
+        if args.engine in ("jaxpr", "all"):
+            findings.extend(run_jaxpr_engine())
+    except (FileNotFoundError, ImportError, AttributeError, ValueError) as e:
+        print(f"repro.analysis: error: {e}", file=sys.stderr)
+        return 2
+    findings = sort_findings(findings)
+
+    baseline_path = root / args.baseline
+    if args.write_baseline:
+        write_baseline(findings, baseline_path)
+        print(f"wrote {len(findings)} fingerprint"
+              f"{'s' if len(findings) != 1 else ''} to {baseline_path}")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    new, suppressed, stale = split_by_baseline(findings, baseline)
+    report = _render_report(new, suppressed, stale, args.format)
+    print(report)
+    if args.output:
+        Path(args.output).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.output).write_text(report + "\n", encoding="utf-8")
+    return 1 if (new or stale) else 0

@@ -1,0 +1,43 @@
+"""Entry-point manifest collection.
+
+Each solver layer declares its own traceable entry points in a
+module-level ``ANALYSIS_ENTRIES`` list (schema documented in
+:mod:`repro.analysis.jaxprpass`) — the manifest lives WITH the code it
+describes, so adding a backend means adding entries next to the new
+entry points, not editing the analysis package.  This module only knows
+which layers to ask.
+"""
+from __future__ import annotations
+
+import importlib
+
+#: the solver layers that export ``ANALYSIS_ENTRIES``
+MANIFEST_MODULES = (
+    "repro.core.prox",          # sequential reference solve
+    "repro.core.batch",         # batched lambda-path / multi-problem engine
+    "repro.core.distributed",   # 1.5D shard_map drivers (cov + obs)
+    "repro.data.gram",          # streaming Gram reduce + panel compute core
+    "repro.kernels.ops",        # Pallas prox dispatch (interpret mode)
+)
+
+
+def load_entries(modules=MANIFEST_MODULES) -> list:
+    """Import the manifest modules and concatenate their entries.
+
+    Raises ImportError eagerly: a layer that fails to import is a finding
+    in itself and must not be silently skipped.
+    """
+    entries: list = []
+    for name in modules:
+        mod = importlib.import_module(name)
+        declared = getattr(mod, "ANALYSIS_ENTRIES", None)
+        if declared is None:
+            raise AttributeError(
+                f"manifest module {name} exports no ANALYSIS_ENTRIES; "
+                f"every solver layer must declare its entry points")
+        entries.extend(declared)
+    names = [e["name"] for e in entries]
+    dupes = {n for n in names if names.count(n) > 1}
+    if dupes:
+        raise ValueError(f"duplicate manifest entry names: {sorted(dupes)}")
+    return entries

@@ -1,0 +1,65 @@
+"""Reusable recompile guard (generalizes the ad-hoc ``_cache_size``
+assertion from the penalty tests).
+
+``cache_size(fn)`` reads the compiled-program cache of a jitted callable;
+:class:`RecompileGuard` wraps a code region and reports how many new
+programs each watched callable compiled inside it.  The jaxpr engine
+(CA202) and the ``recompile_guard`` pytest fixture both build on this.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+def cache_size(jitted) -> int | None:
+    """Compiled-program cache size of a jitted callable, or None when the
+    running jax build doesn't expose ``_cache_size`` (older/newer API)."""
+    probe = getattr(jitted, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except Exception:
+        return None
+
+
+@dataclass
+class RecompileGuard:
+    """Watch jitted callables across a region; compare cache growth.
+
+    >>> guard = RecompileGuard({"solve": _solve_reference})
+    >>> with guard:
+    ...     fit(...); fit(...)      # same shapes/statics
+    >>> guard.deltas()              # {"solve": 0} when the cache held
+    """
+
+    watched: dict                          # name -> jitted callable
+    _before: dict = field(default_factory=dict)
+    _after: dict = field(default_factory=dict)
+
+    def __enter__(self) -> "RecompileGuard":
+        self._before = {k: cache_size(f) for k, f in self.watched.items()}
+        self._after = {}
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._after = {k: cache_size(f) for k, f in self.watched.items()}
+
+    def snapshot(self) -> dict:
+        """Refresh the 'after' side without exiting (for incremental use)."""
+        self._after = {k: cache_size(f) for k, f in self.watched.items()}
+        return self.deltas()
+
+    def deltas(self) -> dict:
+        """name -> programs compiled inside the region (None = cache size
+        not observable on this jax build; treat as 'cannot check')."""
+        out = {}
+        for k in self.watched:
+            b, a = self._before.get(k), self._after.get(k)
+            out[k] = None if (b is None or a is None) else a - b
+        return out
+
+    def grew(self) -> dict:
+        """Subset of deltas that are positive (actual recompiles)."""
+        return {k: d for k, d in self.deltas().items()
+                if d is not None and d > 0}

@@ -1,0 +1,216 @@
+"""Rule registry and per-directory profiles.
+
+Every check either engine can emit is declared here with a stable id:
+
+  * ``CA1xx`` — AST engine (``astpass``): pure-syntax contracts, no jax
+    import needed, run on any python file.
+  * ``CA2xx`` — jaxpr engine (``jaxprpass``): semantic contracts checked
+    by tracing the entry-point manifest with ``jax.make_jaxpr`` at
+    representative shapes.
+
+A :class:`Profile` is the set of rule ids active for a directory tree.
+``src/repro`` runs the full ``default`` profile; ``benchmarks/`` /
+``examples/`` / ``scripts/`` run the relaxed ``scripts`` profile (host
+code by construction: python-level branching, host scalars and ad-hoc
+dtypes are the point there, but collective/layer-bypass and jit-boundary
+hazards still apply).
+
+Adding a rule for a new backend: register it here (pick the next free id
+in the engine's range), implement it in the engine module keyed on the
+id, and add a tripping fixture to ``tests/test_analysis.py`` — the
+registry test asserts every registered rule has a fixture that trips it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    name: str
+    engine: str             # "ast" | "jaxpr"
+    description: str
+
+
+_RULES: dict[str, Rule] = {}
+
+
+def register_rule(rule: Rule, *, overwrite: bool = False) -> Rule:
+    if not overwrite and rule.id in _RULES:
+        raise ValueError(f"rule {rule.id} already registered")
+    if rule.engine not in ("ast", "jaxpr"):
+        raise ValueError(f"unknown engine {rule.engine!r}")
+    _RULES[rule.id] = rule
+    return rule
+
+
+def get_rule(rule_id: str) -> Rule:
+    try:
+        return _RULES[rule_id]
+    except KeyError:
+        raise ValueError(
+            f"unknown rule {rule_id!r}; registered: {sorted(_RULES)}"
+        ) from None
+
+
+def all_rules() -> list[Rule]:
+    return [_RULES[k] for k in sorted(_RULES)]
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+register_rule(Rule(
+    "CA100", "unparseable-source", "ast",
+    "file failed to parse: nothing else can be checked until it does "
+    "(always reported, independent of the active profile)",
+))
+register_rule(Rule(
+    "CA101", "host-call-in-traced-code", "ast",
+    "host-side call (float()/int()/bool()/.item()/.tolist()/np.*/print) "
+    "inside a jit/vmap/shard_map-traced function: breaks tracing or "
+    "silently constant-folds a traced value",
+))
+register_rule(Rule(
+    "CA102", "python-branch-on-traced-value", "ast",
+    "python if/while/assert whose test computes a jax value "
+    "(jnp./jax./lax. call in the test) inside a traced function: raises "
+    "TracerBoolConversionError or freezes a data-dependent branch at "
+    "trace time — use lax.cond/jnp.where",
+))
+register_rule(Rule(
+    "CA103", "impure-jit-boundary", "ast",
+    "mutable default argument on a traced function, or an unregistered "
+    "dataclass crossing a jit boundary (pass pytree-registered specs; "
+    "mutable defaults alias state across traces)",
+))
+register_rule(Rule(
+    "CA104", "dtype-literal-in-f64-module", "ast",
+    "sub-64-bit float dtype literal (float32/float16/bfloat16) in an "
+    "f64-contract module: the Gram/solve chain accumulates in float64 "
+    "by contract — declare any intentional narrow dtype once as a "
+    "module-level *_DTYPE constant so the policy is named and greppable",
+))
+register_rule(Rule(
+    "CA105", "raw-collective-bypass", "ast",
+    "mesh/shard_map entry APIs or collective primitives reached through "
+    "raw jax attributes outside the collective layer: route "
+    "shard_map/make_mesh/set_mesh and module-level psum through "
+    "comm/compat.py (one module absorbs jax API skew; comm/ and "
+    "core/distributed.py are the blessed lax.* call sites)",
+))
+register_rule(Rule(
+    "CA106", "host-sync-in-loop", "ast",
+    "device->host scalar pull (float()/int()/.item() over a jnp./np. "
+    "expression) inside a python loop or comprehension: one blocking "
+    "transfer per iteration — batch the device work, pull once",
+))
+
+register_rule(Rule(
+    "CA200", "manifest-entry-error", "jaxpr",
+    "a manifest entry failed to build/trace/execute: the semantic checks "
+    "did not run for that entry point (always reported — a broken entry "
+    "must not silently skip its contracts)",
+))
+register_rule(Rule(
+    "CA201", "f64-downcast-in-jaxpr", "jaxpr",
+    "convert_element_type from float64 to a narrower float in the jaxpr "
+    "of a manifest entry point traced at f64: the distributed iteration "
+    "must be bit-identical to the sequential one, so the f64 contract "
+    "may never silently narrow",
+))
+register_rule(Rule(
+    "CA202", "unexpected-recompile", "jaxpr",
+    "compiled-program cache grew when a manifest entry was re-invoked "
+    "with new parameter VALUES at unchanged shapes/statics: a lambda "
+    "path or serving loop would recompile per point — keep penalty "
+    "params and warm starts traced",
+))
+register_rule(Rule(
+    "CA203", "psum-axis-not-in-mesh", "jaxpr",
+    "collective primitive in a traced entry point names a mesh axis the "
+    "entry does not declare: the axis would be unbound (or silently "
+    "bound to the wrong mesh) at run time",
+))
+
+
+# ---------------------------------------------------------------------------
+# profiles
+# ---------------------------------------------------------------------------
+
+AST_RULES = frozenset(r.id for r in all_rules() if r.engine == "ast")
+JAXPR_RULES = frozenset(r.id for r in all_rules() if r.engine == "jaxpr")
+
+
+@dataclass(frozen=True)
+class Profile:
+    """The rule subset + per-rule knobs active for one directory tree."""
+    name: str
+    rules: frozenset = AST_RULES | JAXPR_RULES
+    # modules under the f64 accumulation contract (CA104), matched as
+    # posix path suffixes
+    f64_modules: tuple = ()
+    # path suffixes allowed to touch lax collectives directly (CA105)
+    collective_layer: tuple = ()
+    extra: dict = field(default_factory=dict)
+
+
+#: modules where a 32-bit float literal would narrow the paper's f64
+#: iteration/accumulation contract (flash_attention is excluded: an
+#: attention kernel's f32 accumulator is its own, unrelated contract)
+F64_CONTRACT_MODULES = (
+    "repro/core/objective.py",
+    "repro/core/prox.py",
+    "repro/core/matops.py",
+    "repro/core/batch.py",
+    "repro/core/distributed.py",
+    "repro/core/penalty.py",
+    "repro/data/gram.py",
+    "repro/data/transforms.py",
+    "repro/comm/matmul1p5d.py",
+    "repro/comm/sparse1p5d.py",
+    "repro/kernels/softthresh.py",
+    "repro/kernels/blocksparse_matmul.py",
+    "repro/kernels/ref.py",
+    "repro/kernels/ops.py",
+)
+
+#: the blessed raw-lax-collective call sites (CA105): the comm layer
+#: itself and the shard_map drivers that live inside it conceptually
+COLLECTIVE_LAYER = (
+    "repro/comm/",
+    "repro/core/distributed.py",
+)
+
+DEFAULT_PROFILE = Profile(
+    name="default",
+    rules=AST_RULES | JAXPR_RULES,
+    f64_modules=F64_CONTRACT_MODULES,
+    collective_layer=COLLECTIVE_LAYER,
+)
+
+#: benchmarks/examples/scripts: host-side drivers by design.  Python
+#: branching on results, ad-hoc dtypes and per-iteration host pulls are
+#: the point of a script, so CA102/CA104/CA106 are off; trace-breaking
+#: host calls, jit-boundary impurities and collective-layer bypasses
+#: still apply (scripts share the solver entry points).
+SCRIPTS_PROFILE = Profile(
+    name="scripts",
+    rules=frozenset({"CA101", "CA103", "CA105"}),
+    f64_modules=(),
+    collective_layer=COLLECTIVE_LAYER,
+)
+
+PROFILES = {p.name: p for p in (DEFAULT_PROFILE, SCRIPTS_PROFILE)}
+
+_SCRIPT_DIR_HINTS = ("benchmarks/", "examples/", "scripts/")
+
+
+def profile_for_path(relpath: str) -> Profile:
+    """Per-directory profile resolution (posix relpath from repo root)."""
+    rp = relpath.replace("\\", "/")
+    if any(rp.startswith(h) or f"/{h}" in rp for h in _SCRIPT_DIR_HINTS):
+        return SCRIPTS_PROFILE
+    return DEFAULT_PROFILE

@@ -21,7 +21,7 @@ from __future__ import annotations
 import jax
 
 __all__ = ["shard_map", "use_mesh", "make_mesh", "axis_size",
-           "get_abstract_mesh"]
+           "get_abstract_mesh", "psum"]
 
 
 if hasattr(jax, "shard_map"):
@@ -36,6 +36,15 @@ else:
     def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
         return _shard_map_legacy(f, mesh=mesh, in_specs=in_specs,
                                  out_specs=out_specs, check_rep=check_vma)
+
+
+def psum(x, axis_name):
+    """``lax.psum`` re-export: the blessed spelling outside the collective
+    layer (``comm/``, ``core/distributed.py``), so every cross-device
+    reduction in model/data code is greppable here and covered by the
+    same skew-absorbing module as ``shard_map``."""
+    from jax import lax
+    return lax.psum(x, axis_name)
 
 
 def axis_size(name):

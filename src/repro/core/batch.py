@@ -221,3 +221,73 @@ def solve_batch(
     return _solve_batch(
         s_or_x, spec, ridge_b, omega0, variant=variant, tol=tol,
         max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau)
+
+
+# ---------------------------------------------------------------------------
+# analysis manifest (repro.analysis.jaxprpass)
+# ---------------------------------------------------------------------------
+
+def _analysis_cov(p):
+    return jnp.eye(p, dtype=jnp.float64) + 0.05 * jnp.ones((p, p),
+                                                           jnp.float64)
+
+
+def _analysis_path():
+    p, b = 6, 3
+    spec = PenaltySpec("l1", jnp.linspace(0.1, 0.3, b, dtype=jnp.float64),
+                       jnp.asarray(0.0, jnp.float64))
+    fn = partial(_solve_path_batched, variant="cov", tol=1e-3, max_iters=5,
+                 max_ls=5, warm_start_tau=False)
+    return {"fn": fn,
+            "args": (_analysis_cov(p), spec, jnp.asarray(0.0, jnp.float64),
+                     None)}
+
+
+def _analysis_path_reuse():
+    s = _analysis_cov(6)
+
+    def run(lo):
+        grid = jnp.linspace(lo, lo + 0.2, 3, dtype=jnp.float64)
+        res = solve_path_batched(s, grid, tol=1e-3, max_iters=4, max_ls=4)
+        return res.omega.block_until_ready()
+
+    return {"watched": {"core.batch._solve_path_batched":
+                        _solve_path_batched},
+            "calls": [partial(run, 0.10), partial(run, 0.15),
+                      partial(run, 0.20)]}
+
+
+def _analysis_batch():
+    p, b = 6, 2
+    s = jnp.stack([_analysis_cov(p)] * b)
+    spec = PenaltySpec("l1", jnp.linspace(0.1, 0.2, b, dtype=jnp.float64),
+                       jnp.asarray(0.0, jnp.float64))
+    ridge = jnp.zeros((b,), jnp.float64)
+    fn = partial(_solve_batch, variant="cov", tol=1e-3, max_iters=5,
+                 max_ls=5, warm_start_tau=False)
+    return {"fn": fn, "args": (s, spec, ridge, None)}
+
+
+def _analysis_batch_reuse():
+    s = jnp.stack([_analysis_cov(6)] * 2)
+
+    def run(lam1):
+        res = solve_batch(s, jnp.asarray([lam1, lam1 + 0.05], jnp.float64),
+                          tol=1e-3, max_iters=4, max_ls=4)
+        return res.omega.block_until_ready()
+
+    return {"watched": {"core.batch._solve_batch": _solve_batch},
+            "calls": [partial(run, 0.10), partial(run, 0.16),
+                      partial(run, 0.22)]}
+
+
+#: the batched lambda-path and multi-problem engines: one compiled
+#: program per (shape, penalty kind, statics) key is THE contract here
+ANALYSIS_ENTRIES = [
+    {"name": "core.batch.solve_path_batched",
+     "path": "src/repro/core/batch.py", "axis_names": (),
+     "build": _analysis_path, "reuse": _analysis_path_reuse},
+    {"name": "core.batch.solve_batch", "path": "src/repro/core/batch.py",
+     "axis_names": (), "build": _analysis_batch,
+     "reuse": _analysis_batch_reuse},
+]

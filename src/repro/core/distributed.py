@@ -194,8 +194,8 @@ def _dist_sparse_ops(policy: matops.MatmulPolicy, use_pallas: bool, dtype,
     def density_of(mask):
         # numerator and denominator both count each Omega block once per
         # partitioning team, so replication layers cancel in the ratio
-        nnz = psum(jnp.sum((mask > 0).astype(jnp.float32)))
-        total = psum(jnp.asarray(float(mask.size), jnp.float32))
+        nnz = psum(jnp.sum((mask > 0).astype(matops.DENSITY_DTYPE)))
+        total = psum(jnp.asarray(mask.size, matops.DENSITY_DTYPE))
         return nnz / total
 
     return prox_stats, mask_of, density_of
@@ -612,3 +612,49 @@ def fit_path(
         data = x if variant == "obs" else (x.T @ x) / x.shape[0]
         out.append(fn(data, lam1, lam2, grid=grid, **kw))
     return out
+
+
+# ---------------------------------------------------------------------------
+# analysis manifest (repro.analysis.jaxprpass)
+# ---------------------------------------------------------------------------
+
+def _analysis_fit_cov():
+    grid = Grid1p5D(1, 1, 1)
+    mesh = grid.make_mesh()
+    p = 8
+    s = jnp.eye(p, dtype=jnp.float64) + 0.05 * jnp.ones((p, p), jnp.float64)
+
+    def run(s_):
+        res = fit_cov(s_, 0.2, grid=grid, mesh=mesh, tol=1e-3, max_iters=4,
+                      max_ls=4)
+        return res.omega, res.iters, res.converged, res.block_density
+
+    return {"fn": run, "args": (s,)}
+
+
+def _analysis_fit_obs():
+    grid = Grid1p5D(1, 1, 1)
+    mesh = grid.make_mesh()
+    n, p = 12, 8
+    x = jnp.linspace(-1.0, 1.0, n * p, dtype=jnp.float64).reshape(n, p)
+
+    def run(x_):
+        res = fit_obs(x_, 0.2, grid=grid, mesh=mesh, tol=1e-3, max_iters=4,
+                      max_ls=4)
+        return res.omega, res.iters, res.converged, res.block_density
+
+    return {"fn": run, "args": (x,)}
+
+
+#: both 1.5D shard_map drivers, traced end to end on a 1-device
+#: (1, 1, 1) mesh: the jaxpr still contains every psum/axis binding of
+#: the distributed iteration, so the dtype and axis contracts are
+#: checked without multi-device hardware
+ANALYSIS_ENTRIES = [
+    {"name": "core.distributed.fit_cov",
+     "path": "src/repro/core/distributed.py",
+     "axis_names": ("i", "j", "k"), "build": _analysis_fit_cov},
+    {"name": "core.distributed.fit_obs",
+     "path": "src/repro/core/distributed.py",
+     "axis_names": ("i", "j", "k"), "build": _analysis_fit_obs},
+]

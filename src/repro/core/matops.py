@@ -59,6 +59,12 @@ TIER_FRACTIONS = (0.125, 0.25, 0.5, 1.0)
 #: ever test ``mask > 0``.
 MASK_DTYPE = jnp.int8
 
+#: dtype of block-density STATISTICS (the scalar the dispatch and the
+#: solver report as ``block_density``).  f32 by policy: it is a diagnostic
+#: ratio in [0, 1] compared against a crossover threshold, never part of
+#: the f64 iterate arithmetic, and the distributed drivers psum it.
+DENSITY_DTYPE = jnp.float32
+
 
 class MatmulPolicy(NamedTuple):
     """Static (hashable) routing policy for Ω-side products.
@@ -112,8 +118,8 @@ def block_mask(a, block_size: int):
 
 
 def block_density(mask):
-    """Fraction of occupied blocks (float32 scalar)."""
-    return jnp.mean((mask > 0).astype(jnp.float32))
+    """Fraction of occupied blocks (``DENSITY_DTYPE`` scalar)."""
+    return jnp.mean((mask > 0).astype(DENSITY_DTYPE))
 
 
 def capacity_tiers(total_blocks: int, threshold: float) -> list[int]:

@@ -263,11 +263,10 @@ def prox_gradient(
     )
     final = jax.lax.while_loop(outer_cond, outer_body, init)
     if sparse:
-        density_of = ops.density_of or (lambda m: jnp.mean((m > 0).astype(
-            jnp.float32)))
+        density_of = ops.density_of or matops.block_density
         density = density_of(final.mask)
     else:
-        density = jnp.asarray(1.0, jnp.float32)
+        density = jnp.asarray(1.0, matops.DENSITY_DTYPE)
     return ProxResult(
         omega=final.omega,
         iters=final.step,
@@ -476,3 +475,41 @@ def fit_reference(
         s_or_x, lam1, lam2, variant=variant, tol=tol,
         max_iters=max_iters, max_ls=max_ls, warm_start_tau=warm_start_tau,
     )
+
+
+# ---------------------------------------------------------------------------
+# analysis manifest (repro.analysis.jaxprpass)
+# ---------------------------------------------------------------------------
+
+def _analysis_solve():
+    p = 8
+    s = jnp.eye(p, dtype=jnp.float64) + 0.05 * jnp.ones((p, p), jnp.float64)
+    spec = PenaltySpec("l1", jnp.asarray(0.1, jnp.float64),
+                       jnp.asarray(0.0, jnp.float64))
+    fn = partial(_solve_reference, variant="cov", tol=1e-4, max_iters=8,
+                 max_ls=8, warm_start_tau=False, sparse_matmul=None,
+                 use_pallas=False)
+    return {"fn": fn, "args": (s, spec, None)}
+
+
+def _analysis_solve_reuse():
+    p = 6
+    s = jnp.eye(p, dtype=jnp.float64) + 0.04 * jnp.ones((p, p), jnp.float64)
+
+    def run(lam1):
+        res = solve_reference(s, lam1, tol=1e-3, max_iters=5, max_ls=5)
+        return res.omega.block_until_ready()
+
+    # three path points, one shape: the compiled cache must hold after
+    # the warmup call (lam1 is a traced leaf of the penalty spec)
+    return {"watched": {"core.prox._solve_reference": _solve_reference},
+            "calls": [partial(run, 0.10), partial(run, 0.18),
+                      partial(run, 0.26)]}
+
+
+#: the sequential reference solve — the oracle every other layer matches
+ANALYSIS_ENTRIES = [
+    {"name": "core.prox.solve_reference", "path": "src/repro/core/prox.py",
+     "axis_names": (), "build": _analysis_solve,
+     "reuse": _analysis_solve_reuse},
+]

@@ -286,6 +286,16 @@ def compute_gram(data, *, transform: str | Transform = "none",
     return acc.finalize()
 
 
+def _psum_moments(xx_l, s1_l, s2_l, n_l):
+    """All-reduce the per-host raw-moment images over the 1-axis mesh.
+
+    The one communication step of the streaming pipeline — routed through
+    ``comm/compat.py`` like every collective outside the 1.5D layer."""
+    from ..comm.compat import psum
+    return (psum(xx_l, "hosts"), psum(s1_l, "hosts"),
+            psum(s2_l, "hosts"), psum(n_l, "hosts"))
+
+
 def distributed_gram(per_host_data: Sequence, *,
                      transform: str | Transform = "none",
                      chunk_rows: int | None = None,
@@ -345,13 +355,8 @@ def distributed_gram(per_host_data: Sequence, *,
     cnt = np.asarray([[float(a.n)] for a in accs])
     mesh = make_mesh((n_dev,), ("hosts",), devices=devices[:n_dev])
 
-    def _reduce(xx_l, s1_l, s2_l, n_l):
-        psum = jax.lax.psum
-        return (psum(xx_l, "hosts"), psum(s1_l, "hosts"),
-                psum(s2_l, "hosts"), psum(n_l, "hosts"))
-
     with use_mesh(mesh):
-        fn = shard_map(_reduce, mesh=mesh,
+        fn = shard_map(_psum_moments, mesh=mesh,
                        in_specs=(P("hosts"), P("hosts"), P("hosts"),
                                  P("hosts")),
                        out_specs=(P(), P(), P(), P()))
@@ -369,3 +374,43 @@ def distributed_gram(per_host_data: Sequence, *,
         s=s, n=n, p=p, transform=tf.name, mean=st.mean, var=st.var,
         n_chunks=sum(a.n_chunks for a in accs),
         source_dtype=accs[0].source_dtype or "float64")
+
+
+# ---------------------------------------------------------------------------
+# analysis manifest (repro.analysis.jaxprpass)
+# ---------------------------------------------------------------------------
+
+def _analysis_panel_gram():
+    import jax.numpy as jnp
+    x = jnp.linspace(0.0, 1.0, 48, dtype=jnp.float64).reshape(6, 8)
+    return {"fn": lambda xx: panel_gram(xx, panel=4), "args": (x,)}
+
+
+def _analysis_distributed_reduce():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from ..comm.compat import make_mesh, shard_map, use_mesh
+    mesh = make_mesh((1,), ("hosts",), devices=jax.devices()[:1])
+    fn = shard_map(_psum_moments, mesh=mesh, in_specs=(P("hosts"),) * 4,
+                   out_specs=(P(),) * 4)
+    p = 4
+    return {
+        "fn": fn,
+        "args": (jnp.zeros((1, p, p), jnp.float64),
+                 jnp.zeros((1, p), jnp.float64),
+                 jnp.zeros((1, p), jnp.float64),
+                 jnp.zeros((1, 1), jnp.float64)),
+        "ctx": lambda: use_mesh(mesh),
+    }
+
+
+#: the f64 compute core of every streamed Gram, and the one-psum reduce
+ANALYSIS_ENTRIES = [
+    {"name": "data.gram.panel_gram", "path": "src/repro/core/matops.py",
+     "axis_names": (), "build": _analysis_panel_gram},
+    {"name": "data.gram.distributed_reduce",
+     "path": "src/repro/data/gram.py", "axis_names": ("hosts",),
+     "build": _analysis_distributed_reduce},
+]

@@ -42,7 +42,11 @@ except ImportError:                     # pragma: no cover - minimal envs
     def _ndtri(q):
         import jax.numpy as jnp
         from jax.scipy.special import ndtri
-        return np.asarray(ndtri(jnp.asarray(q, jnp.float32)), np.float64)
+        # exact f64 quantiles under x64; without x64 jax's canonical f32
+        # ceiling applies (never a hard-coded narrow cast: forcing f32
+        # here used to truncate even when x64 was on)
+        return np.asarray(ndtri(jnp.asarray(np.asarray(q, np.float64))),
+                          np.float64)
 
 __all__ = [
     "StreamStats", "Transform", "available_transforms", "average_ranks",

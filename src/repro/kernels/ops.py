@@ -58,3 +58,28 @@ def blocksparse_matmul(values, row_idx, col_idx, b, **kw):
 def flash_attention(q, k, v, **kw):
     kw.setdefault("interpret", interpret_default())
     return _fa.flash_attention(q, k, v, **kw)
+
+
+# ---------------------------------------------------------------------------
+# analysis manifest (repro.analysis.jaxprpass)
+# ---------------------------------------------------------------------------
+
+def _analysis_fused_prox():
+    import jax.numpy as jnp
+    p = 8
+    z = jnp.linspace(-1.0, 1.0, p * p, dtype=jnp.float64).reshape(p, p)
+    dm = jnp.eye(p, dtype=jnp.float64)
+
+    def run(z_, dm_):
+        return fused_prox_stats(z_, dm_, 0.1, block=(4, 4), interpret=True)
+
+    return {"fn": run, "args": (z, dm)}
+
+
+#: the Pallas prox dispatch in interpret mode: the kernel body is traced
+#: as jax ops, so its stats lanes are covered by the f64 downcast check
+ANALYSIS_ENTRIES = [
+    {"name": "kernels.ops.fused_prox_stats",
+     "path": "src/repro/kernels/softthresh.py", "axis_names": (),
+     "build": _analysis_fused_prox},
+]

@@ -9,6 +9,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .softthresh import STATS_MIN_DTYPE
+
+#: softmax accumulation floor of the attention oracle (matches the Pallas
+#: flash kernel's f32 accumulator; the output is cast back to q.dtype)
+ATTN_ACCUM_DTYPE = jnp.float32
+
 
 # ---------------------------------------------------------------------------
 # fused prox (softthresh.py)
@@ -39,7 +45,8 @@ def block_nnz(a: jax.Array, block) -> jax.Array:
     gm, gn = -(-m // bm), -(-n // bn)
     ap = jnp.pad(a, ((0, gm * bm - m), (0, gn * bn - n)))
     tiles = ap.reshape(gm, bm, gn, bn)
-    return jnp.sum((tiles != 0).astype(jnp.float32), axis=(1, 3))
+    nnz_dtype = jnp.promote_types(a.dtype, STATS_MIN_DTYPE)
+    return jnp.sum((tiles != 0).astype(nnz_dtype), axis=(1, 3))
 
 
 def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha,
@@ -140,5 +147,6 @@ def attention(q, k, v, *, causal=True, window=None, softcap=None,
     if window is not None:
         mask &= kpos > qpos - window
     logits = jnp.where(mask[None, None], logits, -1e30)
-    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    probs = jax.nn.softmax(
+        logits.astype(ATTN_ACCUM_DTYPE), axis=-1).astype(q.dtype)
     return jnp.einsum("bhqk,bhkd->bhqd", probs, vq)

@@ -35,6 +35,11 @@ DEFAULT_BLOCK = (256, 256)
 # (lane 1 stays the UNWEIGHTED |out| sum in the weighted kernel.)
 STATS_LANES = 128
 
+#: floor dtype of the per-tile stats output: at least f32 (counts and
+#: reductions would drift in bf16), widened to the operand dtype so an
+#: f64 interpret-mode solve keeps f64 line-search stats end to end.
+STATS_MIN_DTYPE = jnp.float32
+
 
 def _write_stats(out, m, valid, stats_ref):
     is_diag = m > 0
@@ -42,7 +47,7 @@ def _write_stats(out, m, valid, stats_ref):
     l1 = jnp.sum(jnp.where(is_diag, 0.0, jnp.abs(out)))
     sumsq = jnp.sum(out * out)
     min_diag = jnp.min(jnp.where(is_diag, out, jnp.inf))
-    nnz = jnp.sum(((out != 0.0) & valid).astype(jnp.float32))
+    nnz = jnp.sum(((out != 0.0) & valid).astype(stats_ref.dtype))
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, 1, STATS_LANES), 2)
     stats = jnp.where(lane == 0, logdet, 0.0)
     stats = jnp.where(lane == 1, l1, stats)
@@ -113,9 +118,10 @@ def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha,
         pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         pl.BlockSpec((1, 1, STATS_LANES), lambda i, j: (i, j, 0)),
     ]
+    stats_dtype = jnp.promote_types(z.dtype, STATS_MIN_DTYPE)
     out_shape = [
         jax.ShapeDtypeStruct((m, n), z.dtype),
-        jax.ShapeDtypeStruct((gm, gn, STATS_LANES), jnp.float32),
+        jax.ShapeDtypeStruct((gm, gn, STATS_LANES), stats_dtype),
     ]
     if weights is None:
         out, stats = pl.pallas_call(

@@ -603,14 +603,14 @@ def apply_moe(cfg: ModelConfig, p, x, prefix: str = "moe"):
     if sharded:
         from jax.sharding import PartitionSpec as P
 
+        from ..comm.compat import psum, shard_map
+
         def disp(xt_loc, router_f):
             buf, slot, gates, keep, (me_s, ce_s) = _moe_dispatch_local(
                 cfg, xt_loc, router_f, c_loc, 0, n_shards, T)
-            me_s = lax.psum(me_s, data_axes)
-            ce_s = lax.psum(ce_s, data_axes)
+            me_s = psum(me_s, data_axes)
+            ce_s = psum(ce_s, data_axes)
             return buf, slot, gates, keep, me_s, ce_s
-
-        from ..comm.compat import shard_map
         buf, slot, gates, keep, me_s, ce_s = shard_map(
             disp, mesh=mesh,
             in_specs=(P(data_axes, None), P(None, None)),

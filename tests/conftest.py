@@ -32,3 +32,32 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560):
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def recompile_guard():
+    """Context-manager factory asserting a region compiles NOTHING new on
+    the watched jitted callables::
+
+        with recompile_guard(solve=prox._solve_reference):
+            est.fit_path(...)        # same shapes/statics -> cache holds
+
+    Backed by ``repro.analysis.recompile`` (the same guard the CA202
+    jaxpr rule uses); skips when the running jax build doesn't expose
+    compiled-cache introspection."""
+    import contextlib
+
+    from repro.analysis.recompile import RecompileGuard, cache_size
+
+    @contextlib.contextmanager
+    def watch(**watched):
+        if any(cache_size(f) is None for f in watched.values()):
+            pytest.skip("jit cache introspection not available")
+        guard = RecompileGuard(watched)
+        with guard:
+            yield guard
+        grew = guard.grew()
+        assert not grew, (
+            f"unexpected recompile(s) at unchanged shapes/statics: {grew}")
+
+    return watch

@@ -1,0 +1,416 @@
+"""repro.analysis: every registered rule must have a tripping fixture.
+
+The AST rules (CA1xx) are tripped on small inline source snippets run
+through ``astpass.scan_source`` at contract-relevant fake paths; the
+jaxpr rules (CA2xx) are tripped on synthetic manifest entries run through
+``jaxprpass.run_entry`` — including a fixture copy of the Gram
+panel/finalize path with a deliberately injected f64->f32 cast that CA201
+must catch.  A registry test asserts the fixture set and the rule
+registry stay in sync, so adding a rule without a fixture fails here.
+"""
+import json
+
+import pytest
+
+from repro.analysis import astpass, baseline, cli, jaxprpass
+from repro.analysis.findings import Finding, sort_findings
+from repro.analysis.rules import (DEFAULT_PROFILE, SCRIPTS_PROFILE,
+                                  all_rules, get_rule, profile_for_path)
+
+from conftest import REPO
+
+# ---------------------------------------------------------------------------
+# tripping fixtures: rule id -> thunk returning the engine's findings
+# ---------------------------------------------------------------------------
+
+_TRIPS = {}
+
+
+def trips(rule_id):
+    def mark(fn):
+        _TRIPS[rule_id] = fn
+        return fn
+    return mark
+
+
+def _ast(relpath, source, profile=DEFAULT_PROFILE):
+    return astpass.scan_source(relpath, source, profile)
+
+
+@trips("CA100")
+def _trip_unparseable():
+    return _ast("src/repro/core/broken.py", "def f(:\n    pass\n")
+
+
+@trips("CA101")
+def _trip_host_call_in_trace():
+    return _ast("src/repro/core/fake.py", """\
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def objective(x):
+    return float(jnp.sum(x * x))
+""")
+
+
+@trips("CA102")
+def _trip_python_branch_on_traced():
+    return _ast("src/repro/core/fake.py", """\
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def step(omega):
+    if jnp.any(omega > 0):
+        return omega
+    return -omega
+""")
+
+
+@trips("CA103")
+def _trip_mutable_default_at_boundary():
+    return _ast("src/repro/core/fake.py", """\
+import jax
+
+@jax.jit
+def solve(x, history=[]):
+    return x
+""")
+
+
+@trips("CA104")
+def _trip_narrow_dtype_in_f64_module():
+    return _ast("src/repro/core/matops.py", """\
+import jax.numpy as jnp
+
+def gramify(x):
+    return jnp.asarray(x, jnp.float32)
+""")
+
+
+@trips("CA105")
+def _trip_raw_collective_outside_layer():
+    return _ast("src/repro/models/fake.py", """\
+from jax import lax
+
+def reduce_stats(x):
+    return lax.psum(x, "i")
+""")
+
+
+@trips("CA106")
+def _trip_host_sync_in_loop():
+    return _ast("src/repro/core/fake.py", """\
+import jax.numpy as jnp
+
+def trace_path(path_points):
+    return [float(jnp.trace(om)) for om in path_points]
+""")
+
+
+# -- jaxpr fixtures ---------------------------------------------------------
+
+def _entry(name, build, *, axis_names=(), reuse=None,
+           path="src/repro/data/gram.py"):
+    e = {"name": name, "path": path, "axis_names": axis_names,
+         "build": build}
+    if reuse is not None:
+        e["reuse"] = reuse
+    return e
+
+
+@trips("CA200")
+def _trip_broken_entry():
+    def build():
+        raise RuntimeError("representative shapes unavailable")
+    return jaxprpass.run_entry(
+        _entry("test.broken_build", build), DEFAULT_PROFILE)
+
+
+def _gram_finalize_downcast_build():
+    """Fixture copy of the panel-Gram accumulate + finalize path with a
+    deliberately injected narrow cast on the finalized Gram."""
+    import jax.numpy as jnp
+
+    def bad_panel_gram_finalize(x):
+        n, p = x.shape[0], x.shape[1]
+        panel = 2
+        out = jnp.zeros((p, p), x.dtype)
+        for lo in range(0, p, panel):
+            out = out.at[lo:lo + panel].set(x[:, lo:lo + panel].T @ x)
+        return (out / n).astype(jnp.float32)    # the injected downcast
+
+    return {"fn": bad_panel_gram_finalize,
+            "args": (jnp.linspace(0.0, 1.0, 24,
+                                  dtype=jnp.float64).reshape(6, 4),)}
+
+
+@trips("CA201")
+def _trip_f64_downcast():
+    return jaxprpass.run_entry(
+        _entry("test.gram_finalize_downcast", _gram_finalize_downcast_build),
+        DEFAULT_PROFILE)
+
+
+@trips("CA202")
+def _trip_recompile_per_value():
+    import jax
+    import jax.numpy as jnp
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("lam1",))
+    def solve_with_static_penalty(x, lam1):
+        return x * lam1                 # lam1 static -> one program per value
+
+    def build():
+        return {"fn": lambda x: solve_with_static_penalty(x, lam1=0.1),
+                "args": (jnp.ones((3,), jnp.float64),)}
+
+    def reuse():
+        x = jnp.ones((3,), jnp.float64)
+        return {"watched": {"solve": solve_with_static_penalty},
+                "calls": [lambda: solve_with_static_penalty(x, lam1=0.1),
+                          lambda: solve_with_static_penalty(x, lam1=0.2),
+                          lambda: solve_with_static_penalty(x, lam1=0.3)]}
+
+    return jaxprpass.run_entry(
+        _entry("test.static_penalty_recompiles", build, reuse=reuse),
+        DEFAULT_PROFILE)
+
+
+def _undeclared_axis_build():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comm.compat import make_mesh, psum, shard_map, use_mesh
+
+    mesh = make_mesh((1,), ("hosts",), devices=jax.devices()[:1])
+    fn = shard_map(lambda x: psum(x, "hosts"), mesh=mesh,
+                   in_specs=(P("hosts"),), out_specs=P())
+    return {"fn": fn, "args": (jnp.zeros((1, 4), jnp.float64),),
+            "ctx": lambda: use_mesh(mesh)}
+
+
+@trips("CA203")
+def _trip_undeclared_axis():
+    return jaxprpass.run_entry(
+        _entry("test.undeclared_axis", _undeclared_axis_build,
+               axis_names=()),                  # psums over "hosts" anyway
+        DEFAULT_PROFILE)
+
+
+# ---------------------------------------------------------------------------
+# the registry contract: every rule has a fixture, every fixture trips
+# ---------------------------------------------------------------------------
+
+def test_every_registered_rule_has_a_tripping_fixture():
+    registered = {r.id for r in all_rules()}
+    assert registered == set(_TRIPS), (
+        f"rule registry and fixtures out of sync: registered "
+        f"{sorted(registered)}, fixtures {sorted(_TRIPS)}")
+
+
+@pytest.mark.parametrize("rule_id", sorted(_TRIPS))
+def test_fixture_trips_its_rule(rule_id):
+    rule = get_rule(rule_id)
+    findings = _TRIPS[rule_id]()
+    tripped = {f.rule for f in findings}
+    assert rule_id in tripped, (
+        f"{rule_id} ({rule.name}) fixture produced {sorted(tripped)}")
+    for f in findings:
+        assert f.message and f.path     # renderable findings only
+
+
+def test_ca201_catches_injected_gram_downcast_specifically():
+    findings = _TRIPS["CA201"]()
+    hits = [f for f in findings if f.rule == "CA201"]
+    assert len(hits) == 1
+    assert hits[0].context == "test.gram_finalize_downcast"
+    assert "f32" in hits[0].snippet or "float32" in hits[0].message
+
+
+def test_ca202_names_the_watched_program():
+    hits = [f for f in _TRIPS["CA202"]() if f.rule == "CA202"]
+    assert len(hits) == 1
+    assert hits[0].snippet == "solve"
+    assert "2 new program" in hits[0].message
+
+
+# ---------------------------------------------------------------------------
+# negatives: the rules must NOT fire on the blessed idioms
+# ---------------------------------------------------------------------------
+
+def test_static_shape_reads_are_not_syncs():
+    findings = _ast("src/repro/core/fake.py", """\
+import numpy as np
+
+def total_rows(chunks):
+    return sum(int(np.asarray(c).shape[0]) for c in chunks)
+""")
+    assert findings == []
+
+
+def test_module_dtype_policy_constant_is_exempt():
+    findings = _ast("src/repro/core/matops.py", """\
+import jax.numpy as jnp
+
+DENSITY_DTYPE = jnp.float32
+""")
+    assert findings == []
+
+
+def test_inline_allow_comment_suppresses():
+    src = ("import jax.numpy as jnp\n\n"
+           "def f(x):\n"
+           "    return jnp.asarray(x, jnp.float32)  # ca: allow=CA104\n")
+    assert _ast("src/repro/core/matops.py", src) == []
+
+
+def test_compat_psum_is_not_flagged():
+    findings = _ast("src/repro/models/fake.py", """\
+from repro.comm.compat import psum
+
+def reduce_stats(x):
+    return psum(x, "i")
+""")
+    assert findings == []
+
+
+def test_scripts_profile_relaxes_host_rules_keeps_layer_rules():
+    host_src = """\
+import jax.numpy as jnp
+
+def bench(path_points):
+    return [float(jnp.trace(om)) for om in path_points]
+"""
+    assert profile_for_path("benchmarks/bench_solver.py") is SCRIPTS_PROFILE
+    assert _ast("benchmarks/bench_solver.py", host_src,
+                SCRIPTS_PROFILE) == []
+    collective_src = """\
+from jax import lax
+
+def bench(x):
+    return lax.psum(x, "i")
+"""
+    hits = _ast("benchmarks/bench_solver.py", collective_src,
+                SCRIPTS_PROFILE)
+    assert {f.rule for f in hits} == {"CA105"}
+
+
+def test_reuse_at_stable_statics_is_clean():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def solve(x, lam1):
+        return x * lam1
+
+    def build():
+        return {"fn": lambda x: solve(x, jnp.asarray(0.1, x.dtype)),
+                "args": (jnp.ones((3,), jnp.float64),)}
+
+    def reuse():
+        x = jnp.ones((3,), jnp.float64)
+        return {"watched": {"solve": solve},
+                "calls": [lambda: solve(x, 0.1), lambda: solve(x, 0.2),
+                          lambda: solve(x, 0.3)]}
+
+    findings = jaxprpass.run_entry(
+        _entry("test.traced_penalty_reuses", build, reuse=reuse),
+        DEFAULT_PROFILE)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# the repo itself scans clean (AST engine; the jaxpr engine runs in CI)
+# ---------------------------------------------------------------------------
+
+def test_repo_src_scans_clean_with_empty_baseline(capsys):
+    rc = cli.main(["--engine", "ast", "--root", REPO])
+    out = capsys.readouterr().out
+    assert rc == 0, f"analyzer found regressions:\n{out}"
+    assert "0 findings" in out
+
+
+def test_checked_in_baseline_is_empty():
+    path = f"{REPO}/analysis_baseline.json"
+    assert json.loads(open(path, encoding="utf-8").read()) == []
+
+
+def test_manifest_loads_unique_entries():
+    from repro.analysis.manifest import load_entries
+    entries = load_entries()
+    names = [e["name"] for e in entries]
+    assert len(names) == len(set(names))
+    assert len(entries) >= 8
+    for e in entries:
+        assert callable(e["build"]) and e["path"].startswith("src/repro/")
+
+
+# ---------------------------------------------------------------------------
+# CLI and baseline mechanics
+# ---------------------------------------------------------------------------
+
+def test_cli_list_rules(capsys):
+    assert cli.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for r in all_rules():
+        assert r.id in out
+
+
+def _dirty_tree(tmp_path):
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    (pkg / "matops.py").write_text(
+        "import jax.numpy as jnp\n\n"
+        "def gramify(x):\n"
+        "    return jnp.asarray(x, jnp.float32)\n", encoding="utf-8")
+    return tmp_path
+
+
+def test_cli_json_report_and_exit_code(tmp_path, capsys):
+    root = _dirty_tree(tmp_path)
+    report = tmp_path / "out" / "report.json"
+    rc = cli.main(["src", "--engine", "ast", "--root", str(root),
+                   "--format", "json", "--output", str(report)])
+    assert rc == 1
+    data = json.loads(report.read_text(encoding="utf-8"))
+    assert data["counts"]["findings"] == 1
+    (finding,) = data["findings"]
+    assert finding["rule"] == "CA104"
+    assert finding["path"] == "src/repro/core/matops.py"
+    assert json.loads(capsys.readouterr().out) == data
+
+
+def test_cli_baseline_roundtrip_suppresses_then_goes_stale(tmp_path, capsys):
+    root = _dirty_tree(tmp_path)
+    argv = ["src", "--engine", "ast", "--root", str(root)]
+    # 1. land the analyzer: park the pre-existing finding in the baseline
+    assert cli.main(argv + ["--write-baseline"]) == 0
+    capsys.readouterr()
+    assert cli.main(argv) == 0
+    assert "1 baseline-suppressed" in capsys.readouterr().out
+    # 2. fix the finding: the parked fingerprint must go STALE and gate
+    (root / "src" / "repro" / "core" / "matops.py").write_text(
+        "import jax.numpy as jnp\n\nGRAM_DTYPE = jnp.float32\n",
+        encoding="utf-8")
+    assert cli.main(argv) == 1
+    assert "stale baseline" in capsys.readouterr().out
+    # 3. regenerate: empty baseline, clean exit
+    assert cli.main(argv + ["--write-baseline"]) == 0
+    capsys.readouterr()
+    assert json.loads(
+        (root / "analysis_baseline.json").read_text(encoding="utf-8")) == []
+    assert cli.main(argv) == 0
+
+
+def test_findings_sort_and_fingerprint_ignore_line():
+    a = Finding("CA104", "src/x.py", 10, "m", context="f", snippet="s")
+    b = Finding("CA104", "src/x.py", 99, "m", context="f", snippet="s")
+    assert a.fingerprint() == b.fingerprint()
+    assert sort_findings([b, a]) == [a, b]
+    new, suppressed, stale = baseline.split_by_baseline(
+        [a, b], [a.fingerprint()])
+    assert new == [] and suppressed == [a, b] and stale == []

@@ -168,7 +168,8 @@ def test_solve_batch_rejects_unstacked_data():
 # estimator surface: fit_path(mode="batched"), fit_batch, BatchReport
 # ---------------------------------------------------------------------------
 
-def test_fit_path_batched_mode_matches_sequential(chain_problem):
+def test_fit_path_batched_mode_matches_sequential(chain_problem,
+                                                  recompile_guard):
     from repro.estimator import ConcordEstimator, SolverConfig
 
     x = jnp.asarray(chain_problem.x)
@@ -192,9 +193,12 @@ def test_fit_path_batched_mode_matches_sequential(chain_problem):
     assert est.report_ is pbat.reports[-1]
     with pytest.raises(ValueError, match="mode"):
         est.fit_path(x, lam1_grid=grid, mode="vectorized")
+    # a second batched path at the same grid length reuses the program
+    with recompile_guard(path=batch._solve_path_batched):
+        est.fit_path(x, lam1_grid=[0.33, 0.24, 0.17], mode="batched")
 
 
-def test_fit_batch_smoke_stacked_datasets():
+def test_fit_batch_smoke_stacked_datasets(recompile_guard):
     from repro.estimator import BatchReport, ConcordEstimator, SolverConfig
 
     xs = np.stack([graphs.make_problem("chain", p=32, n=100, seed=k).x
@@ -215,6 +219,9 @@ def test_fit_batch_smoke_stacked_datasets():
     assert sum(r.wall_time_s for r in rep) == pytest.approx(rep.wall_time_s)
     assert "one compiled solve" in rep.summary()
     assert est.report_ is rep.reports[-1]
+    # same stacked shape, new penalties -> the compiled program holds
+    with recompile_guard(solve_batch=batch._solve_batch):
+        est.fit_batch(x=xs, lam1=[0.22, 0.26, 0.31])
 
 
 def test_fit_batch_validation():

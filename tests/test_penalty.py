@@ -253,14 +253,8 @@ def test_l1_spec_bit_exact_fit_report(chain_problem):
 # one compiled program: traced penalty params on paths and batched lanes
 # ---------------------------------------------------------------------------
 
-def _cache_size(jitted):
-    fn = getattr(jitted, "_cache_size", None)
-    if fn is None:
-        pytest.skip("jit cache introspection not available")
-    return fn()
-
-
-def test_warm_path_reuses_one_compiled_program(chain_problem):
+def test_warm_path_reuses_one_compiled_program(chain_problem,
+                                               recompile_guard):
     """Across a lam1 grid (warm-started) the reference engine must not
     recompile: penalty params and omega0 are traced."""
     from repro.core import prox as prox_mod
@@ -271,19 +265,17 @@ def test_warm_path_reuses_one_compiled_program(chain_problem):
     s = jnp.asarray(chain_problem.s)
     est = ConcordEstimator(lam1=0.2, lam2=0.05, config=cfg)
     est.fit_path(s=s, n_samples=150, lam1_grid=[0.3, 0.25])
-    base = _cache_size(prox_mod._solve_reference)
-    est.fit_path(s=s, n_samples=150, lam1_grid=[0.28, 0.22, 0.18, 0.12])
-    assert _cache_size(prox_mod._solve_reference) == base
+    with recompile_guard(solve=prox_mod._solve_reference):
+        est.fit_path(s=s, n_samples=150, lam1_grid=[0.28, 0.22, 0.18, 0.12])
     # a scad path shares one program across its points too
     est2 = ConcordEstimator(lam1=0.2, lam2=0.05, penalty="scad:3.7",
                             config=cfg)
     est2.fit_path(s=s, n_samples=150, lam1_grid=[0.3, 0.25])
-    grown = _cache_size(prox_mod._solve_reference)
-    est2.fit_path(s=s, n_samples=150, lam1_grid=[0.27, 0.21, 0.14])
-    assert _cache_size(prox_mod._solve_reference) == grown
+    with recompile_guard(solve=prox_mod._solve_reference):
+        est2.fit_path(s=s, n_samples=150, lam1_grid=[0.27, 0.21, 0.14])
 
 
-def test_batched_lanes_with_per_lane_penalty_params_f64():
+def test_batched_lanes_with_per_lane_penalty_params_f64(recompile_guard):
     """Different lanes carry different penalty params (lam1 AND the MCP
     shape) in ONE compiled program, and each lane matches its sequential
     solve bit-for-bit in telemetry / to 1e-5 in f64 values."""
@@ -308,12 +300,11 @@ def test_batched_lanes_with_per_lane_penalty_params_f64():
         assert float(np.abs(np.asarray(bat.omega[0])
                             - np.asarray(bat.omega[2])).max()) > 1e-6
         # same lane count, new param VALUES -> no recompile
-        base = _cache_size(batch._solve_batch)
         spec_c = PenaltySpec("mcp", jnp.asarray([0.22, 0.28, 0.24]), 0.05,
                              shape=jnp.asarray([2.0, 4.0, 8.0]))
-        batch.solve_batch(jnp.stack([s] * 3), penalty=spec_c,
-                          variant="cov", tol=1e-6)
-        assert _cache_size(batch._solve_batch) == base
+        with recompile_guard(solve_batch=batch._solve_batch):
+            batch.solve_batch(jnp.stack([s] * 3), penalty=spec_c,
+                              variant="cov", tol=1e-6)
 
 
 # ---------------------------------------------------------------------------

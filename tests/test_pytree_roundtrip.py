@@ -1,0 +1,224 @@
+"""Pytree round-trip property tests, auto-discovered from the registries.
+
+Two discovery sources, so a new penalty kind or a new pytree-registered
+dataclass/NamedTuple carry gets round-trip coverage automatically (or
+fails loudly here until a sample builder exists):
+
+  * ``penalty.penalty_kinds()`` — every registered penalty family gets a
+    PenaltySpec flatten/unflatten identity check, scalar and batched.
+  * a module walk over the ``repro`` package finds (a) every dataclass
+    registered via ``register_pytree_node_class`` (has tree_flatten AND
+    tree_unflatten) and (b) every NamedTuple carry, and round-trips each.
+
+The flatten/unflatten identity is what jit/vmap/shard_map rely on when
+they rebuild carries at trace boundaries; static aux (penalty kind,
+presence flags) must survive while numeric leaves stay traced.
+"""
+import dataclasses
+import importlib
+import inspect
+import pkgutil
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import penalty
+
+# subpackages walked for pytree classes; modules that fail to import are
+# skipped (optional deps), but the walk itself must find the known carries
+_WALK_ROOTS = ("repro.core", "repro.data", "repro.kernels", "repro.comm",
+               "repro.estimator", "repro.models", "repro.launch")
+
+
+def _walk_modules():
+    for root in _WALK_ROOTS:
+        try:
+            pkg = importlib.import_module(root)
+        except Exception:
+            continue
+        yield pkg
+        if not hasattr(pkg, "__path__"):
+            continue
+        for info in pkgutil.iter_modules(pkg.__path__):
+            try:
+                yield importlib.import_module(f"{root}.{info.name}")
+            except Exception:
+                continue
+
+
+def _discover(predicate):
+    found = {}
+    for mod in _walk_modules():
+        for _, cls in inspect.getmembers(mod, inspect.isclass):
+            if cls.__module__.startswith("repro.") and predicate(cls):
+                found[f"{cls.__module__}.{cls.__qualname__}"] = cls
+    return found
+
+
+def _is_registered_dataclass(cls) -> bool:
+    return (dataclasses.is_dataclass(cls)
+            and "tree_flatten" in cls.__dict__
+            and "tree_unflatten" in cls.__dict__)
+
+
+def _is_namedtuple(cls) -> bool:
+    return (issubclass(cls, tuple) and hasattr(cls, "_fields")
+            and hasattr(cls, "_field_defaults"))
+
+
+def _leaves_equal(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb, f"treedef changed on round trip: {ta} != {tb}"
+    for x, y in zip(la, lb):
+        if isinstance(x, (jax.Array, np.ndarray)) or isinstance(
+                y, (jax.Array, np.ndarray)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            assert x == y
+
+
+def _roundtrip(obj):
+    leaves, treedef = jax.tree_util.tree_flatten(obj)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert type(rebuilt) is type(obj)
+    _leaves_equal(obj, rebuilt)
+    return rebuilt
+
+
+# ---------------------------------------------------------------------------
+# PenaltySpec: every registered kind, scalar and batched lanes
+# ---------------------------------------------------------------------------
+
+def _sample_spec(kind: str, lam1=0.3) -> penalty.PenaltySpec:
+    """Build a validated sample spec from registry metadata alone."""
+    defn = penalty._get_def(kind)
+    shape = defn.default_shape if defn.has_shape else None
+    spec = penalty.PenaltySpec(kind, lam1, 0.05, shape=shape)
+    try:
+        defn.validate(spec)
+        return spec
+    except ValueError as e:
+        if "weight" not in str(e):
+            raise
+    w = jnp.abs(jnp.asarray(np.random.default_rng(0).normal(size=(6, 6))))
+    spec = penalty.PenaltySpec(kind, lam1, 0.05, shape=shape,
+                               weights=0.5 * (w + w.T))
+    defn.validate(spec)
+    return spec
+
+
+@pytest.mark.parametrize("kind", penalty.penalty_kinds())
+def test_penalty_spec_roundtrip_scalar(kind):
+    spec = _sample_spec(kind)
+    rebuilt = _roundtrip(spec)
+    assert rebuilt.kind == spec.kind
+    assert (rebuilt.shape is None) == (spec.shape is None)
+    assert (rebuilt.weights is None) == (spec.weights is None)
+
+
+@pytest.mark.parametrize("kind", penalty.penalty_kinds())
+def test_penalty_spec_roundtrip_batched_lanes(kind):
+    """(B,) lam1 lanes flatten to (B,) leaves and come back intact —
+    exactly what solve_batch's vmap does to the spec."""
+    spec = _sample_spec(kind).with_lam1(jnp.asarray([0.1, 0.2, 0.3]))
+    rebuilt = _roundtrip(spec)
+    assert rebuilt.lam1.shape == (3,)
+    np.testing.assert_array_equal(np.asarray(rebuilt.lam1),
+                                  np.asarray(spec.lam1))
+
+
+@pytest.mark.parametrize("kind", penalty.penalty_kinds())
+def test_penalty_spec_treedef_is_value_independent(kind):
+    """Same kind, different numeric values -> identical treedef: the
+    one-compiled-program-per-penalty-kind contract hangs on this."""
+    a = jax.tree_util.tree_structure(_sample_spec(kind, lam1=0.1))
+    b = jax.tree_util.tree_structure(_sample_spec(kind, lam1=0.9))
+    assert a == b
+    assert hash(a) == hash(b)
+
+
+def test_penalty_spec_treedefs_differ_across_kinds():
+    """Distinct kinds carry distinct static aux, forcing a retrace (each
+    penalty family gets its own compiled program, never a silent reuse)."""
+    tds = {k: jax.tree_util.tree_structure(_sample_spec(k))
+           for k in penalty.penalty_kinds()}
+    kinds = sorted(tds)
+    for i, ki in enumerate(kinds):
+        for kj in kinds[i + 1:]:
+            assert tds[ki] != tds[kj], (ki, kj)
+
+
+def test_penalty_spec_survives_tree_map():
+    spec = _sample_spec("scad")
+    doubled = jax.tree_util.tree_map(lambda x: x * 2, spec)
+    assert isinstance(doubled, penalty.PenaltySpec)
+    assert doubled.kind == "scad"
+    np.testing.assert_allclose(float(doubled.lam1), 2 * float(spec.lam1))
+    np.testing.assert_allclose(float(doubled.shape), 2 * float(spec.shape))
+
+
+# ---------------------------------------------------------------------------
+# registered dataclasses: discovery must stay in sync with the samples
+# ---------------------------------------------------------------------------
+
+#: sample builders for every pytree-REGISTERED dataclass in the repo.  The
+#: discovery test below fails if a new registration appears without one.
+_DATACLASS_SAMPLES = {
+    "repro.core.penalty.PenaltySpec": lambda: _sample_spec("mcp"),
+}
+
+
+def test_every_registered_dataclass_has_a_roundtrip_sample():
+    found = _discover(_is_registered_dataclass)
+    assert set(found) == set(_DATACLASS_SAMPLES), (
+        f"pytree-registered dataclasses changed: found {sorted(found)}, "
+        f"samples cover {sorted(_DATACLASS_SAMPLES)}; add/remove a sample "
+        f"builder in _DATACLASS_SAMPLES")
+
+
+@pytest.mark.parametrize("name", sorted(_DATACLASS_SAMPLES))
+def test_registered_dataclass_roundtrip(name):
+    _roundtrip(_DATACLASS_SAMPLES[name]())
+
+
+# ---------------------------------------------------------------------------
+# NamedTuple carries: native pytrees, but the identity still deserves a
+# regression net (a __new__ override or field reorder would break it)
+# ---------------------------------------------------------------------------
+
+def _namedtuple_sample(cls):
+    return cls(*[jnp.asarray(float(i + 1)) for i in range(len(cls._fields))])
+
+
+def test_namedtuple_carries_discovered():
+    found = _discover(_is_namedtuple)
+    expected = {
+        "repro.core.prox.ProxResult", "repro.core.prox._Carry",
+        "repro.core.prox._LsCarry", "repro.core.prox.VariantOps",
+        "repro.core.objective.ProxState",
+        "repro.core.distributed.FitResult",
+        "repro.data.gram.GramResult",
+    }
+    missing = expected - set(found)
+    assert not missing, f"walk lost known carries: {sorted(missing)}"
+
+
+@pytest.mark.parametrize("name", [
+    "repro.core.prox.ProxResult",
+    "repro.core.prox._Carry",
+    "repro.core.prox._LsCarry",
+    "repro.core.objective.ProxState",
+    "repro.core.distributed.FitResult",
+    "repro.data.gram.GramResult",
+])
+def test_namedtuple_carry_roundtrip(name):
+    found = _discover(_is_namedtuple)
+    cls = found[name]
+    sample = _namedtuple_sample(cls)
+    rebuilt = _roundtrip(sample)
+    assert rebuilt._fields == cls._fields
+    assert len(jax.tree_util.tree_leaves(sample)) == len(cls._fields)
