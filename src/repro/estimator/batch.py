@@ -50,6 +50,20 @@ def _resolve_batch_variant(config: SolverConfig, have_s: bool) -> str:
     return "cov" if have_s else "obs"
 
 
+def _resolve_batch_gemm(config: SolverConfig, variant: str, dtype) -> str:
+    """``batch_gemm="auto"``: the host BLAS stepper exactly where it is
+    legal and measured faster — CPU backend, Cov variant, compact
+    schedule, megakernel off, f64 compute (where its agreement with the
+    XLA route is validated) — else plain XLA."""
+    if config.batch_gemm != "auto":
+        return config.batch_gemm
+    if (variant == "cov" and config.batch_schedule == "compact"
+            and not config.use_pallas and jnp.dtype(dtype) == jnp.float64
+            and jax.default_backend() == "cpu"):
+        return "host"
+    return "xla"
+
+
 def _slice_result(res: ProxResult, i: int) -> ProxResult:
     """Per-problem view of a batched ProxResult (leading (B,) axis)."""
     return ProxResult(*(f[i] for f in res))
@@ -125,10 +139,14 @@ def fit_batch(x=None, *, s=None, lam1=None, lam2=0.0, penalty=None,
         lam1s = np.broadcast_to(np.asarray(spec.lam1, np.float64), (b,))
         lam2s = np.broadcast_to(np.asarray(spec.lam2, np.float64), (b,))
         t0 = time.perf_counter()
-        res = core_batch.solve_batch(
+        res, stats = core_batch.solve_batch(
             data, penalty=spec, omega0=omega0, variant=variant,
             tol=cfg.tol, max_iters=cfg.max_iters, max_ls=cfg.max_ls,
-            warm_start_tau=cfg.warm_start_tau)
+            warm_start_tau=cfg.warm_start_tau,
+            tau_schedule=cfg.tau_schedule, schedule=cfg.batch_schedule,
+            chunk=cfg.batch_chunk, max_lanes=cfg.batch_max_lanes,
+            gemm=_resolve_batch_gemm(cfg, variant, data.dtype),
+            return_stats=True)
     else:
         if lam1 is None:
             raise TypeError("pass lam1 (or penalty=)")
@@ -136,30 +154,39 @@ def fit_batch(x=None, *, s=None, lam1=None, lam2=0.0, penalty=None,
         lam1s = np.broadcast_to(np.asarray(lam1, np.float64), (b,))
         lam2s = np.broadcast_to(np.asarray(lam2, np.float64), (b,))
         t0 = time.perf_counter()
-        res = core_batch.solve_batch(
+        res, stats = core_batch.solve_batch(
             data, jnp.asarray(lam1s, data.dtype),
             jnp.asarray(lam2s, data.dtype),
             omega0=omega0, variant=variant,
             tol=cfg.tol, max_iters=cfg.max_iters, max_ls=cfg.max_ls,
-            warm_start_tau=cfg.warm_start_tau)
+            warm_start_tau=cfg.warm_start_tau,
+            tau_schedule=cfg.tau_schedule, schedule=cfg.batch_schedule,
+            chunk=cfg.batch_chunk, max_lanes=cfg.batch_max_lanes,
+            gemm=_resolve_batch_gemm(cfg, variant, data.dtype),
+            return_stats=True)
     jax.block_until_ready(res.omega)
     wall = time.perf_counter() - t0
     reports = batch_reports(res, lam1s, lam2s, wall, variant=variant,
                             config=cfg, penalty=spec)
-    return BatchReport(reports=tuple(reports), wall_time_s=wall)
+    return BatchReport(reports=tuple(reports), wall_time_s=wall,
+                       stats=stats)
 
 
 def batched_path_reports(problem: Problem, grid: list[float],
                          config: SolverConfig, *,
                          penalty: PenaltySpec | None = None,
                          lam2: float = 0.0,
-                         omega0=None) -> tuple[list[FitReport], float]:
+                         omega0=None):
     """Run a whole lam1 grid against shared data as one compiled program.
 
     ``penalty`` (optional) is the spec template whose lam1 the grid
     replaces — SCAD/MCP/weighted paths lower to the same single program.
-    Returns (per-point reports in ``grid`` order, total wall seconds).
-    Engine behind ``ConcordEstimator.fit_path(mode="batched")``."""
+    The engine knobs (``batch_schedule``/``batch_chunk``/
+    ``batch_max_lanes``/``batch_gemm``/``batch_warm_start``/
+    ``tau_schedule``/``use_pallas``) come from the config.  Returns
+    (per-point reports in ``grid`` order, total wall seconds, the
+    engine's :class:`~repro.core.batch.BatchRunStats`).  Engine behind
+    ``ConcordEstimator.fit_path(mode="batched")``."""
     _check_engine(config)
     variant = _resolve_batch_variant(config, have_s=problem.s is not None)
     if variant == "cov":
@@ -174,14 +201,19 @@ def batched_path_reports(problem: Problem, grid: list[float],
     if penalty is not None:
         lam2 = float(np.asarray(penalty.lam2))
     t0 = time.perf_counter()
-    res = core_batch.solve_path_batched(
+    res, stats = core_batch.solve_path_batched(
         data, lam1s, lam2, penalty=penalty, omega0=omega0, variant=variant,
         tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
-        warm_start_tau=config.warm_start_tau)
+        warm_start_tau=config.warm_start_tau,
+        tau_schedule=config.tau_schedule, schedule=config.batch_schedule,
+        chunk=config.batch_chunk, max_lanes=config.batch_max_lanes,
+        use_pallas=config.use_pallas,
+        gemm=_resolve_batch_gemm(config, variant, data.dtype),
+        warm_start=config.batch_warm_start, return_stats=True)
     jax.block_until_ready(res.omega)
     wall = time.perf_counter() - t0
     lam2s = [lam2] * len(grid)
     spec_b = penalty.with_lam1(np.asarray(grid, np.float64)) \
         if penalty is not None else None
     return batch_reports(res, grid, lam2s, wall, variant=variant,
-                         config=config, penalty=spec_b), wall
+                         config=config, penalty=spec_b), wall, stats

@@ -12,12 +12,21 @@ import dataclasses
 from dataclasses import dataclass
 
 from ..core.penalty import parse_penalty
+from ..core.prox import TAU_SCHEDULES
 
 VARIANTS = ("auto", "cov", "obs")
 
 SPARSE_MATMUL_MODES = ("off", "on", "auto")
 
 _DTYPES = ("float32", "float64", "bfloat16")
+
+BATCH_SCHEDULES = ("compact", "monolithic")
+
+#: "auto" resolves per fit: the host BLAS stepper on CPU Cov compact
+#: batches (where it beats one-core XLA), plain XLA everywhere else
+BATCH_GEMMS = ("auto", "xla", "host")
+
+BATCH_WARM_STARTS = (None, "pilot")
 
 
 @dataclass(frozen=True)
@@ -53,6 +62,23 @@ class SolverConfig:
     sparse_threshold
                    block-density crossover for ``"on"`` (default 0.25 when
                    None); for ``"auto"`` it caps the model's threshold.
+    tau_schedule   per-iteration line-search start rule
+                   (``core.prox.TAU_SCHEDULES``): ``None`` defers to
+                   ``warm_start_tau`` (its legacy boolean form),
+                   ``"restart"``/``"warm"``/``"greedy"`` force one.
+    batch_schedule compact (segmented lane compaction, default) or
+                   monolithic (one vmapped while_loop) batched engine.
+    batch_chunk    flat steps per compact segment (compaction cadence).
+    batch_max_lanes
+                   wave-size cap for the compact engine (``None`` = one
+                   wave; small caps help cache-limited hosts).
+    batch_gemm     aux-product route of the compact engine: ``"xla"``,
+                   ``"host"`` (host BLAS stepper; CPU + Cov only) or
+                   ``"auto"`` (host exactly when that combination holds).
+    batch_warm_start
+                   ``"pilot"`` solves the median-difficulty lane first and
+                   warm-starts the rest from it (path mode); ``None`` runs
+                   all lanes cold.
     penalty        penalty family as a string form parsed by
                    ``core.penalty.parse_penalty``: ``"l1"`` (default),
                    ``"elastic_net"``, ``"scad"``/``"scad:3.7"``,
@@ -77,6 +103,12 @@ class SolverConfig:
     sparse_block: int = 128
     sparse_threshold: float | None = None
     penalty: str = "l1"
+    tau_schedule: str | None = None
+    batch_schedule: str = "compact"
+    batch_chunk: int = 32
+    batch_max_lanes: int | None = None
+    batch_gemm: str = "auto"
+    batch_warm_start: str | None = None
 
     def __post_init__(self):
         if not isinstance(self.backend, str) or not self.backend:
@@ -112,6 +144,29 @@ class SolverConfig:
                 0.0 < self.sparse_threshold <= 1.0):
             raise ValueError(f"sparse_threshold must be in (0, 1] or None, "
                              f"got {self.sparse_threshold!r}")
+        if self.tau_schedule is not None and \
+                self.tau_schedule not in TAU_SCHEDULES:
+            raise ValueError(f"tau_schedule must be one of {TAU_SCHEDULES} "
+                             f"or None, got {self.tau_schedule!r}")
+        if self.batch_schedule not in BATCH_SCHEDULES:
+            raise ValueError(f"batch_schedule must be one of "
+                             f"{BATCH_SCHEDULES}, got "
+                             f"{self.batch_schedule!r}")
+        if not isinstance(self.batch_chunk, int) or self.batch_chunk < 1:
+            raise ValueError(f"batch_chunk must be a positive int, got "
+                             f"{self.batch_chunk!r}")
+        if self.batch_max_lanes is not None and (
+                not isinstance(self.batch_max_lanes, int)
+                or self.batch_max_lanes < 1):
+            raise ValueError(f"batch_max_lanes must be a positive int or "
+                             f"None, got {self.batch_max_lanes!r}")
+        if self.batch_gemm not in BATCH_GEMMS:
+            raise ValueError(f"batch_gemm must be one of {BATCH_GEMMS}, "
+                             f"got {self.batch_gemm!r}")
+        if self.batch_warm_start not in BATCH_WARM_STARTS:
+            raise ValueError(f"batch_warm_start must be one of "
+                             f"{BATCH_WARM_STARTS}, got "
+                             f"{self.batch_warm_start!r}")
         if not isinstance(self.penalty, str):
             raise ValueError(
                 f"config.penalty must be a penalty string form (got "

@@ -182,13 +182,38 @@ class ConcordEstimator:
 
     # -- regularization path --------------------------------------------
 
+    def _resolve_path_mode(self, mode: str, grid: list[float]) -> str:
+        """``fit_path(mode="auto")``: consult the cost model's
+        batched-vs-sequential predictor with the engine knobs this config
+        would actually run (tau schedule, chunk, gemm route, pilot warm
+        start)."""
+        if mode != "auto":
+            return mode
+        import jax
+
+        from ..core.costmodel import choose_path_mode
+        from ..core.prox import resolve_tau_schedule
+        gemm = self.config.batch_gemm
+        if gemm == "auto":
+            # mirror the batch layer's resolution; the predictor only
+            # needs the step-cost class, not the exact dtype gate
+            gemm = "host" if jax.default_backend() == "cpu" else "xla"
+        return choose_path_mode(
+            grid,
+            tau_schedule=resolve_tau_schedule(
+                self.config.tau_schedule, self.config.warm_start_tau),
+            chunk=self.config.batch_chunk,
+            max_iters=self.config.max_iters,
+            gemm=gemm, warm_start=self.config.batch_warm_start)
+
     def _run_path(self, problem: Problem, grid: list[float],
                   spec: PenaltySpec, mode: str, warm_start: bool,
-                  score_bic: bool, s_mat) -> list[FitReport]:
+                  score_bic: bool, s_mat):
+        stats = None
         if mode == "batched":
             from .batch import batched_path_reports
-            reports, _ = batched_path_reports(problem, grid, self.config,
-                                              penalty=spec)
+            reports, _, stats = batched_path_reports(
+                problem, grid, self.config, penalty=spec)
         else:
             reports = []
             omega0 = None
@@ -203,7 +228,7 @@ class ConcordEstimator:
                     rep, bic=pseudo_bic(rep.omega, s_mat, problem.n))
                 for rep in reports
             ]
-        return reports
+        return reports, stats
 
     def fit_path(self, x=None, lam1_grid: Iterable[float] = (), *,
                  s=None, n_samples: int | None = None,
@@ -243,13 +268,19 @@ class ConcordEstimator:
         batched spec leaf through the single compiled program.  Returns
         the stage-2 path with ``adaptive=True`` and ``stage1`` attached.
 
+        ``mode="auto"`` consults the cost model
+        (``core.costmodel.choose_path_mode``): batched when the compact
+        engine's predicted speedup over a sequential sweep of this grid
+        clears the threshold, sequential otherwise.
+
         With ``score_bic`` each report carries a pseudo-likelihood BIC so
         ``PathResult.best_bic()`` picks a model in one line.
         """
-        if mode not in ("sequential", "batched"):
-            raise ValueError(f"mode must be 'sequential' or 'batched', "
-                             f"got {mode!r}")
+        if mode not in ("sequential", "batched", "auto"):
+            raise ValueError(f"mode must be 'sequential', 'batched' or "
+                             f"'auto', got {mode!r}")
         grid = _validate_grid(lam1_grid)
+        mode = self._resolve_path_mode(mode, grid)
         if score_bic and x is None and n_samples is None:
             raise ValueError(
                 "BIC scoring needs the sample count: pass n_samples "
@@ -266,22 +297,23 @@ class ConcordEstimator:
         if adaptive and spec1.kind != "l1":
             # stage 1 of the adaptive refit is always a plain l1 path
             spec1 = PenaltySpec("l1", self.lam1, self.lam2)
-        reports = self._run_path(problem, grid, spec1, mode, warm_start,
-                                 score_bic, s_mat)
+        reports, bstats = self._run_path(problem, grid, spec1, mode,
+                                         warm_start, score_bic, s_mat)
         stage1 = PathResult(reports=tuple(reports), warm_start=warm,
-                            mode=mode)
+                            mode=mode, batch_stats=bstats)
         if not adaptive:
             self._finish(reports[-1])
             return stage1
         weights = [adaptive_weights(rep.omega, eps=adaptive_eps)
                    for rep in stage1.reports]
+        bstats2 = None
         if mode == "batched":
             from .batch import batched_path_reports
             # per-point weight matrices = one (B, p, p) lane-batched leaf
             spec2 = PenaltySpec("weighted_l1", grid[0], self.lam2,
                                 weights=np.stack(weights))
-            reports2, _ = batched_path_reports(problem, grid, self.config,
-                                               penalty=spec2)
+            reports2, _, bstats2 = batched_path_reports(
+                problem, grid, self.config, penalty=spec2)
         else:
             reports2 = []
             omega0 = None
@@ -299,7 +331,8 @@ class ConcordEstimator:
                 for rep in reports2
             ]
         result = PathResult(reports=tuple(reports2), warm_start=warm,
-                            mode=mode, adaptive=True, stage1=stage1)
+                            mode=mode, adaptive=True, stage1=stage1,
+                            batch_stats=bstats2)
         self._finish(reports2[-1])
         return result
 

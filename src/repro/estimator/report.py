@@ -89,12 +89,17 @@ class PathResult:
     one compiled multi-problem program, ``core.batch``).
 
     ``fit_path(adaptive=True)`` returns the STAGE-2 weighted path with
-    ``adaptive=True`` and the stage-1 l1 path attached as ``stage1``."""
+    ``adaptive=True`` and the stage-1 l1 path attached as ``stage1``.
+
+    ``batch_stats`` (batched mode only) is the engine's
+    :class:`~repro.core.batch.BatchRunStats` — segment count, wave sizes
+    and the active-lane occupancy timeline of the compact schedule."""
     reports: tuple[FitReport, ...] = field(default_factory=tuple)
     warm_start: bool = True
     mode: str = "sequential"
     adaptive: bool = False
     stage1: "PathResult | None" = None
+    batch_stats: object | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "reports", tuple(self.reports))
@@ -144,6 +149,8 @@ class PathResult:
         lines.append(f"path total: {self.total_iters} outer iters, "
                      f"{self.total_ls} ls trials, {self.wall_time_s:.3f}s "
                      f"({how})")
+        if self.batch_stats is not None:
+            lines.append(self.batch_stats.summary())
         return "\n".join(lines)
 
 
@@ -154,9 +161,12 @@ class BatchReport:
     ``reports`` holds one :class:`FitReport` per stacked problem, in input
     order.  The whole batch ran as ONE compiled program, so only the
     aggregate wall time is physical; each report carries its 1/B share.
+    ``stats`` is the engine's :class:`~repro.core.batch.BatchRunStats`
+    (schedule, segments, occupancy timeline).
     """
     reports: tuple[FitReport, ...] = field(default_factory=tuple)
     wall_time_s: float = 0.0    # end-to-end time of the one batched solve
+    stats: object | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "reports", tuple(self.reports))
@@ -199,4 +209,6 @@ class BatchReport:
             f"/{self.n_problems}"
             + (f", stalled {sum(r.stalled for r in self.reports)}"
                if self.any_stalled else "") + ")")
+        if self.stats is not None:
+            lines.append(self.stats.summary())
         return "\n".join(lines)

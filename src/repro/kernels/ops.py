@@ -18,6 +18,7 @@ import jax
 
 from . import blocksparse_matmul as _bsmm
 from . import flash_attention as _fa
+from . import pathstep as _ps
 from . import softthresh as _st
 
 # Explicit override: None = decide from the active backend at call time.
@@ -50,6 +51,11 @@ def fused_prox_stats(z, diag_mask, alpha, **kw):
     return _st.fused_prox_stats(z, diag_mask, alpha, **kw)
 
 
+def fused_path_step(omega, w, tau, lam1, lam2, **kw):
+    kw.setdefault("interpret", interpret_default())
+    return _ps.fused_path_step(omega, w, tau, lam1, lam2, **kw)
+
+
 def blocksparse_matmul(values, row_idx, col_idx, b, **kw):
     kw.setdefault("interpret", interpret_default())
     return _bsmm.blocksparse_matmul(values, row_idx, col_idx, b, **kw)
@@ -76,10 +82,30 @@ def _analysis_fused_prox():
     return {"fn": run, "args": (z, dm)}
 
 
+def _analysis_fused_path_step():
+    import jax.numpy as jnp
+    c, p = 2, 8
+    om = (jnp.eye(p, dtype=jnp.float64)[None]
+          + 0.01 * jnp.arange(c * p * p, dtype=jnp.float64
+                              ).reshape(c, p, p) / (c * p * p))
+    w = om * 1.5
+    tau = jnp.full((c,), 0.5, jnp.float64)
+    lam = jnp.full((c,), 0.1, jnp.float64)
+
+    def run(om_, w_, tau_, lam_):
+        return fused_path_step(om_, w_, tau_, lam_, lam_, block=4,
+                               interpret=True)
+
+    return {"fn": run, "args": (om, w, tau, lam)}
+
+
 #: the Pallas prox dispatch in interpret mode: the kernel body is traced
 #: as jax ops, so its stats lanes are covered by the f64 downcast check
 ANALYSIS_ENTRIES = [
     {"name": "kernels.ops.fused_prox_stats",
      "path": "src/repro/kernels/softthresh.py", "axis_names": (),
      "build": _analysis_fused_prox},
+    {"name": "kernels.ops.fused_path_step",
+     "path": "src/repro/kernels/pathstep.py", "axis_names": (),
+     "build": _analysis_fused_path_step},
 ]

@@ -71,6 +71,53 @@ def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha,
 
 
 # ---------------------------------------------------------------------------
+# fused path step (pathstep.py)
+# ---------------------------------------------------------------------------
+
+def fused_path_step(omega: jax.Array, w: jax.Array, tau, lam1, lam2,
+                    *, weights=None):
+    """One fused flat step of the batched path engine, pure jnp.
+
+    omega/w: (C, p, p) lane iterates and cached aux products W = Omega S;
+    tau/lam1/lam2: (C,) per-lane scalars.  The op order mirrors the tile
+    kernel exactly (grad assembled as 0.5*(W + W^T) + lam2*Omega with the
+    -1/diag correction folded in as one add) so under jit the elementwise
+    candidate is bit-identical (eager dispatch fuses multiply-adds
+    differently — up to one ulp); the (C, 5) stats reductions differ only
+    by tile summation order.
+    """
+    c_lanes, p, _ = omega.shape
+    dtype = omega.dtype
+    diag = jnp.eye(p, dtype=bool)[None]
+    tau = jnp.broadcast_to(jnp.asarray(tau, dtype), (c_lanes,))[:, None, None]
+    alpha = tau * jnp.broadcast_to(
+        jnp.asarray(lam1, dtype), (c_lanes,))[:, None, None]
+    lam2 = jnp.broadcast_to(
+        jnp.asarray(lam2, dtype), (c_lanes,))[:, None, None]
+    grad = 0.5 * (w + jnp.swapaxes(w, -1, -2)) + lam2 * omega
+    grad = jnp.where(diag, grad - 1.0 / omega, grad)
+    z = omega - tau * grad
+    if weights is None:
+        thr = alpha
+    else:
+        wt = jnp.asarray(weights, dtype)
+        thr = jnp.where(jnp.isinf(wt), jnp.inf, alpha * wt)
+    soft = jnp.sign(z) * jnp.maximum(jnp.abs(z) - thr, 0.0)
+    cand = jnp.where(diag, z, soft)
+    diff = cand - omega
+    stats_dtype = jnp.promote_types(dtype, STATS_MIN_DTYPE)
+    red = lambda x: jnp.sum(x, axis=(-2, -1)).astype(stats_dtype)
+    stats = jnp.stack([
+        red(diff * grad),
+        red(diff * diff),
+        red(cand * cand),
+        red(jnp.where(diag, 0.0, jnp.abs(cand))),
+        red((cand != 0.0).astype(dtype)),
+    ], axis=-1)
+    return cand, stats
+
+
+# ---------------------------------------------------------------------------
 # block-sparse x dense matmul (blocksparse_matmul.py)
 # ---------------------------------------------------------------------------
 

@@ -10,10 +10,13 @@ requests and run each group as ONE compiled program:
 
   * ``--workload concord``: a queue of concurrent estimation requests
     (multi-tenant / multi-subject solves, one dataset + penalty each) is
-    bucketed by shape and drained in micro-batches of ``--batch`` through
-    the batched multi-problem solve engine (``estimator.fit_batch`` ->
-    ``core.batch``).  The final partial group is padded to the full batch
-    size so every group reuses one compiled program.  Reports batched vs
+    bucketed by shape, difficulty-sorted within each bucket by the cost
+    model's predicted iteration count (groups converge together, so the
+    batched engine's lane compaction stays effective on mixed-difficulty
+    queues), and drained in micro-batches of ``--batch`` through the
+    batched multi-problem solve engine (``estimator.fit_batch`` ->
+    ``core.batch``).  Partial groups are padded to the full batch size so
+    every group reuses one compiled program.  Reports batched vs
     sequential throughput (requests/s).
 
       PYTHONPATH=src python -m repro.launch.serve --workload concord \\
@@ -39,7 +42,32 @@ class ConcordServeStats(NamedTuple):
     group_shapes: list          # (B, n, p) of each fit_batch call
     t_batched: float
     t_sequential: float
-    max_gap: float              # max |Ω_batched - Ω_sequential| across queue
+    max_gap: float              # max |Ω_batched - Ω_seq| across queue
+    order: np.ndarray = None    # difficulty-sorted drain order (request
+                                # indices, hardest first within each
+                                # shape bucket)
+
+
+def _difficulty_buckets(shapes, lam1s, bsz: int):
+    """Group request indices for the micro-batched drain: bucket by data
+    shape (the compiled-program key), difficulty-sort each bucket by the
+    cost model's predicted iteration count (hardest first — cheap
+    requests are not padded up to a straggler's line search), then cut
+    consecutive groups of ``bsz``.  Yields index lists of length <= bsz;
+    similar-difficulty neighbors land in the same group, so every group
+    converges together and the batched engine's compaction keeps lanes
+    live."""
+    from ..core.costmodel import predict_path_iters
+
+    iters = np.asarray(predict_path_iters(lam1s), np.float64)
+    buckets: dict = {}
+    for i, shape in enumerate(shapes):
+        buckets.setdefault(tuple(shape), []).append(i)
+    for idx in buckets.values():
+        # stable sort: equal predictions keep arrival order
+        ordered = [idx[k] for k in np.argsort(-iters[idx], kind="stable")]
+        for lo in range(0, len(ordered), bsz):
+            yield ordered[lo:lo + bsz]
 
 
 def serve_batch(cfg, params, prompts, gen: int, max_len: int,
@@ -66,11 +94,13 @@ def serve_batch(cfg, params, prompts, gen: int, max_len: int,
 def serve_concord(args):
     """Drain a queue of concurrent estimation requests in micro-batches.
 
-    Each request is an (n, p) dataset plus its own lam1 (requests are
-    bucketed by shape upstream; here they share one shape by
-    construction).  Groups of ``--batch`` solve as one compiled program;
-    the last partial group is padded by repeating its final request (and
-    the padding results dropped) so every group hits the same compiled
+    Each request is an (n, p) dataset plus its own lam1.  Requests are
+    bucketed by shape (the compiled-program key), each bucket is
+    difficulty-sorted by the cost model's predicted iteration count
+    (``_difficulty_buckets``) so a group's lanes converge together, and
+    consecutive groups of ``--batch`` solve as one compiled program;
+    partial groups are padded by repeating their final request (and the
+    padding results dropped) so every group hits the same compiled
     executable.  A sequential drain of the same queue is timed as the
     baseline.
     """
@@ -87,18 +117,20 @@ def serve_concord(args):
                           tol=args.tol, max_iters=args.max_iters)
     bsz = max(1, args.batch)
 
-    # batched drain: pad the tail group to bsz for compiled-program reuse
+    # batched drain: difficulty/shape-bucketed groups, tail-padded to bsz
+    # for compiled-program reuse; reports scatter back to input order
     t0 = time.time()
-    reports, group_shapes = [], []
-    for lo in range(0, args.requests, bsz):
-        hi = min(lo + bsz, args.requests)
-        take = hi - lo
-        idx = list(range(lo, hi)) + [hi - 1] * (bsz - take)
+    reports = [None] * args.requests
+    group_shapes, order = [], []
+    for group in _difficulty_buckets([x.shape for x in reqs], lam1s, bsz):
+        order.extend(group)
+        idx = group + [group[-1]] * (bsz - len(group))
         xg = jnp.asarray(xs[idx])
         group_shapes.append(tuple(xg.shape))
         rep = fit_batch(x=xg, lam1=lam1s[idx],
                         lam2=args.lam2, config=config)
-        reports.extend(rep.reports[:take])
+        for i, r in zip(group, rep.reports):
+            reports[i] = r
     t_batched = time.time() - t0
 
     # sequential baseline: one compiled solve per request
@@ -124,7 +156,8 @@ def serve_concord(args):
     return ConcordServeStats(
         reports=reports, lam1s=lam1s, n_groups=len(group_shapes),
         group_shapes=group_shapes, t_batched=t_batched,
-        t_sequential=t_sequential, max_gap=gap)
+        t_sequential=t_sequential, max_gap=gap,
+        order=np.asarray(order, np.int64))
 
 
 def main(argv=None):

@@ -1,0 +1,329 @@
+"""Lane-compacting batched path engine: bit-exactness contracts, the fused
+Pallas path-step megakernel vs its jnp oracle, chunk-program reuse across
+live-lane counts, the host-BLAS stepper, pilot warm starts, and the
+batched-vs-sequential cost model behind ``fit_path(mode="auto")``."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batch, graphs
+from repro.core.prox import solve_reference
+
+
+@pytest.fixture(scope="module")
+def x64():
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", prev)
+
+
+@pytest.fixture(scope="module")
+def chain48(x64):
+    prob = graphs.make_problem("chain", p=48, n=150, seed=0)
+    return jnp.asarray(prob.s, jnp.float64)
+
+
+GRID = np.geomspace(0.4, 0.1, 6)
+
+
+# ---------------------------------------------------------------------------
+# compacted engine vs sequential: BIT-exact, not just allclose
+# ---------------------------------------------------------------------------
+
+def test_compact_path_is_bitexact_vs_sequential_f64(chain48):
+    """Every compacted lane must reproduce its sequential solve to the
+    BIT, with identical per-lane iteration and line-search trial counts —
+    converged lanes freeze exactly, compaction only reorders scheduling."""
+    kw = dict(variant="cov", tol=1e-6, max_iters=400)
+    seq = [solve_reference(chain48, float(l1), 0.05, **kw) for l1 in GRID]
+    bat, stats = batch.solve_path_batched(
+        chain48, jnp.asarray(GRID), 0.05, **kw, return_stats=True)
+    assert stats.schedule == "compact" and stats.n_lanes == len(GRID)
+    assert stats.segments >= 1 and len(stats.occupancy) > 0
+    for i in range(len(GRID)):
+        np.testing.assert_array_equal(np.asarray(bat.omega[i]),
+                                      np.asarray(seq[i].omega))
+        assert int(bat.iters[i]) == int(seq[i].iters)
+        assert int(bat.ls_total[i]) == int(seq[i].ls_total)
+        assert bool(bat.converged[i]) == bool(seq[i].converged)
+
+
+def test_compact_occupancy_timeline_is_consistent(chain48):
+    """The occupancy timeline sums to the lane-step count and never
+    exceeds the capacity in force at that step."""
+    _, stats = batch.solve_path_batched(
+        chain48, jnp.asarray(GRID), 0.05, variant="cov", tol=1e-6,
+        max_iters=400, chunk=8, return_stats=True)
+    occ = np.asarray(stats.occupancy)
+    cap = np.asarray(stats.capacities)
+    assert occ.shape == cap.shape
+    assert int(occ.sum()) == stats.lane_steps
+    assert int(cap.sum()) == stats.padded_lane_steps
+    assert np.all(occ <= cap) and np.all(occ >= 0)
+    assert 0.0 < stats.mean_occupancy <= 1.0
+    assert "compact" in stats.summary()
+
+
+# ---------------------------------------------------------------------------
+# fused path-step megakernel vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+def _kernel_case(c=3, p=24, seed=0, dtype=jnp.float64):
+    rng = np.random.default_rng(seed)
+    omega = jnp.asarray(
+        np.eye(p) + 0.1 * rng.standard_normal((c, p, p)), dtype)
+    w = jnp.asarray(rng.standard_normal((c, p, p)), dtype)
+    tau = jnp.asarray(np.geomspace(0.5, 1.5, c), dtype)
+    lam1 = jnp.asarray(np.linspace(0.1, 0.3, c), dtype)
+    lam2 = jnp.asarray(np.linspace(0.0, 0.1, c), dtype)
+    return omega, w, tau, lam1, lam2
+
+
+@pytest.mark.parametrize("block", [8, 12, 24])
+def test_megakernel_matches_oracle_bitwise(x64, block):
+    """The Pallas megakernel must be BIT-identical to the jitted jnp
+    oracle (the jit matters: eager dispatch fuses multiply-adds
+    differently and can differ by one ulp); the tiled stats partials are
+    order-sensitive, so they get a tight allclose instead."""
+    from repro.kernels import ops as kops
+    from repro.kernels import ref
+
+    args = _kernel_case()
+    cand, stats = kops.fused_path_step(*args, block=block, interpret=True)
+    cand_ref, stats_ref = jax.jit(ref.fused_path_step)(*args)
+    np.testing.assert_array_equal(np.asarray(cand), np.asarray(cand_ref))
+    np.testing.assert_allclose(np.asarray(stats), np.asarray(stats_ref),
+                               rtol=1e-12)
+    # stats columns: dot_dg, dot_dd, sumsq, l1_offdiag, nnz
+    assert stats.shape == (3, 5)
+    assert np.all(np.asarray(stats)[:, 1] >= 0)    # <diff, diff>
+    assert np.all(np.asarray(stats)[:, 4] >= 24)   # diagonal never thresholds
+
+
+def test_megakernel_weighted_lane(x64):
+    """Per-lane weight matrices thread through: inf weights pin entries to
+    exactly zero, and the weighted kernel still matches the oracle to the
+    bit."""
+    from repro.kernels import ops as kops
+    from repro.kernels import ref
+
+    omega, w, tau, lam1, lam2 = _kernel_case()
+    c, p = omega.shape[0], omega.shape[1]
+    rng = np.random.default_rng(7)
+    wts = rng.uniform(0.5, 2.0, (c, p, p))
+    wts[0, 1, 2] = wts[0, 2, 1] = np.inf
+    wts = jnp.asarray(wts, omega.dtype)
+    cand, stats = kops.fused_path_step(omega, w, tau, lam1, lam2,
+                                       weights=wts, block=8, interpret=True)
+    cand_ref, stats_ref = jax.jit(ref.fused_path_step)(
+        omega, w, tau, lam1, lam2, weights=wts)
+    np.testing.assert_array_equal(np.asarray(cand), np.asarray(cand_ref))
+    np.testing.assert_allclose(np.asarray(stats), np.asarray(stats_ref),
+                               rtol=1e-12)
+    assert float(cand[0, 1, 2]) == 0.0 and float(cand[0, 2, 1]) == 0.0
+
+
+def test_megakernel_prime_p_falls_back_to_full_tile(x64):
+    """p with no divisor <= block runs as one p x p tile — still exact."""
+    from repro.kernels import ops as kops
+    from repro.kernels import ref
+    from repro.kernels.pathstep import _block_edge
+
+    assert _block_edge(512, 256) == 256
+    assert _block_edge(48, 256) == 48
+    assert _block_edge(24, 8) == 8
+    assert _block_edge(7, 4) == 7     # prime: whole matrix is the tile
+    args = _kernel_case(c=2, p=7, seed=3)
+    cand, stats = kops.fused_path_step(*args, block=4, interpret=True)
+    cand_ref, stats_ref = jax.jit(ref.fused_path_step)(*args)
+    np.testing.assert_array_equal(np.asarray(cand), np.asarray(cand_ref))
+    np.testing.assert_allclose(np.asarray(stats), np.asarray(stats_ref),
+                               rtol=1e-12)
+
+
+def test_megakernel_drives_the_engine(x64):
+    """use_pallas=True routes chunk trials through the megakernel and
+    must leave trajectories unchanged: identical per-lane iteration
+    counts and solutions matching the jnp trial path."""
+    prob = graphs.make_problem("chain", p=24, n=80, seed=2)
+    s = jnp.asarray(prob.s, jnp.float64)
+    grid = jnp.asarray(np.geomspace(0.35, 0.12, 4))
+    kw = dict(variant="cov", tol=1e-6, max_iters=300)
+    base = batch.solve_path_batched(s, grid, 0.05, **kw)
+    fused = batch.solve_path_batched(s, grid, 0.05, use_pallas=True, **kw)
+    np.testing.assert_array_equal(np.asarray(fused.iters),
+                                  np.asarray(base.iters))
+    np.testing.assert_allclose(np.asarray(fused.omega),
+                               np.asarray(base.omega), rtol=0, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# one chunk program across varying live-lane counts
+# ---------------------------------------------------------------------------
+
+def test_chunk_program_reused_across_live_lane_counts(x64, recompile_guard):
+    """The compaction contract: within one capacity tier, any number of
+    live lanes (the rest select-frozen) must hit the SAME compiled chunk
+    program — compaction changes data, never the executable."""
+    from functools import partial
+
+    from repro.core.penalty import PenaltySpec
+
+    p, c = 8, 4
+    prob = graphs.make_problem("chain", p=p, n=40, seed=1)
+    s = jnp.asarray(prob.s, jnp.float64)
+    spec = PenaltySpec("l1", jnp.full((c,), 0.2, jnp.float64),
+                       jnp.zeros((c,), jnp.float64))
+    ridge = jnp.zeros((c,), jnp.float64)
+    om0 = jnp.broadcast_to(jnp.eye(p, dtype=jnp.float64)[None], (c, p, p))
+    statics = dict(variant="cov", tol=1e-6, max_iters=300, max_ls=30,
+                   tau_schedule="restart", chunk=8, stacked=False,
+                   tau_init=1.0, use_pallas=False)
+
+    def run(n_live):
+        lanes = batch._init_lanes(s, ridge, om0, variant="cov",
+                                  stacked=False, tau_schedule="restart",
+                                  tau_init=1.0)
+        lanes = lanes._replace(done=jnp.arange(c) >= n_live)
+        out, occ = batch._path_chunk(s, ridge, lanes, spec, **statics)
+        out.omega.block_until_ready()
+        return occ
+
+    occ4 = run(c)   # warm the (capacity=4, statics) cache entry
+    with recompile_guard(chunk=batch._path_chunk):
+        occ2, occ1 = run(2), run(1)
+    assert int(np.asarray(occ4).max()) == 4
+    assert int(np.asarray(occ2).max()) == 2
+    assert int(np.asarray(occ1).max()) == 1
+
+
+# ---------------------------------------------------------------------------
+# host-BLAS stepper and pilot warm starts
+# ---------------------------------------------------------------------------
+
+def test_host_gemm_matches_xla_and_is_wave_invariant(chain48):
+    """gemm='host' replays the same flat-step recurrence through the
+    platform BLAS: solutions agree tightly with the XLA route (identical
+    iteration counts), and its wave partitioning is bit-invariant —
+    solving all lanes at once equals solving one lane per wave."""
+    if jax.default_backend() != "cpu":
+        pytest.skip("host BLAS stepper is CPU-only")
+    kw = dict(variant="cov", tol=1e-6, max_iters=400)
+    xla = batch.solve_path_batched(chain48, jnp.asarray(GRID), 0.05, **kw)
+    host = batch.solve_path_batched(chain48, jnp.asarray(GRID), 0.05,
+                                    gemm="host", **kw)
+    solo = batch.solve_path_batched(chain48, jnp.asarray(GRID), 0.05,
+                                    gemm="host", max_lanes=1, **kw)
+    np.testing.assert_array_equal(np.asarray(host.iters),
+                                  np.asarray(xla.iters))
+    np.testing.assert_allclose(np.asarray(host.omega),
+                               np.asarray(xla.omega), rtol=0, atol=1e-8)
+    np.testing.assert_array_equal(np.asarray(host.omega),
+                                  np.asarray(solo.omega))
+    np.testing.assert_array_equal(np.asarray(host.iters),
+                                  np.asarray(solo.iters))
+
+
+def test_pilot_warm_start_lanes_equal_their_sequential_twins(chain48):
+    """warm_start='pilot' must preserve the engine's exactness contract:
+    the pilot lane bit-equals a cold single-lane solve, every other lane
+    bit-equals a single-lane solve warm-started from the pilot's
+    solution."""
+    kw = dict(variant="cov", tol=1e-6, max_iters=400)
+    res, stats = batch.solve_path_batched(
+        chain48, jnp.asarray(GRID), 0.05, warm_start="pilot",
+        return_stats=True, **kw)
+    pilot = stats.pilot_lane
+    assert 0 <= pilot < len(GRID)
+    for i in (pilot, 0, len(GRID) - 1):
+        om0 = None if i == pilot else res.omega[pilot]
+        solo = batch.solve_path_batched(
+            chain48, jnp.asarray(GRID[i:i + 1]), 0.05, omega0=om0, **kw)
+        np.testing.assert_array_equal(np.asarray(res.omega[i]),
+                                      np.asarray(solo.omega[0]))
+        assert int(res.iters[i]) == int(solo.iters[0])
+        assert int(res.ls_total[i]) == int(solo.ls_total[0])
+
+
+def test_pilot_warm_start_rejects_explicit_omega0(chain48):
+    with pytest.raises(ValueError, match="pilot"):
+        batch.solve_path_batched(chain48, jnp.asarray(GRID), 0.05,
+                                 warm_start="pilot",
+                                 omega0=jnp.eye(48, dtype=jnp.float64))
+
+
+# ---------------------------------------------------------------------------
+# cost model: fit_path(mode="auto")
+# ---------------------------------------------------------------------------
+
+def test_cost_model_mode_decision():
+    from repro.core.costmodel import (choose_path_mode,
+                                      predict_batched_speedup)
+
+    grid = np.geomspace(0.4, 0.08, 8)
+    # trivial grids never batch
+    assert choose_path_mode([0.2]) == "sequential"
+    assert choose_path_mode([]) == "sequential"
+    # the tuned CPU config is predicted well past the hysteresis threshold
+    tuned = dict(tau_schedule="greedy", chunk=8, gemm="host",
+                 warm_start="pilot")
+    s_tuned = predict_batched_speedup(grid, **tuned)
+    s_plain = predict_batched_speedup(grid)
+    assert s_tuned > 1.05
+    assert choose_path_mode(grid, **tuned) == "batched"
+    # each tuned ingredient helps: the plain config predicts slower
+    assert s_tuned > s_plain
+
+
+def test_fit_path_auto_mode_routes_and_surfaces_stats(chain48):
+    from repro.estimator import ConcordEstimator, SolverConfig
+
+    est = ConcordEstimator(
+        lam1=0.2, lam2=0.05,
+        config=SolverConfig(backend="reference", variant="cov", tol=1e-5,
+                            tau_schedule="greedy", batch_chunk=8,
+                            batch_warm_start="pilot"))
+    grid = list(np.geomspace(0.4, 0.08, 8))
+    path = est.fit_path(s=chain48, n_samples=150, lam1_grid=grid,
+                        mode="auto")
+    if jax.default_backend() == "cpu":
+        assert path.mode == "batched"
+        assert path.batch_stats is not None
+        assert "compact" in path.batch_stats.summary()
+        assert path.batch_stats.summary() in path.summary()
+    # a single point can never amortize a batched program
+    single = est.fit_path(s=chain48, n_samples=150, lam1_grid=[0.2],
+                          mode="auto")
+    assert single.mode == "sequential"
+    assert single.batch_stats is None
+
+
+def test_solver_config_validates_batch_knobs():
+    from repro.estimator import SolverConfig
+
+    with pytest.raises(ValueError, match="tau_schedule"):
+        SolverConfig(tau_schedule="bogus")
+    with pytest.raises(ValueError, match="batch_schedule"):
+        SolverConfig(batch_schedule="bogus")
+    with pytest.raises(ValueError, match="batch_chunk"):
+        SolverConfig(batch_chunk=0)
+    with pytest.raises(ValueError, match="batch_max_lanes"):
+        SolverConfig(batch_max_lanes=0)
+    with pytest.raises(ValueError, match="batch_gemm"):
+        SolverConfig(batch_gemm="cublas")
+    with pytest.raises(ValueError, match="batch_warm_start"):
+        SolverConfig(batch_warm_start="bogus")
+
+
+def test_fit_batch_surfaces_run_stats():
+    from repro.estimator import fit_batch
+
+    xs = np.stack([graphs.make_problem("chain", p=16, n=60, seed=k).x
+                   for k in range(3)])
+    rep = fit_batch(x=xs, lam1=[0.2, 0.25, 0.3], backend="reference",
+                    variant="obs", tol=1e-5)
+    assert rep.stats is not None and rep.stats.n_lanes == 3
+    assert rep.stats.summary() in rep.summary()
