@@ -1,0 +1,186 @@
+"""Static-predicted vs analytic bytes-on-wire (BENCH_comm_volume.json).
+
+For every 1.5D ring product of ``comm.matmul1p5d`` / ``comm.sparse1p5d``
+and the compressed collectives of ``comm.collectives``, across a
+(P, c_x, c_omega, dtype) sweep, emits two independently derived byte
+counts per outer invocation:
+
+  * ``static_bytes``  — the comm engine's count: the schedule is traced
+    with ``make_jaxpr(axis_env=...)`` (no devices) and each collective's
+    wire bytes are summed from the jaxpr's payload shapes, permutation
+    tables and scan lengths;
+  * ``analytic_bytes`` — ``core.costmodel``'s closed-form volume (the
+    paper's W term made exact, per processor along the critical path).
+
+The two counts must MATCH EXACTLY (integer/fraction equality, no
+tolerance) for every row: this is CA303 run as a benchmark artifact, and
+the script exits 1 on any mismatch so the CI comm-volume job gates on it.
+
+Emits results/BENCH_comm_volume.csv and results/BENCH_comm_volume.json.
+
+  PYTHONPATH=src python -m benchmarks.comm_volume
+"""
+from __future__ import annotations
+
+import json
+import os
+from fractions import Fraction
+
+from .common import OUT_DIR, emit
+
+#: the sweep: replication off / one-sided / both / deep
+GRIDS = [(4, 1, 1), (8, 2, 1), (8, 1, 2), (8, 2, 2), (16, 2, 2),
+         (16, 4, 2)]
+FLAVORS = ("xtx", "omega_s", "y_x", "omega_xt")
+DTYPES = ("float64", "float32")
+MASK_BS = 2
+
+
+def _build_flavor(flavor, grid, p, n, dtype, *, masked=False, bs=MASK_BS):
+    """Zero-arg build thunk for one ring product (arrays are created
+    inside the thunk so they materialise under the engine's enable_x64)."""
+    def build():
+        import jax.numpy as jnp
+
+        from repro.comm import matmul1p5d as mm
+        from repro.comm import sparse1p5d as sp
+        from repro.core import matops
+
+        axis_env = (("i", grid.n_i), ("j", grid.c_omega),
+                    ("k", grid.c_x))
+        dt = jnp.dtype(dtype)
+        blk_x, blk_om = p // grid.n_x, p // grid.n_om
+        if flavor == "xtx":
+            x = jnp.linspace(-1.0, 1.0, n * blk_x,
+                             dtype=dt).reshape(n, blk_x)
+            return {"fn": lambda a: mm.xtx_local(a, grid), "args": (x,),
+                    "axis_env": axis_env}
+        if flavor == "omega_s":
+            om = jnp.eye(blk_om, p, dtype=dt)
+            s = jnp.ones((p, blk_x), dt)
+            if masked:
+                policy = matops.MatmulPolicy(mode="on", block_size=bs,
+                                             threshold=0.5)
+                mask = matops.block_mask(om, bs)
+                return {"fn": lambda a, m, b: sp.omega_s_local_sparse(
+                            a, m, b, grid, policy=policy,
+                            canonical="omegalike"),
+                        "args": (om, mask, s), "axis_env": axis_env}
+            return {"fn": lambda a, b: mm.omega_s_local(
+                        a, b, grid, canonical="omegalike"),
+                    "args": (om, s), "axis_env": axis_env}
+        if flavor == "y_x":
+            y = jnp.ones((blk_om, n), dt)
+            x = jnp.ones((n, blk_x), dt)
+            return {"fn": lambda a, b: mm.y_x_local(a, b, grid),
+                    "args": (y, x), "axis_env": axis_env}
+        if flavor == "omega_xt":
+            om = jnp.eye(blk_om, p, dtype=dt)
+            xt = jnp.ones((blk_x, n), dt)
+            if masked:
+                policy = matops.MatmulPolicy(mode="on", block_size=bs,
+                                             threshold=0.5)
+                mask = matops.block_mask(om, bs)
+                return {"fn": lambda a, m, b: sp.omega_xt_local_sparse(
+                            a, m, b, grid, policy=policy),
+                        "args": (om, mask, xt), "axis_env": axis_env}
+            return {"fn": lambda a, b: mm.omega_xt_local(a, b, grid),
+                    "args": (om, xt), "axis_env": axis_env}
+        raise ValueError(flavor)
+    return build
+
+
+def ring_rows():
+    from repro.analysis import commpass
+    from repro.analysis.rules import DEFAULT_PROFILE
+    from repro.comm.grid import Grid1p5D
+    from repro.core.costmodel import comm_volume
+
+    rows = []
+    for P, c_x, c_omega in GRIDS:
+        grid = Grid1p5D(P, c_x, c_omega)
+        p, n = 4 * P, 8
+        for flavor in FLAVORS:
+            for dtype in DTYPES:
+                masked_opts = ([False, True]
+                               if flavor in ("omega_s", "omega_xt")
+                               and dtype == "float64" else [False])
+                for masked in masked_opts:
+                    build = _build_flavor(flavor, grid, p, n, dtype,
+                                          masked=masked)
+                    entry = {"name": "bench", "path": "bench",
+                             "axis_names": ("i", "j", "k"),
+                             "build": build}
+                    findings, record = commpass.run_entry(
+                        entry, DEFAULT_PROFILE)
+                    vol = comm_volume(
+                        p, n, P, c_x, c_omega, flavor=flavor,
+                        dtype=dtype,
+                        masked=(masked and flavor == "omega_s"),
+                        block_size=MASK_BS)
+                    static = (None if record is None
+                              else record["static_bytes"])
+                    rows.append({
+                        "flavor": flavor + ("_masked" if masked else ""),
+                        "P": P, "c_x": c_x, "c_omega": c_omega,
+                        "p": p, "n": n, "dtype": dtype,
+                        "rounds": vol.rounds,
+                        "static_bytes": static,
+                        "analytic_bytes": str(vol.total),
+                        "ring_bytes": str(vol.ring_bytes),
+                        "finish_bytes": str(vol.finish_bytes),
+                        "match": (static is not None and not findings
+                                  and Fraction(static) == vol.total),
+                    })
+    return rows
+
+
+def collective_rows():
+    from repro.analysis import commpass
+    from repro.analysis.rules import DEFAULT_PROFILE
+    from repro.comm import collectives as cc
+
+    rows = []
+    for entry in cc.ANALYSIS_ENTRIES:
+        findings, record = commpass.run_entry(entry, DEFAULT_PROFILE)
+        contract = record["contract"] if record else {}
+        rows.append({
+            "flavor": entry["name"].rsplit(".", 1)[-1],
+            "P": cc._RING_EXTENT, "c_x": "", "c_omega": "",
+            "p": "", "n": "", "dtype": "wire-compressed",
+            "rounds": contract.get("rounds", ""),
+            "static_bytes": record and record["static_bytes"],
+            "analytic_bytes": contract.get("expected_bytes"),
+            "ring_bytes": "", "finish_bytes": "",
+            "match": (not findings and record is not None
+                      and record["static_bytes"]
+                      == contract.get("expected_bytes")),
+        })
+    return rows
+
+
+def main() -> int:
+    rows = ring_rows() + collective_rows()
+    emit("BENCH_comm_volume", rows)
+    mismatches = [r for r in rows if not r["match"]]
+    report = {
+        "rows": rows,
+        "n_rows": len(rows),
+        "n_mismatches": len(mismatches),
+        "exact_match": not mismatches,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out = os.path.join(OUT_DIR, "BENCH_comm_volume.json")
+    with open(out, "w", encoding="utf-8") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out}: {len(rows)} rows, "
+          f"{len(mismatches)} mismatch(es)")
+    if mismatches:
+        for r in mismatches:
+            print(f"MISMATCH: {r}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

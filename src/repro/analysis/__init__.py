@@ -1,15 +1,21 @@
 """JAX-aware static analysis for the solver stack.
 
-Two engines over one rule registry (:mod:`repro.analysis.rules`):
+Three engines over one rule registry (:mod:`repro.analysis.rules`):
 
 * :mod:`repro.analysis.astpass` — CA1xx, pure stdlib-``ast`` source
   rules (host calls under trace, dtype literals in f64 modules,
   collective-layer bypasses, ...);
 * :mod:`repro.analysis.jaxprpass` — CA2xx, semantic checks that trace
   the per-layer ``ANALYSIS_ENTRIES`` manifests with ``jax.make_jaxpr``
-  (f64 downcasts, recompiles, unbound psum axes).
+  (f64 downcasts, recompiles, unbound psum axes);
+* :mod:`repro.analysis.commpass` — CA3xx, SPMD collective-schedule
+  checks: the ordered ppermute/psum/all_gather trace of every entry is
+  extracted from its jaxpr (ring schedules via ``axis_env``, no devices
+  needed) and verified against declared ``COMM_CONTRACT``s, including
+  EXACT bytes-on-wire accounting vs ``core.costmodel.comm_volume``.
 
-Run it as ``python -m repro.analysis``; see README "Static analysis".
+Run it as ``python -m repro.analysis`` (installed: ``repro-analyze``);
+see README "Static analysis".
 """
 from .findings import Finding, sort_findings
 from .recompile import RecompileGuard, cache_size

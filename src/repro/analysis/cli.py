@@ -1,17 +1,29 @@
-"""``python -m repro.analysis`` — run both engines, gate on findings.
+"""``python -m repro.analysis`` (also installed as ``repro-analyze``) —
+run all three engines, gate on findings.
 
 Exit status: 0 = clean (after baseline), 1 = unsuppressed findings,
 2 = usage / internal error.  ``--format json`` (optionally with
-``--output``) emits the machine report CI uploads as an artifact.
+``--output``) emits the machine report CI uploads as an artifact; it
+includes the comm engine's extracted collective schedules and the
+static-vs-analytic volume table.
+
+``--changed [BASE]`` restricts the AST engine to files touched since
+``BASE`` (``git diff --name-only``, default HEAD) that lie under the
+scan targets, for fast pre-commit runs.  The jaxpr and comm engines ALWAYS run whole-program: they trace
+entry-point manifests, and an entry's jaxpr pulls in every layer it
+calls — there is no meaningful per-file subset of a traced program.
+Stale-baseline gating is skipped under ``--changed`` (a partial scan
+cannot tell a fixed finding from an unscanned one).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 from pathlib import Path
 
-from . import astpass, jaxprpass
+from . import astpass, commpass, jaxprpass
 from .baseline import load_baseline, split_by_baseline, write_baseline
 from .findings import sort_findings
 from .rules import DEFAULT_PROFILE, all_rules, profile_for_path
@@ -36,9 +48,31 @@ def iter_python_files(targets, root: Path):
                 yield f
 
 
-def run_ast_engine(targets, root: Path) -> list:
+def changed_files(root: Path, base: str, targets=DEFAULT_TARGETS) -> list:
+    """Python files ``git diff --name-only BASE`` reports under the scan
+    targets (files outside them — e.g. tests/ fixture code that trips
+    rules on purpose — are excluded, matching the full-scan roots)."""
+    out = subprocess.run(
+        ["git", "diff", "--name-only", base, "--"],
+        cwd=root, capture_output=True, text=True, check=True).stdout
+    roots = [((root / t) if not Path(t).is_absolute() else Path(t)).resolve()
+             for t in targets]
+    files = []
+    for line in out.splitlines():
+        f = root / line
+        if not (line.endswith(".py") and f.is_file()):
+            continue
+        rf = f.resolve()
+        if any(r == rf or r in rf.parents for r in roots):
+            files.append(f)
+    return files
+
+
+def run_ast_engine(targets, root: Path, *, files=None) -> list:
     findings = []
-    for f in iter_python_files(targets, root):
+    if files is None:
+        files = iter_python_files(targets, root)
+    for f in files:
         try:
             rel = f.relative_to(root).as_posix()
         except ValueError:
@@ -52,18 +86,31 @@ def run_jaxpr_engine() -> list:
     return jaxprpass.run_entries(load_entries(), DEFAULT_PROFILE)
 
 
+def run_comm_engine():
+    """Returns (findings, schedule_records)."""
+    from .manifest import load_entries
+    return commpass.run_entries(load_entries(), DEFAULT_PROFILE)
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="JAX-aware static analysis for the repro solver stack "
-                    "(AST rules CA1xx, jaxpr rules CA2xx).")
+                    "(AST rules CA1xx, jaxpr rules CA2xx, collective-"
+                    "schedule rules CA3xx).")
     ap.add_argument("targets", nargs="*", default=list(DEFAULT_TARGETS),
                     help="files/directories to scan with the AST engine "
                          f"(default: {' '.join(DEFAULT_TARGETS)})")
     ap.add_argument("--root", default=".",
                     help="repo root paths are resolved against (default: .)")
-    ap.add_argument("--engine", choices=("ast", "jaxpr", "all"),
+    ap.add_argument("--engine", choices=("ast", "jaxpr", "comm", "all"),
                     default="all")
+    ap.add_argument("--changed", nargs="?", const="HEAD", default=None,
+                    metavar="BASE",
+                    help="AST engine: only scan files changed since BASE "
+                         "(git diff --name-only; default HEAD). jaxpr/comm "
+                         "engines still run whole-program; stale-baseline "
+                         "gating is skipped")
     ap.add_argument("--format", choices=("human", "json"), default="human")
     ap.add_argument("--output", default=None,
                     help="write the report here as well as stdout")
@@ -77,9 +124,10 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
-def _render_report(new, suppressed, stale, fmt: str) -> str:
+def _render_report(new, suppressed, stale, fmt: str,
+                   comm_schedules=None) -> str:
     if fmt == "json":
-        return json.dumps({
+        report = {
             "findings": [f.to_json() for f in new],
             "suppressed": [f.to_json() for f in suppressed],
             "stale_baseline": [list(e) for e in stale],
@@ -88,7 +136,10 @@ def _render_report(new, suppressed, stale, fmt: str) -> str:
                 "suppressed": len(suppressed),
                 "stale_baseline": len(stale),
             },
-        }, indent=2)
+        }
+        if comm_schedules is not None:
+            report["comm_schedules"] = comm_schedules
+        return json.dumps(report, indent=2)
     lines = [f.render() for f in new]
     if stale:
         lines.append("")
@@ -113,12 +164,20 @@ def main(argv=None) -> int:
 
     root = Path(args.root).resolve()
     findings = []
+    comm_schedules = None
     try:
         if args.engine in ("ast", "all"):
-            findings.extend(run_ast_engine(args.targets, root))
+            files = None
+            if args.changed is not None:
+                files = changed_files(root, args.changed, args.targets)
+            findings.extend(run_ast_engine(args.targets, root, files=files))
         if args.engine in ("jaxpr", "all"):
             findings.extend(run_jaxpr_engine())
-    except (FileNotFoundError, ImportError, AttributeError, ValueError) as e:
+        if args.engine in ("comm", "all"):
+            comm_findings, comm_schedules = run_comm_engine()
+            findings.extend(comm_findings)
+    except (FileNotFoundError, ImportError, AttributeError, ValueError,
+            subprocess.CalledProcessError) as e:
         print(f"repro.analysis: error: {e}", file=sys.stderr)
         return 2
     findings = sort_findings(findings)
@@ -132,7 +191,10 @@ def main(argv=None) -> int:
 
     baseline = load_baseline(baseline_path)
     new, suppressed, stale = split_by_baseline(findings, baseline)
-    report = _render_report(new, suppressed, stale, args.format)
+    if args.changed is not None:
+        stale = []      # a partial scan cannot adjudicate staleness
+    report = _render_report(new, suppressed, stale, args.format,
+                            comm_schedules)
     print(report)
     if args.output:
         Path(args.output).parent.mkdir(parents=True, exist_ok=True)

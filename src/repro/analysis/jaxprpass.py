@@ -30,7 +30,15 @@ Entry schema (each item of a module's ``ANALYSIS_ENTRIES`` list)::
           "watched": {"label": jitted_fn},    # caches to snapshot
           "calls": [thunk, ...],              # calls[0] warms, rest must
       },                                      # not grow any cache
-    }
+      "skip": ("CA201", ...),                 # optional per-entry opt-outs
+    }                                         # (a declared narrowing lives
+                                              # next to its contract)
+
+The build spec may also carry ``"axis_env"`` (a tuple of (axis, size)
+pairs passed to ``make_jaxpr``) so SPMD ring functions trace their
+multi-device schedules without devices, and ``"axis_sizes"`` /
+``"comm"`` consumed by the comm engine (see
+:mod:`repro.analysis.commpass`).
 
 ``build``/``reuse`` are zero-arg thunks so importing a layer module never
 builds arrays or touches the backend.
@@ -186,24 +194,29 @@ def run_entry(entry: dict, profile: Profile) -> list:
     from jax.experimental import enable_x64
 
     findings = []
-    want_trace = bool({"CA201", "CA203"} & profile.rules)
-    if want_trace:
+    skip = set(entry.get("skip") or ())
+    active = ({"CA201", "CA202", "CA203"} & profile.rules) - skip
+    if {"CA201", "CA203"} & active:
         try:
             with enable_x64():
                 spec = entry["build"]()
                 ctx = spec.get("ctx") or nullcontext
                 fn, args = spec["fn"], tuple(spec.get("args", ()))
                 kwargs = dict(spec.get("kwargs", {}))
+                # ring entries trace their SPMD schedules without devices
+                # by binding the mesh axes via make_jaxpr's axis_env
+                axis_env = spec.get("axis_env")
+                mk = {} if axis_env is None else {"axis_env": list(axis_env)}
                 with ctx():
                     jaxpr = jax.make_jaxpr(
-                        lambda *a: fn(*a, **kwargs))(*args)
+                        lambda *a: fn(*a, **kwargs), **mk)(*args)
         except Exception as e:           # noqa: BLE001 - report, don't die
             return [_error_finding(entry, "trace", e)]
-        if "CA201" in profile.rules:
+        if "CA201" in active:
             findings.extend(check_downcasts(entry, jaxpr))
-        if "CA203" in profile.rules:
+        if "CA203" in active:
             findings.extend(check_collective_axes(entry, jaxpr))
-    if "CA202" in profile.rules and entry.get("reuse") is not None:
+    if "CA202" in active and entry.get("reuse") is not None:
         try:
             with enable_x64():
                 findings.extend(check_reuse(entry))

@@ -18,6 +18,9 @@ MANIFEST_MODULES = (
     "repro.core.distributed",   # 1.5D shard_map drivers (cov + obs)
     "repro.data.gram",          # streaming Gram reduce + panel compute core
     "repro.kernels.ops",        # Pallas prox dispatch (interpret mode)
+    "repro.comm.matmul1p5d",    # 1.5D ring products (axis_env schedules)
+    "repro.comm.sparse1p5d",    # masked ring products (mask on the wire)
+    "repro.comm.collectives",   # compressed wire formats (int8 ring, bf16)
 )
 
 

@@ -7,6 +7,13 @@ Every check either engine can emit is declared here with a stable id:
   * ``CA2xx`` — jaxpr engine (``jaxprpass``): semantic contracts checked
     by tracing the entry-point manifest with ``jax.make_jaxpr`` at
     representative shapes.
+  * ``CA3xx`` — comm engine (``commpass``): SPMD collective-schedule
+    contracts — the ordered ppermute/psum/all_gather trace of each
+    manifest entry is extracted from its jaxpr (multi-device ring
+    schedules via ``axis_env`` tracing, no devices needed) and checked
+    for deadlock signatures, permutation validity, declared
+    ``COMM_CONTRACT``s and exact bytes-on-wire accounting against
+    ``core.costmodel.comm_volume``.
 
 A :class:`Profile` is the set of rule ids active for a directory tree.
 ``src/repro`` runs the full ``default`` profile; ``benchmarks/`` /
@@ -29,7 +36,7 @@ from dataclasses import dataclass, field
 class Rule:
     id: str
     name: str
-    engine: str             # "ast" | "jaxpr"
+    engine: str             # "ast" | "jaxpr" | "comm"
     description: str
 
 
@@ -39,7 +46,7 @@ _RULES: dict[str, Rule] = {}
 def register_rule(rule: Rule, *, overwrite: bool = False) -> Rule:
     if not overwrite and rule.id in _RULES:
         raise ValueError(f"rule {rule.id} already registered")
-    if rule.engine not in ("ast", "jaxpr"):
+    if rule.engine not in ("ast", "jaxpr", "comm"):
         raise ValueError(f"unknown engine {rule.engine!r}")
     _RULES[rule.id] = rule
     return rule
@@ -135,6 +142,57 @@ register_rule(Rule(
     "bound to the wrong mesh) at run time",
 ))
 
+register_rule(Rule(
+    "CA300", "comm-entry-error", "comm",
+    "a manifest entry failed to build/trace for the comm engine: the "
+    "collective-schedule checks did not run for that entry point "
+    "(always reported — a broken entry must not silently skip)",
+))
+register_rule(Rule(
+    "CA301", "branch-divergent-schedule", "comm",
+    "lax.cond/lax.switch branches inside a traced SPMD region execute "
+    "different collective sequences: devices taking different branches "
+    "post mismatched collectives — the static signature of a distributed "
+    "deadlock (hoist the collectives out of the branch, or make every "
+    "branch post the identical sequence)",
+))
+register_rule(Rule(
+    "CA302", "non-bijective-ppermute", "comm",
+    "ppermute permutation table is not a bijection over the bound mesh "
+    "axis extent (duplicate source/destination, out-of-range rank, or — "
+    "under a declared COMM_CONTRACT — partial ring coverage): data is "
+    "silently dropped/zeroed instead of rotated",
+))
+register_rule(Rule(
+    "CA303", "comm-volume-mismatch", "comm",
+    "statically derived bytes-on-wire of the traced collective schedule "
+    "(ring rounds x block bytes + team psum/allgather bytes) does not "
+    "equal the analytic core.costmodel.comm_volume the COMM_CONTRACT "
+    "declares: an extra collective, a missing round or a widened wire "
+    "dtype crept into the schedule",
+))
+register_rule(Rule(
+    "CA304", "redundant-collective", "comm",
+    "collective that moves bytes for nothing: psum of a value that is "
+    "already the result of a psum over the same axes, or back-to-back "
+    "ppermutes over the same axes whose intermediate has no other "
+    "consumer (compose the permutation tables into one hop)",
+))
+register_rule(Rule(
+    "CA305", "comm-contract-violation", "comm",
+    "traced schedule disagrees with the module's declared COMM_CONTRACT: "
+    "a collective binds an undeclared axis, posts an undeclared "
+    "collective kind, or a ring scan runs a different number of rounds "
+    "than the contract declares",
+))
+register_rule(Rule(
+    "CA306", "wire-dtype-policy", "comm",
+    "collective ships a payload dtype the COMM_CONTRACT does not allow "
+    "on the wire (e.g. float64 through a path whose contract declares a "
+    "compressed bf16/int8 wire format): the declared bytes-on-wire "
+    "budget silently multiplies",
+))
+
 
 # ---------------------------------------------------------------------------
 # profiles
@@ -142,13 +200,14 @@ register_rule(Rule(
 
 AST_RULES = frozenset(r.id for r in all_rules() if r.engine == "ast")
 JAXPR_RULES = frozenset(r.id for r in all_rules() if r.engine == "jaxpr")
+COMM_RULES = frozenset(r.id for r in all_rules() if r.engine == "comm")
 
 
 @dataclass(frozen=True)
 class Profile:
     """The rule subset + per-rule knobs active for one directory tree."""
     name: str
-    rules: frozenset = AST_RULES | JAXPR_RULES
+    rules: frozenset = AST_RULES | JAXPR_RULES | COMM_RULES
     # modules under the f64 accumulation contract (CA104), matched as
     # posix path suffixes
     f64_modules: tuple = ()
@@ -186,7 +245,7 @@ COLLECTIVE_LAYER = (
 
 DEFAULT_PROFILE = Profile(
     name="default",
-    rules=AST_RULES | JAXPR_RULES,
+    rules=AST_RULES | JAXPR_RULES | COMM_RULES,
     f64_modules=F64_CONTRACT_MODULES,
     collective_layer=COLLECTIVE_LAYER,
 )

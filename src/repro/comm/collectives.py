@@ -127,3 +127,84 @@ def ring_allreduce_int8(x, axis: str):
     out = buf.reshape(-1)
     out = out[:x.size] if pad else out
     return out.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# declared collective schedules + analysis manifest (repro.analysis)
+# ---------------------------------------------------------------------------
+# The whole point of this module is the WIRE FORMAT, so the contracts pin
+# it: the explicit ring may ship int8 chunks and operand-dtype scales /
+# reduced chunks (never a full-width payload per round beyond those), and
+# the bf16 psum may ship bfloat16 only — an f64 payload through either
+# path trips CA306 and the exact CA303 byte budget.  The int8 ring's
+# reduce-scatter phase is (extent-1) scan rounds of two ppermutes over a
+# single full-ring table, declared below and traced under axis_env.
+
+_RING_AXIS, _RING_EXTENT = "dp", 4
+_RING_SIZE = 10                 # deliberately not divisible: pads to 12
+_PSUM_SIZE = 24
+
+
+def _ring_contract():
+    from ..core.costmodel import ring_allreduce_int8_volume
+    from .contract import CommContract
+    return CommContract(
+        entry="comm.collectives.ring_allreduce_int8",
+        axes=(_RING_AXIS,), kinds=("ppermute", "all_gather"),
+        rounds=lambda size, extent: extent - 1,
+        wire=("int8", "operand"),
+        volume=lambda size, extent: ring_allreduce_int8_volume(size, extent),
+        volume_class="int8 reduce-scatter ring + f64 allgather")
+
+
+def _bf16_psum_contract():
+    from ..core.costmodel import compressed_psum_volume
+    from .contract import CommContract
+    return CommContract(
+        entry="comm.collectives.compressed_psum[bf16]",
+        axes=(_RING_AXIS,), kinds=("psum",),
+        wire=("bfloat16",),
+        volume=lambda size, extent: compressed_psum_volume(
+            size, extent, method="bf16"),
+        volume_class="bf16 all-reduce")
+
+
+COMM_CONTRACT = {
+    "ring_allreduce_int8": _ring_contract(),
+    "compressed_psum_bf16": _bf16_psum_contract(),
+}
+
+
+def _entry_ring_int8():
+    x = jnp.linspace(-3.0, 3.0, _RING_SIZE, dtype=jnp.float64)
+    return {"fn": lambda a: ring_allreduce_int8(a, _RING_AXIS),
+            "args": (x,), "axis_env": ((_RING_AXIS, _RING_EXTENT),)}
+
+
+def _entry_bf16_psum():
+    g = {"grad": jnp.linspace(0.0, 1.0, _PSUM_SIZE,
+                              dtype=jnp.float64).reshape(6, 4)}
+    return {"fn": lambda t: compressed_psum(t, _RING_AXIS,
+                                            method="bf16")[0],
+            "args": (g,), "axis_env": ((_RING_AXIS, _RING_EXTENT),)}
+
+
+_PATH = "src/repro/comm/collectives.py"
+ANALYSIS_ENTRIES = [
+    {"name": "comm.collectives.ring_allreduce_int8", "path": _PATH,
+     "axis_names": (_RING_AXIS,), "build": _entry_ring_int8,
+     "comm": lambda: {"contract": COMM_CONTRACT["ring_allreduce_int8"],
+                      "params": {"size": _RING_SIZE,
+                                 "extent": _RING_EXTENT}},
+     # the quantizer's f64 -> int8/f32 casts ARE the feature here; the
+     # wire policy (CA306) and exact byte budget (CA303) take over from
+     # the blanket no-narrowing rule
+     "skip": ("CA201",)},
+    {"name": "comm.collectives.compressed_psum_bf16", "path": _PATH,
+     "axis_names": (_RING_AXIS,), "build": _entry_bf16_psum,
+     "comm": lambda: {"contract": COMM_CONTRACT["compressed_psum_bf16"],
+                      "params": {"size": _PSUM_SIZE,
+                                 "extent": _RING_EXTENT}},
+     # f64 -> bf16 on the wire is this path's declared compression
+     "skip": ("CA201",)},
+]

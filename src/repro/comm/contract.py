@@ -1,0 +1,73 @@
+"""Declared collective-schedule contracts (``COMM_CONTRACT``).
+
+The paper's headline claim is *communication avoidance*: the 1.5D
+schedules move provably fewer words than a 2D layout, and the whole
+point of the replication factor c is the words-vs-memory trade.  A
+refactor that silently adds an all-reduce, drops a ring round, or widens
+a wire dtype destroys that property without failing a single numeric
+test — so every module that posts collectives DECLARES its schedule,
+and the ``repro.analysis`` comm engine (rules CA301–CA306) verifies the
+declaration against the schedule actually traced out of the jaxpr.
+
+A module exports ``COMM_CONTRACT``, a dict mapping the entry-point
+function name to a :class:`CommContract`.  The module's
+``ANALYSIS_ENTRIES`` build specs reference these contracts (together
+with the shape parameters the contract's callables are evaluated at),
+so the declaration lives WITH the schedule it describes and the
+analysis package only ever *verifies*, never infers.
+
+Conventions (shared with ``core.costmodel.collective_wire_bytes``):
+bytes-on-wire are counted per processor along the critical path, the
+paper's W measure — a ppermute ships its payload once (zero if the
+permutation is the identity), a ring all-gather over extent E ships
+(E-1) input shards, a bandwidth-optimal all-reduce ships 2.(E-1)/E
+payloads, an all-to-all / reduce-scatter ships (E-1)/E.  Counts are
+exact :class:`fractions.Fraction`s so the static-vs-analytic
+cross-check in CA303 is an equality, not a tolerance.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+@dataclass(frozen=True)
+class CommContract:
+    """One entry point's declared collective schedule.
+
+    Callable fields receive the entry's ``params`` dict (spread as
+    keyword arguments), so a contract can be exact at any traced shape.
+    """
+
+    #: dotted name of the entry point this contract binds to (display)
+    entry: str
+    #: mesh axes the schedule may bind; None = inherit the manifest
+    #: entry's declared ``axis_names``
+    axes: tuple[str, ...] | None = None
+    #: collective primitive names the schedule may post (None = any)
+    kinds: tuple[str, ...] | None = None
+    #: expected ring length of every ppermute-bearing scan, as an int or
+    #: ``params -> int`` (None = no round contract)
+    rounds: int | Callable[..., int] | None = None
+    #: dtypes allowed on the wire.  Literal dtype names plus two
+    #: wildcards: "operand" (any dtype of the entry's operands — the
+    #: solve dtype) and "mask" (``core.matops.MASK_DTYPE``, int8).
+    #: None = no wire policy (CA306 skipped).
+    wire: tuple[str, ...] | None = None
+    #: expected total bytes-on-wire per invocation, as ``params ->
+    #: Fraction|int`` (None = no volume contract, CA303 skipped)
+    volume: Callable[..., object] | None = None
+    #: human label of the schedule family, e.g. "ring+allgather"
+    volume_class: str = ""
+    #: free-form knobs (e.g. require_full_ring for CA302)
+    extra: dict = field(default_factory=dict)
+
+    def expected_rounds(self, params: dict) -> int | None:
+        if self.rounds is None or isinstance(self.rounds, int):
+            return self.rounds
+        return int(self.rounds(**params))
+
+    def expected_volume(self, params: dict):
+        if self.volume is None:
+            return None
+        return self.volume(**params)

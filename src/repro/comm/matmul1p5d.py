@@ -280,3 +280,123 @@ def transpose_xlike(w, grid: Grid1p5D, mesh):
 def transpose_omegalike(z, grid: Grid1p5D, mesh):
     fn = partial(transpose_omegalike_local, grid=grid)
     return _smap(grid, mesh, fn, (SPEC_OM,), SPEC_OM)(z)
+
+
+# ---------------------------------------------------------------------------
+# declared collective schedules + analysis manifest (repro.analysis)
+# ---------------------------------------------------------------------------
+# Every ring product above DECLARES its schedule: which axes it may bind,
+# which collective kinds it may post, how many rotation rounds its ring
+# scan runs, what may travel the wire, and — exactly — how many bytes one
+# invocation moves (core.costmodel.comm_volume, the analytic side of the
+# paper's W term).  The comm engine (rules CA301-CA306) verifies the
+# declarations against the schedule it extracts from the traced jaxpr, so
+# a refactor that adds a collective, drops a round, or widens the wire
+# dtype fails `python -m repro.analysis` before it ever runs distributed.
+
+def _contract(entry, flavor, *, kinds, masked=False, block_size=None,
+              canonical=None):
+    from ..core.costmodel import comm_volume
+    from .contract import CommContract
+
+    def vol(**kw):
+        return comm_volume(flavor=flavor, masked=masked,
+                           block_size=block_size, canonical=canonical, **kw)
+
+    return CommContract(
+        entry=entry, axes=AXES, kinds=kinds,
+        rounds=lambda **kw: vol(**kw).rounds,
+        wire=("operand", "mask") if masked else ("operand",),
+        volume=lambda **kw: vol(**kw).total,
+        volume_class=("ring+allgather" if flavor != "omega_xt"
+                      else "ring+psum") + (" masked" if masked else ""))
+
+
+COMM_CONTRACT = {
+    "xtx_local": _contract(
+        "comm.matmul1p5d.xtx_local", "xtx",
+        kinds=("ppermute", "all_gather")),
+    "omega_s_local": _contract(
+        "comm.matmul1p5d.omega_s_local", "omega_s",
+        kinds=("ppermute", "all_gather")),
+    "y_x_local": _contract(
+        "comm.matmul1p5d.y_x_local", "y_x",
+        kinds=("ppermute", "all_gather")),
+    "omega_xt_local": _contract(
+        "comm.matmul1p5d.omega_xt_local", "omega_xt",
+        kinds=("ppermute", "psum")),
+}
+
+#: the representative multi-device schedule every entry traces: P=8 with
+#: both replication factors ON (c_x = c_omega = 2) so staggers, shifts
+#: and team finishes all actually move bytes; p % P == 0 keeps every
+#: layout constraint (grid.pad_p)
+_TRACE_GRID = dict(n_devices=8, c_x=2, c_omega=2)
+_TRACE_P, _TRACE_N = 32, 12
+
+
+def _trace_setup():
+    grid = Grid1p5D(**_TRACE_GRID)
+    env = (("i", grid.n_i), ("j", grid.c_omega), ("k", grid.c_x))
+    params = dict(p=_TRACE_P, n=_TRACE_N, dtype="float64", **_TRACE_GRID)
+    return grid, env, params
+
+
+def _entry_xtx():
+    grid, env, _ = _trace_setup()
+    x_loc = jnp.linspace(-1.0, 1.0, _TRACE_N * (_TRACE_P // grid.n_x),
+                         dtype=jnp.float64).reshape(_TRACE_N, -1)
+    return {"fn": lambda x: xtx_local(x, grid), "args": (x_loc,),
+            "axis_env": env}
+
+
+def _entry_omega_s():
+    grid, env, _ = _trace_setup()
+    blk_om, blk_x = _TRACE_P // grid.n_om, _TRACE_P // grid.n_x
+    om = jnp.linspace(0.0, 1.0, blk_om * _TRACE_P,
+                      dtype=jnp.float64).reshape(blk_om, _TRACE_P)
+    s = jnp.linspace(0.0, 1.0, _TRACE_P * blk_x,
+                     dtype=jnp.float64).reshape(_TRACE_P, blk_x)
+    return {"fn": lambda a, b: omega_s_local(a, b, grid,
+                                             canonical="omegalike"),
+            "args": (om, s), "axis_env": env}
+
+
+def _entry_y_x():
+    grid, env, _ = _trace_setup()
+    blk_om, blk_x = _TRACE_P // grid.n_om, _TRACE_P // grid.n_x
+    y = jnp.ones((blk_om, _TRACE_N), jnp.float64)
+    x_loc = jnp.ones((_TRACE_N, blk_x), jnp.float64)
+    return {"fn": lambda a, b: y_x_local(a, b, grid), "args": (y, x_loc),
+            "axis_env": env}
+
+
+def _entry_omega_xt():
+    grid, env, _ = _trace_setup()
+    blk_om, blk_x = _TRACE_P // grid.n_om, _TRACE_P // grid.n_x
+    om = jnp.ones((blk_om, _TRACE_P), jnp.float64)
+    xt = jnp.ones((blk_x, _TRACE_N), jnp.float64)
+    return {"fn": lambda a, b: omega_xt_local(a, b, grid), "args": (om, xt),
+            "axis_env": env}
+
+
+def _comm(fn_name):
+    _, _, params = _trace_setup()
+    return {"contract": COMM_CONTRACT[fn_name], "params": params}
+
+
+_PATH = "src/repro/comm/matmul1p5d.py"
+ANALYSIS_ENTRIES = [
+    {"name": "comm.matmul1p5d.xtx_ring", "path": _PATH,
+     "axis_names": AXES, "build": _entry_xtx,
+     "comm": lambda: _comm("xtx_local")},
+    {"name": "comm.matmul1p5d.omega_s_ring", "path": _PATH,
+     "axis_names": AXES, "build": _entry_omega_s,
+     "comm": lambda: _comm("omega_s_local")},
+    {"name": "comm.matmul1p5d.y_x_ring", "path": _PATH,
+     "axis_names": AXES, "build": _entry_y_x,
+     "comm": lambda: _comm("y_x_local")},
+    {"name": "comm.matmul1p5d.omega_xt_ring", "path": _PATH,
+     "axis_names": AXES, "build": _entry_omega_xt,
+     "comm": lambda: _comm("omega_xt_local")},
+]

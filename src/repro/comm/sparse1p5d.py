@@ -64,3 +64,90 @@ def omega_xt_local_sparse(omega_rows, omega_mask, xt_loc, grid: Grid1p5D, *,
     """
     return mm.omega_xt_local(omega_rows, xt_loc, grid, scale=scale,
                              omega_mask=omega_mask, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# declared collective schedules + analysis manifest (repro.analysis)
+# ---------------------------------------------------------------------------
+# The masked gather flavor ships the int8 occupancy mask around the ring
+# with Omega (wire = operand + mask); the masked reduce flavor ships
+# NOTHING extra — the mask is fixed and sliced locally.  Both facts are
+# part of the declared volume (core.costmodel.comm_volume masked=...),
+# so a refactor that starts rotating the reduce-flavor mask, or ships it
+# at the operand dtype, fails the CA303/CA306 gates.
+
+def _sparse_contract(entry, flavor, block_size):
+    from ..core.costmodel import comm_volume
+    from .contract import CommContract
+
+    def vol(**kw):
+        # block_size rides in via the entry params (kw)
+        return comm_volume(flavor=flavor, masked=(flavor == "omega_s"), **kw)
+
+    return CommContract(
+        entry=entry, axes=mm.AXES,
+        kinds=(("ppermute", "all_gather") if flavor == "omega_s"
+               else ("ppermute", "psum")),
+        rounds=lambda **kw: vol(**kw).rounds,
+        wire=("operand", "mask"),
+        volume=lambda **kw: vol(**kw).total,
+        volume_class=("ring+allgather masked" if flavor == "omega_s"
+                      else "ring+psum masked-local"))
+
+
+_TRACE_BS = 4   # mask tile edge of the traced entries (divides blk_x = 8)
+
+COMM_CONTRACT = {
+    "omega_s_local_sparse": _sparse_contract(
+        "comm.sparse1p5d.omega_s_local_sparse", "omega_s", _TRACE_BS),
+    "omega_xt_local_sparse": _sparse_contract(
+        "comm.sparse1p5d.omega_xt_local_sparse", "omega_xt", _TRACE_BS),
+}
+
+
+def _sparse_setup():
+    import jax.numpy as jnp
+    grid, env, params = mm._trace_setup()
+    p, n = mm._TRACE_P, mm._TRACE_N
+    policy = matops.MatmulPolicy(mode="on", block_size=_TRACE_BS,
+                                 threshold=0.5)
+    blk_om, blk_x = p // grid.n_om, p // grid.n_x
+    om = jnp.eye(blk_om, p, dtype=jnp.float64)
+    mask = matops.block_mask(om, _TRACE_BS)
+    return grid, env, params, policy, (om, mask, blk_x, n, p)
+
+
+def _entry_omega_s_sparse():
+    import jax.numpy as jnp
+    grid, env, _, policy, (om, mask, blk_x, n, p) = _sparse_setup()
+    s = jnp.linspace(0.0, 1.0, p * blk_x,
+                     dtype=jnp.float64).reshape(p, blk_x)
+    return {"fn": lambda a, m, b: omega_s_local_sparse(
+                a, m, b, grid, policy=policy, canonical="omegalike"),
+            "args": (om, mask, s), "axis_env": env}
+
+
+def _entry_omega_xt_sparse():
+    import jax.numpy as jnp
+    grid, env, _, policy, (om, mask, blk_x, n, p) = _sparse_setup()
+    xt = jnp.ones((blk_x, n), jnp.float64)
+    return {"fn": lambda a, m, b: omega_xt_local_sparse(
+                a, m, b, grid, policy=policy),
+            "args": (om, mask, xt), "axis_env": env}
+
+
+def _comm(fn_name):
+    _, _, params = mm._trace_setup()
+    return {"contract": COMM_CONTRACT[fn_name],
+            "params": dict(params, block_size=_TRACE_BS)}
+
+
+_PATH = "src/repro/comm/sparse1p5d.py"
+ANALYSIS_ENTRIES = [
+    {"name": "comm.sparse1p5d.omega_s_ring_sparse", "path": _PATH,
+     "axis_names": mm.AXES, "build": _entry_omega_s_sparse,
+     "comm": lambda: _comm("omega_s_local_sparse")},
+    {"name": "comm.sparse1p5d.omega_xt_ring_sparse", "path": _PATH,
+     "axis_names": mm.AXES, "build": _entry_omega_xt_sparse,
+     "comm": lambda: _comm("omega_xt_local_sparse")},
+]

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from fractions import Fraction
 from typing import Iterable
 
 
@@ -442,3 +443,175 @@ def calibrate_block_model(rows, machine: Machine | None = None
     return BlockSparseModel(dense_eff=max(dense_eff, 1e-12),
                             sparse_eff=1.0 / inv_sparse_eff,
                             gather_eff=1.0 / inv_gather_eff)
+
+
+# ---------------------------------------------------------------------------
+# exact communication-volume accounting (CA303 analytic side)
+# ---------------------------------------------------------------------------
+# Where Lemmas 3.4/3.5 above model asymptotic words moved as float cost
+# terms, this layer is EXACT: per-processor bytes-on-wire along the
+# critical path of one invocation, as `fractions.Fraction`s, so the comm
+# engine (`repro.analysis.commpass`, rule CA303) can cross-check the
+# schedule it statically extracts from a jaxpr against these formulas
+# with == instead of a tolerance.
+#
+# Conventions (one per collective primitive, extent E = product of the
+# bound mesh-axis sizes):
+#   ppermute      payload bytes once — ZERO if the permutation table is
+#                 the identity (no pair moves: jax still emits the eqn,
+#                 the wire does not see it)
+#   psum/pmin/..  bandwidth-optimal all-reduce: 2 (E-1)/E * payload
+#   all_gather    ring gather: (E-1) * payload(input shard)
+#   all_to_all / reduce_scatter / psum_scatter: (E-1)/E * payload
+# E <= 1 is always zero bytes.
+
+#: wire width of the dtypes the schedules ship (kept jnp-free on purpose:
+#: the analytic side must not depend on a backend being importable)
+DTYPE_BYTES = {
+    "float64": 8, "float32": 4, "bfloat16": 2, "float16": 2,
+    "int64": 8, "int32": 4, "int16": 2, "int8": 1, "uint8": 1,
+    "bool": 1,
+}
+
+_REDUCE_PRIMS = frozenset({"psum", "pmin", "pmax", "psum_invariant"})
+_GATHER_PRIMS = frozenset({"all_gather", "all_gather_invariant"})
+_SCATTER_PRIMS = frozenset({"all_to_all", "reduce_scatter", "psum_scatter"})
+
+
+def collective_wire_bytes(prim: str, payload_bytes, extent,
+                          *, moves: bool = True) -> Fraction:
+    """Per-processor critical-path bytes of ONE collective invocation."""
+    b = Fraction(payload_bytes)
+    if extent is None or extent <= 1:
+        return Fraction(0)
+    if prim in ("ppermute", "pbroadcast"):
+        return b if moves else Fraction(0)
+    if prim in _REDUCE_PRIMS:
+        return Fraction(2 * (extent - 1), extent) * b
+    if prim in _GATHER_PRIMS:
+        return (extent - 1) * b
+    if prim in _SCATTER_PRIMS:
+        return Fraction(extent - 1, extent) * b
+    raise ValueError(f"no wire-byte convention for primitive {prim!r}")
+
+
+@dataclass(frozen=True)
+class CommVolume:
+    """Exact per-processor bytes of one 1.5D product invocation."""
+    flavor: str
+    rounds: int              # ring-scan length (Alg. 4 rotation rounds)
+    ring_bytes: Fraction     # stagger + per-round shift ppermutes
+    finish_bytes: Fraction   # team all_gather (gather) / psum (reduce)
+
+    @property
+    def total(self) -> Fraction:
+        return self.ring_bytes + self.finish_bytes
+
+
+def _perm_moves(perm) -> int:
+    """1 if the ppermute actually puts bytes on a wire, else 0."""
+    return int(any(s != d for s, d in perm))
+
+
+def comm_volume(p: int, n: int, n_devices: int, c_x: int, c_omega: int, *,
+                flavor: str, dtype: str = "float64",
+                canonical: str | None = None, masked: bool = False,
+                block_size: int | None = None) -> CommVolume:
+    """Exact bytes-on-wire of one 1.5D matmul (paper Algorithm 4).
+
+    ``flavor`` is one of the four ring products of ``comm.matmul1p5d``:
+
+      * ``"xtx"``      gather flavor, S = X^T X        (Cov line 2)
+      * ``"omega_s"``  gather flavor, W = Omega S      (Cov; ``canonical``
+                       "omegalike" standalone / "xlike" inside the driver;
+                       ``masked`` adds the rotating int8 occupancy mask)
+      * ``"y_x"``      gather flavor, Z = Y X          (Obs line 4)
+      * ``"omega_xt"`` reduce flavor, Y = Omega X^T    (Obs lines 2/10;
+                       ``masked`` adds NOTHING — the mask is fixed and
+                       sliced locally, it never rides the ring)
+
+    Stagger/shift movement is decided by constructing the very same
+    permutation tables the schedule uses (``comm.grid.Grid1p5D``) and
+    asking whether any pair moves — the closed-form identity conditions
+    are full of corner cases (e.g. the xtx stagger IS the identity at
+    c_x = P even though c_x > 1) and getting one wrong here would make
+    the CA303 gate cry wolf.
+    """
+    from ..comm.grid import Grid1p5D  # lazy: core must stay importable alone
+
+    g = Grid1p5D(n_devices, c_x, c_omega)
+    w = DTYPE_BYTES[dtype]
+    n_x, n_om = g.n_x, g.n_om
+    blk_x, blk_om = p // n_x, p // n_om
+    if masked and flavor in ("xtx", "y_x"):
+        raise ValueError(f"flavor {flavor!r} has no masked variant")
+    if masked and not block_size:
+        raise ValueError("masked volume needs the mask block_size")
+
+    if flavor == "omega_xt":
+        rounds = n_x // c_omega
+        ring_moves = (_perm_moves(g.stagger_perm("xlike", "omega", n_x))
+                      + rounds * _perm_moves(g.shift_perm("omega", c_omega)))
+        ring = Fraction(ring_moves * blk_x * n * w)
+        finish = collective_wire_bytes("psum", blk_om * n * w, c_omega)
+        return CommVolume(flavor, rounds, ring, finish)
+
+    # gather flavors: (ring ordering, fixed-operand replication c_F,
+    # rotating block count n_R, canonical layout, rotating payload,
+    # gathered tile (rows, cols), team-layer extent)
+    if flavor == "xtx":
+        ring_name, c_f, n_r, canon = "x", c_x, n_x, "xlike"
+        payload, tile, team = blk_x * n, (blk_x, blk_x), c_x
+    elif flavor == "omega_s":
+        canon = canonical or "omegalike"
+        n_r = n_om if canon == "omegalike" else n_x
+        blk_r = p // n_r
+        ring_name, c_f = "x", c_x
+        payload, tile, team = blk_r * p, (blk_r, blk_x), c_x
+    elif flavor == "y_x":
+        ring_name, c_f, n_r, canon = "omega", c_omega, n_x, "xlike"
+        payload, tile, team = n * blk_x, (blk_om, blk_x), c_omega
+    else:
+        raise ValueError(f"unknown flavor {flavor!r}")
+
+    rounds = max(1, n_r // c_f)
+    moves = (_perm_moves(g.stagger_perm(canon, ring_name, n_r))
+             + rounds * _perm_moves(g.shift_perm(ring_name, c_f)))
+    ring = Fraction(moves * payload * w)
+    if masked:   # the occupancy mask rides the same stagger + shifts
+        rows, cols = (p // n_r) // block_size, p // block_size
+        ring += Fraction(moves * rows * cols * DTYPE_BYTES["int8"])
+    finish = collective_wire_bytes(
+        "all_gather", rounds * tile[0] * tile[1] * w, team)
+    return CommVolume(flavor, rounds, ring, finish)
+
+
+def ring_allreduce_int8_volume(size: int, extent: int) -> Fraction:
+    """Exact bytes of ``comm.collectives.ring_allreduce_int8`` on a float64
+    input of ``size`` elements over a ring of ``extent`` devices.
+
+    (extent-1) reduce-scatter rounds each ship one int8 chunk plus its
+    f64 scale scalar (the quantizer derives the scale from the f64 input
+    under the x64 contract); the finishing all_gather ships the REDUCED
+    chunk at full f64 — int8 compression buys its 8x only on the
+    reduce-scatter phase, which is the phase that repeats.
+    """
+    if extent <= 1:
+        return Fraction(0)
+    pad = (-size) % extent
+    chunk = (size + pad) // extent
+    rs = (extent - 1) * (chunk * DTYPE_BYTES["int8"] + DTYPE_BYTES["float64"])
+    ag = collective_wire_bytes(
+        "all_gather", chunk * DTYPE_BYTES["float64"], extent)
+    return Fraction(rs) + ag
+
+
+def compressed_psum_volume(size: int, extent: int, *,
+                           method: str = "bf16") -> Fraction:
+    """Exact bytes of ``comm.collectives.compressed_psum``: one
+    bandwidth-optimal all-reduce of ``size`` elements at the method's
+    wire width (bf16 = 2 bytes; the int8 method psums the DEQUANTIZED
+    float32 values — its 1-byte wire only exists in the explicit ring)."""
+    wire = {"bf16": DTYPE_BYTES["bfloat16"], "int8": DTYPE_BYTES["float32"],
+            "none": DTYPE_BYTES["float64"]}[method]
+    return collective_wire_bytes("psum", size * wire, extent)

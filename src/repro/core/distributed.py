@@ -629,7 +629,7 @@ def _analysis_fit_cov():
                       max_ls=4)
         return res.omega, res.iters, res.converged, res.block_density
 
-    return {"fn": run, "args": (s,)}
+    return {"fn": run, "args": (s,), "axis_sizes": dict(_AXIS_SIZES_1DEV)}
 
 
 def _analysis_fit_obs():
@@ -643,18 +643,46 @@ def _analysis_fit_obs():
                       max_ls=4)
         return res.omega, res.iters, res.converged, res.block_density
 
-    return {"fn": run, "args": (x,)}
+    return {"fn": run, "args": (x,), "axis_sizes": dict(_AXIS_SIZES_1DEV)}
 
+
+def _driver_contract():
+    """Declared schedule of the end-to-end drivers (comm engine CA305/
+    CA306 structure checks; no volume contract — the outer while_loop's
+    trip count is dynamic, so bytes/invocation is not a static quantity
+    here; the per-product volumes are pinned by the ``comm.matmul1p5d``
+    and ``comm.sparse1p5d`` entries instead)."""
+    from ..comm.contract import CommContract
+    return CommContract(
+        entry="core.distributed.fit",
+        axes=("i", "j", "k"),
+        kinds=("ppermute", "psum", "pmin", "pmax", "all_gather",
+               "all_to_all"),
+        # the iterate/objective arithmetic is f64 by contract; the ring
+        # also rotates int8 occupancy masks and reduces f32 density
+        # diagnostics and i32/bool loop control
+        wire=("operand", "mask", "float32", "int32", "int64", "bool"),
+        volume_class="shard_map driver (dynamic trip count)")
+
+
+COMM_CONTRACT = {
+    "fit_cov": _driver_contract(),
+    "fit_obs": _driver_contract(),
+}
 
 #: both 1.5D shard_map drivers, traced end to end on a 1-device
 #: (1, 1, 1) mesh: the jaxpr still contains every psum/axis binding of
 #: the distributed iteration, so the dtype and axis contracts are
-#: checked without multi-device hardware
+#: checked without multi-device hardware (axis extents are all 1 there,
+#: hence no volume contract on these entries — see _driver_contract)
+_AXIS_SIZES_1DEV = {"i": 1, "j": 1, "k": 1}
 ANALYSIS_ENTRIES = [
     {"name": "core.distributed.fit_cov",
      "path": "src/repro/core/distributed.py",
-     "axis_names": ("i", "j", "k"), "build": _analysis_fit_cov},
+     "axis_names": ("i", "j", "k"), "build": _analysis_fit_cov,
+     "comm": lambda: {"contract": COMM_CONTRACT["fit_cov"], "params": {}}},
     {"name": "core.distributed.fit_obs",
      "path": "src/repro/core/distributed.py",
-     "axis_names": ("i", "j", "k"), "build": _analysis_fit_obs},
+     "axis_names": ("i", "j", "k"), "build": _analysis_fit_obs,
+     "comm": lambda: {"contract": COMM_CONTRACT["fit_obs"], "params": {}}},
 ]

@@ -5,14 +5,19 @@ through ``astpass.scan_source`` at contract-relevant fake paths; the
 jaxpr rules (CA2xx) are tripped on synthetic manifest entries run through
 ``jaxprpass.run_entry`` — including a fixture copy of the Gram
 panel/finalize path with a deliberately injected f64->f32 cast that CA201
-must catch.  A registry test asserts the fixture set and the rule
+must catch.  The comm rules (CA3xx) are tripped on fixture entries traced
+under ``make_jaxpr(axis_env=...)`` with injected schedule defects: a
+branch-divergent psum (the SPMD deadlock signature), a non-bijective
+ppermute table, an extra all-reduce that breaks the declared byte budget,
+redundant collectives, undeclared axes/kinds, and an f64 payload on a
+declared-bf16 wire.  A registry test asserts the fixture set and the rule
 registry stay in sync, so adding a rule without a fixture fails here.
 """
 import json
 
 import pytest
 
-from repro.analysis import astpass, baseline, cli, jaxprpass
+from repro.analysis import astpass, baseline, cli, commpass, jaxprpass
 from repro.analysis.findings import Finding, sort_findings
 from repro.analysis.rules import (DEFAULT_PROFILE, SCRIPTS_PROFILE,
                                   all_rules, get_rule, profile_for_path)
@@ -201,6 +206,166 @@ def _trip_undeclared_axis():
         DEFAULT_PROFILE)
 
 
+# -- comm fixtures ----------------------------------------------------------
+# CA30x rules trip on fixture entries traced under make_jaxpr(axis_env=...)
+# — the same no-devices ring tracing the real comm manifest uses — with
+# deliberately injected schedule defects.
+
+def _comm_entry(name, build, *, axis_names=("r",), comm=None, skip=None,
+                path="src/repro/comm/matmul1p5d.py"):
+    e = {"name": name, "path": path, "axis_names": axis_names,
+         "build": build}
+    if comm is not None:
+        e["comm"] = comm
+    if skip is not None:
+        e["skip"] = skip
+    return e
+
+
+def _comm_findings(entry):
+    findings, _ = commpass.run_entry(entry, DEFAULT_PROFILE)
+    return findings
+
+
+@trips("CA300")
+def _trip_broken_comm_entry():
+    def build():
+        raise RuntimeError("ring shapes unavailable")
+    return _comm_findings(_comm_entry("test.broken_comm_build", build))
+
+
+@trips("CA301")
+def _trip_branch_divergent_psum():
+    """Injected SPMD deadlock: only one cond branch posts a psum."""
+    import jax
+    import jax.numpy as jnp
+
+    def build():
+        def step(x):
+            return jax.lax.cond(
+                x[0] > 0,
+                lambda v: jax.lax.psum(v, "r"),   # branch 0: all-reduce
+                lambda v: v * 2.0,                # branch 1: silence
+                x)
+        return {"fn": step, "args": (jnp.ones((4,), jnp.float64),),
+                "axis_env": (("r", 4),)}
+
+    return _comm_findings(_comm_entry("test.branch_divergent_psum", build))
+
+
+@trips("CA302")
+def _trip_non_bijective_ppermute():
+    """Injected broken ring: rank 2 sends out of range, rank 3 is absent."""
+    import jax
+    import jax.numpy as jnp
+
+    def build():
+        def rotate(x):
+            return jax.lax.ppermute(x, "r", ((0, 1), (1, 0), (2, 5)))
+        return {"fn": rotate, "args": (jnp.ones((3,), jnp.float64),),
+                "axis_env": (("r", 4),)}
+
+    return _comm_findings(_comm_entry("test.non_bijective_perm", build))
+
+
+def _xtx_grid_env():
+    from repro.comm.grid import Grid1p5D
+    grid = Grid1p5D(8, 2, 2)
+    return grid, (("i", grid.n_i), ("j", grid.c_omega), ("k", grid.c_x))
+
+
+def _xtx_contract():
+    from repro.comm.matmul1p5d import COMM_CONTRACT
+    return {"contract": COMM_CONTRACT["xtx_local"],
+            "params": dict(p=32, n=12, n_devices=8, c_x=2, c_omega=2,
+                           dtype="float64")}
+
+
+@trips("CA303")
+def _trip_extra_psum_breaks_volume():
+    """Fixture copy of the X^T X ring with an injected extra all-reduce:
+    the static byte count must disagree with the declared volume."""
+    import jax
+    import jax.numpy as jnp
+    from repro.comm.matmul1p5d import xtx_local
+
+    def build():
+        grid, env = _xtx_grid_env()
+
+        def bad_xtx(x):
+            s = xtx_local(x, grid)
+            return jax.lax.psum(s, "k")           # the injected collective
+        x = jnp.ones((12, 32 // grid.n_x), jnp.float64)
+        return {"fn": bad_xtx, "args": (x,), "axis_env": env}
+
+    return _comm_findings(_comm_entry(
+        "test.xtx_extra_psum", build, axis_names=("i", "j", "k"),
+        comm=lambda: _xtx_contract()))
+
+
+@trips("CA304")
+def _trip_redundant_collectives():
+    """psum of an already-psummed value + composable ppermute pair."""
+    import jax
+    import jax.numpy as jnp
+
+    def build():
+        def wasteful(x):
+            once = jax.lax.psum(x, "r")
+            twice = jax.lax.psum(once, "r")       # already replicated
+            ring = ((0, 1), (1, 2), (2, 3), (3, 0))
+            hop1 = jax.lax.ppermute(twice, "r", ring)
+            hop2 = jax.lax.ppermute(hop1, "r", ring)   # compose the tables
+            return hop2
+        return {"fn": wasteful, "args": (jnp.ones((4,), jnp.float64),),
+                "axis_env": (("r", 4),)}
+
+    return _comm_findings(_comm_entry("test.redundant_collectives", build))
+
+
+@trips("CA305")
+def _trip_undeclared_ring_axis():
+    """Schedule touches an axis/kind the COMM_CONTRACT does not declare."""
+    import jax
+    import jax.numpy as jnp
+    from repro.comm.contract import CommContract
+
+    contract = CommContract(entry="test.ring", axes=("r",),
+                            kinds=("ppermute",))
+
+    def build():
+        def leak(x):
+            y = jax.lax.ppermute(x, "r", ((0, 1), (1, 0)))
+            return jax.lax.psum(y, "z")           # undeclared axis AND kind
+        return {"fn": leak, "args": (jnp.ones((2,), jnp.float64),),
+                "axis_env": (("r", 2), ("z", 2))}
+
+    return _comm_findings(_comm_entry(
+        "test.undeclared_ring_axis", build, axis_names=("r", "z"),
+        comm=lambda: {"contract": contract, "params": {}}))
+
+
+@trips("CA306")
+def _trip_f64_on_compressed_wire():
+    """f64 payload through a path whose contract declares a bf16 wire."""
+    import jax
+    import jax.numpy as jnp
+    from repro.comm.contract import CommContract
+
+    contract = CommContract(entry="test.compressed", axes=("r",),
+                            kinds=("psum",), wire=("bfloat16",))
+
+    def build():
+        def allreduce(x):
+            return jax.lax.psum(x, "r")           # ships f64, not bf16
+        return {"fn": allreduce, "args": (jnp.ones((8,), jnp.float64),),
+                "axis_env": (("r", 4),)}
+
+    return _comm_findings(_comm_entry(
+        "test.f64_on_compressed_wire", build,
+        comm=lambda: {"contract": contract, "params": {}}))
+
+
 # ---------------------------------------------------------------------------
 # the registry contract: every rule has a fixture, every fixture trips
 # ---------------------------------------------------------------------------
@@ -236,6 +401,22 @@ def test_ca202_names_the_watched_program():
     assert len(hits) == 1
     assert hits[0].snippet == "solve"
     assert "2 new program" in hits[0].message
+
+
+def test_ca303_reports_both_byte_counts():
+    hits = [f for f in _TRIPS["CA303"]() if f.rule == "CA303"]
+    assert len(hits) == 1
+    # the injected psum all-reduces the (32, 8) f64 panel over "k"
+    # (extent 2): 2*(2-1)/2 * 2048 = 2048 bytes on top of the declared
+    # 3328
+    assert "5376" in hits[0].message and "3328" in hits[0].message
+
+
+def test_ca304_flags_both_redundancy_shapes():
+    msgs = [f.message for f in _TRIPS["CA304"]() if f.rule == "CA304"]
+    assert len(msgs) == 2
+    assert any("already" in m for m in msgs)
+    assert any("compose" in m for m in msgs)
 
 
 # ---------------------------------------------------------------------------
@@ -297,6 +478,45 @@ def bench(x):
     hits = _ast("benchmarks/bench_solver.py", collective_src,
                 SCRIPTS_PROFILE)
     assert {f.rule for f in hits} == {"CA105"}
+
+
+def test_blessed_stagger_and_shift_rings_are_clean():
+    """The real stagger + per-round-shift + team-finish idiom must not
+    trip any CA30x rule, and its exact byte accounting must hold."""
+    from repro.comm.matmul1p5d import ANALYSIS_ENTRIES
+
+    for entry in ANALYSIS_ENTRIES:
+        findings, record = commpass.run_entry(entry, DEFAULT_PROFILE)
+        assert findings == [], (entry["name"], findings)
+        assert record["static_bytes"] is not None
+        assert record["static_bytes"] == record["contract"]["expected_bytes"]
+
+
+def test_identity_stagger_counts_zero_bytes():
+    """At c_x = c_omega = 1 the stagger/shift tables still appear in the
+    jaxpr but (identity staggers) must cost nothing the analytic side
+    doesn't also count — the schedules stay exactly accountable."""
+    import jax.numpy as jnp
+    from repro.comm.grid import Grid1p5D
+    from repro.comm.matmul1p5d import COMM_CONTRACT, xtx_local
+
+    grid = Grid1p5D(4, 1, 1)
+    env = (("i", 4), ("j", 1), ("k", 1))
+
+    def build():        # arrays under enable_x64, like the real manifest
+        x = jnp.ones((6, 16 // grid.n_x), jnp.float64)
+        return {"fn": lambda a: xtx_local(a, grid), "args": (x,),
+                "axis_env": env}
+
+    entry = _comm_entry(
+        "test.xtx_c1", build,
+        axis_names=("i", "j", "k"),
+        comm=lambda: {"contract": COMM_CONTRACT["xtx_local"],
+                      "params": dict(p=16, n=6, n_devices=4, c_x=1,
+                                     c_omega=1, dtype="float64")})
+    findings, record = commpass.run_entry(entry, DEFAULT_PROFILE)
+    assert findings == []
+    assert record["static_bytes"] == record["contract"]["expected_bytes"]
 
 
 def test_reuse_at_stable_statics_is_clean():
@@ -404,6 +624,74 @@ def test_cli_baseline_roundtrip_suppresses_then_goes_stale(tmp_path, capsys):
     assert json.loads(
         (root / "analysis_baseline.json").read_text(encoding="utf-8")) == []
     assert cli.main(argv) == 0
+
+
+def test_cli_changed_mode_scans_only_touched_files(tmp_path, capsys):
+    """--changed restricts the AST engine to `git diff --name-only BASE`
+    files: a pre-existing finding in an untouched file is invisible, one
+    in a touched file gates; stale-baseline gating is off (a partial
+    scan cannot adjudicate staleness)."""
+    import subprocess
+
+    root = _dirty_tree(tmp_path)
+    # a second f64-contract module, clean at commit time
+    clean = root / "src" / "repro" / "core" / "objective.py"
+    clean.write_text("X = 1\n", encoding="utf-8")
+    # a tracked file OUTSIDE the scan targets (tests/ fixture code trips
+    # rules on purpose and must never enter a --changed scan)
+    fixture = root / "tests" / "test_fixture.py"
+    fixture.parent.mkdir(exist_ok=True)
+    fixture.write_text("Y = 1\n", encoding="utf-8")
+
+    def git(*argv):
+        subprocess.run(["git", *argv], cwd=root, check=True,
+                       capture_output=True)
+
+    git("init", "-q")
+    git("-c", "user.email=t@t", "-c", "user.name=t", "commit", "-q",
+        "--allow-empty", "-m", "root")
+    git("add", "-A")
+    git("-c", "user.email=t@t", "-c", "user.name=t", "commit", "-q",
+        "-m", "seed")        # dirty matops.py is now committed (pre-existing)
+
+    argv = ["src", "--engine", "ast", "--root", str(root)]
+    # untouched tree: nothing changed since HEAD -> nothing scanned
+    assert cli.main(argv + ["--changed"]) == 0
+    capsys.readouterr()
+    # touch a tracked file so it now has a finding: only it is scanned
+    # (git diff semantics: untracked files are not "changed" — stage them)
+    clean.write_text("import jax.numpy as jnp\n\n"
+                     "def f(x):\n"
+                     "    return jnp.asarray(x, jnp.float32)\n",
+                     encoding="utf-8")
+    # changed-but-out-of-target fixture code stays invisible
+    fixture.write_text("import numpy as np\n"
+                       "import jax\n\n"
+                       "@jax.jit\n"
+                       "def g(x):\n"
+                       "    return np.float64(x)\n", encoding="utf-8")
+    assert cli.main(argv + ["--changed", "HEAD"]) == 1
+    out = capsys.readouterr().out
+    assert "objective.py" in out and "matops.py" not in out
+    assert "test_fixture.py" not in out
+    # full scan still sees the pre-existing finding too
+    assert cli.main(argv) == 1
+    assert "matops.py" in capsys.readouterr().out
+
+
+def test_cli_json_report_includes_comm_schedules(tmp_path, capsys):
+    """--engine comm emits the schedule traces + volume table CI uploads."""
+    report = tmp_path / "comm.json"
+    rc = cli.main(["--engine", "comm", "--root", REPO, "--format", "json",
+                   "--output", str(report)])
+    assert rc == 0
+    capsys.readouterr()
+    data = json.loads(report.read_text(encoding="utf-8"))
+    assert data["counts"]["findings"] == 0
+    schedules = {r["entry"]: r for r in data["comm_schedules"]}
+    ring = schedules["comm.matmul1p5d.xtx_ring"]
+    assert ring["static_bytes"] == ring["contract"]["expected_bytes"]
+    assert any(e["prim"] == "ppermute" for e in ring["events"])
 
 
 def test_findings_sort_and_fingerprint_ignore_line():
