@@ -22,11 +22,9 @@ Emits results/BENCH_comm_volume.csv and results/BENCH_comm_volume.json.
 """
 from __future__ import annotations
 
-import json
-import os
 from fractions import Fraction
 
-from .common import OUT_DIR, emit
+from .common import emit, write_bench
 
 #: the sweep: replication off / one-sided / both / deep
 GRIDS = [(4, 1, 1), (8, 2, 1), (8, 1, 2), (8, 2, 2), (16, 2, 2),
@@ -169,10 +167,7 @@ def main() -> int:
         "n_mismatches": len(mismatches),
         "exact_match": not mismatches,
     }
-    os.makedirs(OUT_DIR, exist_ok=True)
-    out = os.path.join(OUT_DIR, "BENCH_comm_volume.json")
-    with open(out, "w", encoding="utf-8") as f:
-        json.dump(report, f, indent=2)
+    out = write_bench("BENCH_comm_volume", report)
     print(f"wrote {out}: {len(rows)} rows, "
           f"{len(mismatches)} mismatch(es)")
     if mismatches:

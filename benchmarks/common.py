@@ -1,11 +1,62 @@
-"""Shared benchmark utilities: timing, CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, BENCH JSON envelope."""
 from __future__ import annotations
 
 import csv
+import json
 import os
+import platform
+import subprocess
 import time
 
 OUT_DIR = os.environ.get("BENCH_OUT", "results")
+
+#: version of the shared BENCH_*.json envelope written by write_bench
+BENCH_SCHEMA = 1
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def bench_meta() -> dict:
+    """The shared provenance envelope stamped on every BENCH artifact:
+    schema version, host fingerprint, jax version, x64 flag, git rev.
+    Lets downstream tooling reject cross-host or cross-version
+    comparisons instead of silently mixing them."""
+    import jax
+
+    return {
+        "bench_schema": BENCH_SCHEMA,
+        "host": platform.node(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count(),
+        "python": platform.python_version(),
+        "jax_version": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "x64": bool(jax.config.jax_enable_x64),
+        "git_rev": _git_rev(),
+    }
+
+
+def write_bench(name: str, payload: dict) -> str:
+    """Write ``results/<name>.json`` with the payload's keys TOP-LEVEL
+    (existing artifact gates read them there) plus the ``meta`` envelope.
+    Returns the path written."""
+    if "meta" in payload:
+        raise ValueError("payload already has a 'meta' key; the envelope "
+                         "would clobber it")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({**payload, "meta": bench_meta()}, f, indent=2)
+    return path
 
 
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1):

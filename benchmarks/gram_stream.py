@@ -22,13 +22,11 @@ artifact to track the streaming layer's throughput trajectory.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import numpy as np
 
-from .common import OUT_DIR, emit
+from .common import emit, write_bench
 
 AGREEMENT_ATOL = 1e-10
 
@@ -118,10 +116,7 @@ def run(p: int = 256, n: int = 200_000, family: str = "erdos_renyi",
         "best_memory_ratio": max(r["memory_ratio"] for r in rows),
         "cells": rows,
     }
-    os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR, "BENCH_gram_stream.json")
-    with open(path, "w") as f:
-        json.dump(summary, f, indent=2)
+    path = write_bench("BENCH_gram_stream", summary)
     print(f"# streamed Gram at p={p}, n={n}: up to "
           f"{summary['best_memory_ratio']:.0f}x smaller resident set; "
           f"max |dS| {max_err:.2e} (atol {AGREEMENT_ATOL:g}) -> {path}")

@@ -31,13 +31,11 @@ Default: 8-point path at p=512 (the acceptance-criteria shape);
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import numpy as np
 
-from .common import OUT_DIR, emit
+from .common import emit, write_bench
 
 #: tuned-vs-sequential solution agreement (two tol=1e-6 fixed points
 #: reached along different trajectories; bit-exactness is asserted
@@ -169,10 +167,7 @@ def run(p: int = 512, n: int = 1024, points: int = 8, tol: float = 1e-6,
         "stats_summary": stats.summary(),
         "points_detail": rows,
     }
-    os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR, "BENCH_path_batch.json")
-    with open(path, "w") as f:
-        json.dump(summary, f, indent=2)
+    path = write_bench("BENCH_path_batch", summary)
     print(f"# {points}-point f64 path at p={p}: sequential "
           f"{t_sequential:.2f}s, matched batched {t_matched:.2f}s "
           f"({t_sequential / t_matched:.2f}x, bit-exact), tuned batched "

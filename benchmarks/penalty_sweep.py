@@ -23,8 +23,6 @@ penalty layer across commits.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import numpy as np
@@ -33,7 +31,7 @@ import jax.numpy as jnp
 from repro.core import graphs
 from repro.estimator import ConcordEstimator, SolverConfig
 
-from .common import OUT_DIR, emit
+from .common import emit, write_bench
 
 FAMILIES = ("banded", "hub", "scale_free")
 PENALTIES = ("l1", "adaptive", "scad:3.7")
@@ -123,10 +121,7 @@ def main(argv=None):
         "families": by_family,
         "rows": rows,
     }
-    os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR, "BENCH_penalty_sweep.json")
-    with open(path, "w") as f:
-        json.dump(summary, f, indent=2)
+    path = write_bench("BENCH_penalty_sweep", summary)
     for fam, cells in by_family.items():
         line = "  ".join(f"{pen}: PPV {c['ppv_pct']:.0f}% FDR "
                          f"{c['fdr_pct']:.0f}%" for pen, c in cells.items())

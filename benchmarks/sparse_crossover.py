@@ -22,13 +22,11 @@ Pallas interpret overhead), so the speedups reflect real skipped work.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 from functools import partial
 
 import numpy as np
 
-from .common import OUT_DIR, emit, timeit
+from .common import emit, timeit, write_bench
 
 DENSITIES = (0.02, 0.05, 0.1, 0.2, 0.4, 0.7, 1.0)
 
@@ -131,10 +129,7 @@ def run(argv=None):
         "sparse_eff": calibrated.sparse_eff,
         "gather_eff": calibrated.gather_eff,
     }
-    os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR, "sparse_crossover.json")
-    with open(path, "w") as f:
-        json.dump(summary, f, indent=2)
+    path = write_bench("sparse_crossover", summary)
     print(f"# wrote {path}")
     return rows
 

@@ -12,8 +12,6 @@ results/table1_recovery.json ({"classic": [...], "scenarios": [...]}).
 """
 from __future__ import annotations
 
-import json
-import os
 
 import numpy as np
 import jax.numpy as jnp
@@ -21,7 +19,7 @@ import jax.numpy as jnp
 from repro.core import graphs
 from repro.estimator import ConcordEstimator, SolverConfig
 
-from .common import OUT_DIR, emit
+from .common import emit, write_bench
 
 _CONFIG = SolverConfig(backend="reference", variant="cov",
                        tol=1e-5, max_iters=250)
@@ -126,10 +124,8 @@ def run():
     classic = _classic_rows()
     scenarios = _scenario_rows()
     emit("table1_recovery", classic + scenarios)
-    os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR, "table1_recovery.json")
-    with open(path, "w") as f:
-        json.dump({"classic": classic, "scenarios": scenarios}, f, indent=2)
+    path = write_bench("table1_recovery",
+                       {"classic": classic, "scenarios": scenarios})
     n_fam = len({r["graph"] for r in scenarios})
     print(f"# scenario sweep: {n_fam} families, l1 PPV "
           f"{min(r['ppv_pct'] for r in scenarios):.0f}-"

@@ -21,6 +21,7 @@ MANIFEST_MODULES = (
     "repro.comm.matmul1p5d",    # 1.5D ring products (axis_env schedules)
     "repro.comm.sparse1p5d",    # masked ring products (mask on the wire)
     "repro.comm.collectives",   # compressed wire formats (int8 ring, bf16)
+    "repro.obs.commwatch",      # traced-solve CA202 reuse recipe (obs)
 )
 
 

@@ -262,9 +262,26 @@ SCRIPTS_PROFILE = Profile(
     collective_layer=COLLECTIVE_LAYER,
 )
 
-PROFILES = {p.name: p for p in (DEFAULT_PROFILE, SCRIPTS_PROFILE)}
+#: the observability layer (repro/obs/): host-side by construction — the
+#: tracer reads clocks, the comm watcher re-traces jaxprs, the registry
+#: mutates python dicts — so the traced-code host-call rules (CA101) and
+#: the in-loop host-sync rule (CA106) do not apply; nothing in obs/ runs
+#: inside a jitted program (the CA202 reuse recipe proves it).  Trace
+#: hygiene for what obs *touches* (dtype discipline, jit-boundary purity,
+#: collective-layer routing) still applies.
+OBS_PROFILE = Profile(
+    name="obs",
+    rules=frozenset({"CA102", "CA103", "CA105"}),
+    f64_modules=(),
+    collective_layer=COLLECTIVE_LAYER,
+)
+
+PROFILES = {p.name: p for p in (DEFAULT_PROFILE, SCRIPTS_PROFILE,
+                                OBS_PROFILE)}
 
 _SCRIPT_DIR_HINTS = ("benchmarks/", "examples/", "scripts/")
+
+_OBS_DIR_HINT = "repro/obs/"
 
 
 def profile_for_path(relpath: str) -> Profile:
@@ -272,4 +289,6 @@ def profile_for_path(relpath: str) -> Profile:
     rp = relpath.replace("\\", "/")
     if any(rp.startswith(h) or f"/{h}" in rp for h in _SCRIPT_DIR_HINTS):
         return SCRIPTS_PROFILE
+    if rp.startswith(_OBS_DIR_HINT) or f"/{_OBS_DIR_HINT}" in rp:
+        return OBS_PROFILE
     return DEFAULT_PROFILE

@@ -21,7 +21,7 @@ from __future__ import annotations
 import jax
 
 __all__ = ["shard_map", "use_mesh", "make_mesh", "axis_size",
-           "get_abstract_mesh", "psum"]
+           "get_abstract_mesh", "psum", "set_collective_watcher"]
 
 
 if hasattr(jax, "shard_map"):
@@ -38,12 +38,31 @@ else:
                                  out_specs=out_specs, check_rep=check_vma)
 
 
+#: collective-wrapper watcher (``repro.obs.commwatch``): when set, every
+#: collective POSTED through a compat wrapper is announced with its
+#: (prim, axis, operand).  Posting happens at trace time — a cached
+#: compiled program re-executes without re-posting — so the watcher
+#: counts program construction, while runtime execution counts come from
+#: the jaxpr walk on the dispatch hook.
+_COLLECTIVE_WATCHER = None
+
+
+def set_collective_watcher(watcher):
+    """Install ``watcher`` (or None); returns the previous watcher."""
+    global _COLLECTIVE_WATCHER
+    prev = _COLLECTIVE_WATCHER
+    _COLLECTIVE_WATCHER = watcher
+    return prev
+
+
 def psum(x, axis_name):
     """``lax.psum`` re-export: the blessed spelling outside the collective
     layer (``comm/``, ``core/distributed.py``), so every cross-device
     reduction in model/data code is greppable here and covered by the
     same skew-absorbing module as ``shard_map``."""
     from jax import lax
+    if _COLLECTIVE_WATCHER is not None:
+        _COLLECTIVE_WATCHER.on_collective("psum", axis_name, x)
     return lax.psum(x, axis_name)
 
 

@@ -91,6 +91,42 @@ from .prox import (
 _SOLVER_STATICS = ("variant", "tol", "max_iters", "max_ls", "warm_start_tau",
                    "tau_schedule")
 
+
+class _NoSpan:
+    """Do-nothing stand-in for a tracer span when obs is inactive."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def note(self, **attrs):
+        return self
+
+
+_NO_SPAN = _NoSpan()
+
+
+def _obs_span(name: str, **attrs):
+    """Tracer span IF the obs subsystem is active (``repro.obs.trace``
+    already imported and scoped by the caller's backend); the shared
+    no-op otherwise — the engine itself never imports ``repro.obs``, so
+    ``obs="off"`` runs are byte-identical to the pre-obs code path."""
+    import sys
+    tr = sys.modules.get("repro.obs.trace")
+    if tr is None:
+        return _NO_SPAN
+    return tr.get_tracer().span(name, cat="batch", level="trace", **attrs)
+
+
+def _obs_event(name: str, **attrs) -> None:
+    import sys
+    tr = sys.modules.get("repro.obs.trace")
+    if tr is not None:
+        tr.get_tracer().event(name, cat="batch", level="trace", **attrs)
+
 #: execution schedules of the batched engine
 BATCH_SCHEDULES = ("compact", "monolithic")
 
@@ -694,9 +730,10 @@ def _solve_compact(arr, spec, ridge, omega0, *, variant, tol, max_iters,
             }
         return done
 
-    for wave in waves:
+    for wave_idx, wave in enumerate(waves):
         ids = np.asarray(wave, np.int64)
         cap = _capacity(len(ids), b)
+        _obs_event("batch.wave", wave=wave_idx, lanes=len(ids))
         pad_idx = np.concatenate(
             [ids, np.full(cap - len(ids), ids[-1], np.int64)])
         real = jnp.asarray(np.arange(cap) < len(ids))
@@ -721,12 +758,14 @@ def _solve_compact(arr, spec, ridge, omega0, *, variant, tol, max_iters,
 
         while True:
             n_real = int(np.sum(cur_ids >= 0))  # ca: allow=CA106 (np host array)
-            if gemm == "host":
-                state, occ = _host_chunk(arr_w, arr_np_w, ridge_w, state,
-                                         spec_w, **statics)
-            else:
-                state, occ = _path_chunk(arr_w, ridge_w, state, spec_w,
-                                         **statics)
+            with _obs_span("batch.segment", segment=segments,
+                           wave=wave_idx, lanes=n_real, cap=cap):
+                if gemm == "host":
+                    state, occ = _host_chunk(arr_w, arr_np_w, ridge_w, state,
+                                             spec_w, **statics)
+                else:
+                    state, occ = _path_chunk(arr_w, ridge_w, state, spec_w,
+                                             **statics)
             segments += 1
             occ_np = np.asarray(occ)
             executed = occ_np[occ_np > 0]

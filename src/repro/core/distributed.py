@@ -371,6 +371,35 @@ def _spec_partition(spec: PenaltySpec, mat_spec):
         spec)
 
 
+#: dispatch-observer hook (``repro.obs.commwatch``): when set, the driver
+#: announces every jit dispatch (inside ``use_mesh``, before the call) and
+#: its result.  The observer may re-trace the closure (``jax.make_jaxpr``)
+#: but must not compile or execute anything — the solve itself is untouched.
+_DISPATCH_OBSERVER = None
+
+
+def set_dispatch_observer(observer):
+    """Install ``observer`` (or None) on the driver dispatch hook; returns
+    the previous observer so callers can restore it."""
+    global _DISPATCH_OBSERVER
+    prev = _DISPATCH_OBSERVER
+    _DISPATCH_OBSERVER = observer
+    return prev
+
+
+def _dispatch(variant, fn, args, grid, meta):
+    """Run one driver jit dispatch through the observer hook (no-op when
+    no observer is installed)."""
+    obs = _DISPATCH_OBSERVER
+    token = None
+    if obs is not None:
+        token = obs.on_dispatch(variant, fn, args, grid, meta)
+    res = jax.jit(fn)(*args)
+    if obs is not None:
+        obs.on_result(token, res)
+    return res
+
+
 def fit_cov(
     s: jax.Array,
     lam1: float | None = None,
@@ -434,7 +463,10 @@ def fit_cov(
                        out_specs=ProxResult(*specs), check_vma=False)
         args = (s, spec, _pad_omega0(omega0, p, p_pad, dtype))
     with use_mesh(mesh):
-        res = jax.jit(fn)(*args)
+        res = _dispatch("cov", fn, args, grid,
+                        {"p": p, "p_pad": p_pad, "n": None,
+                         "dtype": jnp.dtype(dtype).name,
+                         "sparse": ops.prox_stats is not None})
     return FitResult(res.omega[:p, :p], res.iters, res.ls_total,
                      res.converged, res.g_final, "cov", grid,
                      res.block_density, res.stalled)
@@ -498,7 +530,10 @@ def fit_obs(
                        out_specs=ProxResult(*specs), check_vma=False)
         args = (x, spec, _pad_omega0(omega0, p, p_pad, dtype))
     with use_mesh(mesh):
-        res = jax.jit(fn)(*args)
+        res = _dispatch("obs", fn, args, grid,
+                        {"p": p, "p_pad": p_pad, "n": n,
+                         "dtype": jnp.dtype(dtype).name,
+                         "sparse": ops.prox_stats is not None})
     return FitResult(res.omega[:p, :p], res.iters, res.ls_total,
                      res.converged, res.g_final, "obs", grid,
                      res.block_density, res.stalled)

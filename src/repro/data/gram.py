@@ -52,6 +52,34 @@ DEFAULT_PANEL = 512
 RANK_BUDGET_BYTES = 256 * 1024 * 1024
 
 
+class _NoSpan:
+    """Do-nothing stand-in for a tracer span when obs is inactive."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def note(self, **attrs):
+        return self
+
+
+_NO_SPAN = _NoSpan()
+
+
+def _obs_span(name: str, **attrs):
+    """Tracer span IF the obs subsystem is active (``repro.obs.trace``
+    already imported, mode scoped by the caller); the shared no-op
+    otherwise — the data layer never imports ``repro.obs`` itself."""
+    import sys
+    tr = sys.modules.get("repro.obs.trace")
+    if tr is None:
+        return _NO_SPAN
+    return tr.get_tracer().span(name, cat="data", level="trace", **attrs)
+
+
 class GramResult(NamedTuple):
     """A finalized streaming Gram: the solver-ready sufficient statistic
     plus the stream statistics it was derived from."""
@@ -135,20 +163,22 @@ class GramAccumulator:
                 f"chunk {self.n_chunks} contains non-finite values; refusing "
                 f"to fold NaN/Inf into the Gram")
         self.source_dtype = self.source_dtype or arr.dtype.name
-        a64 = np.ascontiguousarray(arr, np.float64)
-        m = a64.shape[0]
-        # blocked panel products through the matops dispatch, f64 always
-        self._xx += np.asarray(panel_gram(a64, panel=self.panel))
-        # Welford/Chan chunk merge of mean and M2
-        cmean = a64.mean(axis=0)
-        centered = a64 - cmean          # one chunk-sized temporary, reused
-        cm2 = np.einsum("ij,ij->j", centered, centered)
-        tot = self.n + m
-        delta = cmean - self._mean
-        self._mean += delta * (m / tot)
-        self._m2 += cm2 + delta * delta * (self.n * m / tot)
-        self.n = tot
-        self.n_chunks += 1
+        with _obs_span("gram.chunk", chunk=self.n_chunks,
+                       rows=int(arr.shape[0]), p=int(arr.shape[1])):
+            a64 = np.ascontiguousarray(arr, np.float64)
+            m = a64.shape[0]
+            # blocked panel products through the matops dispatch, f64 always
+            self._xx += np.asarray(panel_gram(a64, panel=self.panel))
+            # Welford/Chan chunk merge of mean and M2
+            cmean = a64.mean(axis=0)
+            centered = a64 - cmean      # one chunk-sized temporary, reused
+            cm2 = np.einsum("ij,ij->j", centered, centered)
+            tot = self.n + m
+            delta = cmean - self._mean
+            self._mean += delta * (m / tot)
+            self._m2 += cm2 + delta * delta * (self.n * m / tot)
+            self.n = tot
+            self.n_chunks += 1
         return self
 
     def merge(self, other: "GramAccumulator") -> "GramAccumulator":

@@ -269,6 +269,58 @@ def _offdiag_l1(omega) -> float:
     return float(np.sum(np.abs(om)) - np.sum(np.abs(np.diag(om))))
 
 
+def _solve_with_obs(config: SolverConfig, backend: str, variant: str,
+                    solve, *, p: int, n: int, n_devices: int = 1,
+                    c_x: int = 1, c_omega: int = 1):
+    """Run ``solve()`` (returning a result with ``.omega``) under the
+    configured observability level.
+
+    ``obs="off"`` is the exact pre-obs code path — ``repro.obs`` is never
+    imported, no tracer state exists.  Otherwise the solve runs inside a
+    span (at ``"trace"`` additionally split into the dispatch fence —
+    trace + compile + enqueue — and the ``block_until_ready`` execution
+    drain), the solve metrics feed the process registry, and the
+    host-boundary telemetry dict lands on the report.  Nothing here is
+    visible to jax tracing, so compiled programs and numerics are
+    identical at every level."""
+    if config.obs == "off":
+        t0 = time.perf_counter()
+        res = solve()
+        jax.block_until_ready(res.omega)
+        return res, time.perf_counter() - t0, None
+    from ..obs.trace import get_tracer
+    tracer = get_tracer()
+    with tracer.scoped(config.obs):
+        t0 = time.perf_counter()
+        with tracer.span(f"fit.{backend}", variant=variant, p=p, n=n,
+                         n_devices=n_devices) as span:
+            with tracer.span("dispatch", level="trace", variant=variant):
+                res = solve()
+            t1 = time.perf_counter()
+            with tracer.span("execute", level="trace", variant=variant):
+                jax.block_until_ready(res.omega)
+        wall = time.perf_counter() - t0
+        iters, ls_total = int(res.iters), int(res.ls_total)
+        span.note(iters=iters, ls_total=ls_total,
+                  converged=bool(res.converged))
+        telemetry = {
+            "obs": config.obs,
+            "dispatch_s": t1 - t0,
+            "execute_s": wall - (t1 - t0),
+            "ls_per_iter": ls_total / max(iters, 1),
+            # the registry feed needs the OBSERVED density, and _report
+            # already scans the estimate for its nnz/occupancy columns —
+            # defer record_solve_cost to there so the p^2 host scan runs
+            # once, not twice (at p=512 the duplicate scan alone was the
+            # bulk of the obs="summary" overhead)
+            "_pending_cost": dict(
+                variant=variant, p=p, n=n, iters=iters, ls_total=ls_total,
+                n_devices=n_devices, c_x=c_x, c_omega=c_omega,
+                wall_s=wall),
+        }
+    return res, wall, telemetry
+
+
 def _as_spec(penalty) -> PenaltySpec:
     """Backend-entry normalization: spec passes through, a bare number is
     the lam1 of an l1 penalty (plugin-backend ergonomics)."""
@@ -276,7 +328,8 @@ def _as_spec(penalty) -> PenaltySpec:
 
 
 def _report(res, *, lam1, lam2, wall, backend, variant, config=None,
-            c_x=1, c_omega=1, n_devices=1, penalty=None) -> FitReport:
+            c_x=1, c_omega=1, n_devices=1, penalty=None,
+            telemetry=None) -> FitReport:
     g = float(res.g_final)
     config = config or SolverConfig()
     if penalty is None:
@@ -290,6 +343,15 @@ def _report(res, *, lam1, lam2, wall, backend, variant, config=None,
     om = np.asarray(res.omega)
     nz = np.abs(om) > NNZ_TOL
     nnz_per_row = max(1.0, float(nz.sum()) / om.shape[0])
+    if telemetry is not None and "_pending_cost" in telemetry:
+        # deferred obs registry feed (see _solve_with_obs): the density
+        # the cost model wants is exactly this scan's nnz/row
+        from ..obs.metrics import get_registry, record_solve_cost
+        pc = telemetry.pop("_pending_cost")
+        cost = record_solve_cost(get_registry(),
+                                 density=nnz_per_row / om.shape[0], **pc)
+        telemetry["flops"] = cost["flops"]
+        telemetry["words"] = cost["words"]
     bs = config.sparse_block
     edges = np.arange(0, om.shape[0], bs)
     occ = np.add.reduceat(np.add.reduceat(nz, edges, axis=0),
@@ -310,6 +372,7 @@ def _report(res, *, lam1, lam2, wall, backend, variant, config=None,
         nnz_per_row=nnz_per_row,
         block_density=block_density,
         sparse_matmul=config.sparse_matmul,
+        telemetry=telemetry,
     )
 
 
@@ -333,17 +396,19 @@ def reference_backend(problem: Problem, penalty, config: SolverConfig,
         omega0 = jnp.asarray(omega0, data.dtype)
     policy = _matmul_policy(
         config, problem.p, problem.p if variant == "cov" else problem.n)
-    t0 = time.perf_counter()
-    res = prox.solve_reference(
-        data, penalty=spec, omega0=omega0, variant=variant,
-        tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
-        warm_start_tau=config.warm_start_tau,
-        sparse_matmul=policy, use_pallas=config.use_pallas)
-    jax.block_until_ready(res.omega)
-    wall = time.perf_counter() - t0
+
+    def solve():
+        return prox.solve_reference(
+            data, penalty=spec, omega0=omega0, variant=variant,
+            tol=config.tol, max_iters=config.max_iters,
+            max_ls=config.max_ls, warm_start_tau=config.warm_start_tau,
+            sparse_matmul=policy, use_pallas=config.use_pallas)
+
+    res, wall, telemetry = _solve_with_obs(
+        config, "reference", variant, solve, p=problem.p, n=problem.n)
     return _report(res, lam1=lam1, lam2=float(np.asarray(spec.lam2)),
                    wall=wall, backend="reference", variant=variant,
-                   config=config, penalty=spec)
+                   config=config, penalty=spec, telemetry=telemetry)
 
 
 def distributed_backend(problem: Problem, penalty, config: SolverConfig,
@@ -357,30 +422,46 @@ def distributed_backend(problem: Problem, penalty, config: SolverConfig,
     grid = Grid1p5D(n_dev, c_x, c_omega)
     policy = _matmul_policy(
         config, problem.p, problem.p if variant == "cov" else problem.n)
-    if variant == "cov":
-        t0 = time.perf_counter()
-        res = dist.fit_cov(
-            _cast(problem.cov(), config), penalty=spec, grid=grid,
-            tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
-            warm_start_tau=config.warm_start_tau,
-            use_pallas=config.use_pallas, omega0=omega0,
-            sparse_matmul=policy)
-    else:
-        if problem.x is None:
-            raise ValueError("Obs variant requires the data matrix x")
-        t0 = time.perf_counter()
-        res = dist.fit_obs(
+    if variant != "cov" and problem.x is None:
+        raise ValueError("Obs variant requires the data matrix x")
+
+    def solve():
+        if variant == "cov":
+            return dist.fit_cov(
+                _cast(problem.cov(), config), penalty=spec, grid=grid,
+                tol=config.tol, max_iters=config.max_iters,
+                max_ls=config.max_ls, warm_start_tau=config.warm_start_tau,
+                use_pallas=config.use_pallas, omega0=omega0,
+                sparse_matmul=policy)
+        return dist.fit_obs(
             _cast(problem.x, config), penalty=spec, grid=grid,
-            tol=config.tol, max_iters=config.max_iters, max_ls=config.max_ls,
-            warm_start_tau=config.warm_start_tau,
+            tol=config.tol, max_iters=config.max_iters,
+            max_ls=config.max_ls, warm_start_tau=config.warm_start_tau,
             use_pallas=config.use_pallas, omega0=omega0,
             sparse_matmul=policy)
-    jax.block_until_ready(res.omega)
-    wall = time.perf_counter() - t0
+
+    # obs="trace" arms the comm reconciliation watcher around the dense
+    # dispatch (the sparse policy's mask traffic has no analytic twin yet)
+    watch = None
+    if config.obs == "trace" and policy is None:
+        from ..obs.commwatch import CommWatch
+        watch = CommWatch().install()
+    try:
+        res, wall, telemetry = _solve_with_obs(
+            config, "distributed", variant, solve, p=problem.p,
+            n=problem.n, n_devices=n_dev, c_x=grid.c_x,
+            c_omega=grid.c_omega)
+    finally:
+        if watch is not None:
+            watch.uninstall()
+    if watch is not None and telemetry is not None:
+        recon = watch.reconcile()
+        telemetry["comm_reconcile"] = [r.to_json() for r in recon]
+        telemetry["comm_reconcile_ok"] = all(r.ok for r in recon)
     return _report(res, lam1=lam1, lam2=float(np.asarray(spec.lam2)),
                    wall=wall, backend="distributed", variant=res.variant,
                    config=config, c_x=grid.c_x, c_omega=grid.c_omega,
-                   n_devices=n_dev, penalty=spec)
+                   n_devices=n_dev, penalty=spec, telemetry=telemetry)
 
 
 def auto_backend(problem: Problem, penalty, config: SolverConfig,

@@ -28,6 +28,12 @@ BATCH_GEMMS = ("auto", "xla", "host")
 
 BATCH_WARM_STARTS = (None, "pilot")
 
+#: runtime observability levels (``repro.obs``): "off" never imports the
+#: obs package; "summary" records coarse per-solve spans + metrics;
+#: "trace" adds fine spans (compile/execute split, segments, chunks) and
+#: arms the comm reconciliation watcher on distributed solves
+OBS_MODES = ("off", "summary", "trace")
+
 
 @dataclass(frozen=True)
 class SolverConfig:
@@ -79,6 +85,16 @@ class SolverConfig:
                    ``"pilot"`` solves the median-difficulty lane first and
                    warm-starts the rest from it (path mode); ``None`` runs
                    all lanes cold.
+    obs            runtime observability (``repro.obs``): ``"off"``
+                   (default — the obs package is never even imported),
+                   ``"summary"`` (coarse per-solve spans, solve metrics
+                   and latency histograms; <2% wall overhead, gated by
+                   ``benchmarks/obs_overhead.py``) or ``"trace"`` (adds
+                   compile-vs-execute split spans, per-segment/chunk
+                   spans, and measured-vs-static comm reconciliation on
+                   distributed solves).  Purely host-side: never part of
+                   any jit static key, never traced — identical compiled
+                   programs and bit-exact results at every level.
     penalty        penalty family as a string form parsed by
                    ``core.penalty.parse_penalty``: ``"l1"`` (default),
                    ``"elastic_net"``, ``"scad"``/``"scad:3.7"``,
@@ -109,6 +125,7 @@ class SolverConfig:
     batch_max_lanes: int | None = None
     batch_gemm: str = "auto"
     batch_warm_start: str | None = None
+    obs: str = "off"
 
     def __post_init__(self):
         if not isinstance(self.backend, str) or not self.backend:
@@ -167,6 +184,9 @@ class SolverConfig:
             raise ValueError(f"batch_warm_start must be one of "
                              f"{BATCH_WARM_STARTS}, got "
                              f"{self.batch_warm_start!r}")
+        if self.obs not in OBS_MODES:
+            raise ValueError(f"obs must be one of {OBS_MODES}, got "
+                             f"{self.obs!r}")
         if not isinstance(self.penalty, str):
             raise ValueError(
                 f"config.penalty must be a penalty string form (got "

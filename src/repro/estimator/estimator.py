@@ -209,6 +209,23 @@ class ConcordEstimator:
     def _run_path(self, problem: Problem, grid: list[float],
                   spec: PenaltySpec, mode: str, warm_start: bool,
                   score_bic: bool, s_mat):
+        if self.config.obs != "off":
+            from ..obs.trace import get_tracer
+            tracer = get_tracer()
+            with tracer.scoped(self.config.obs):
+                with tracer.span("fit_path", points=len(grid),
+                                 mode=mode) as span:
+                    reports, stats = self._run_path_inner(
+                        problem, grid, spec, mode, warm_start, score_bic,
+                        s_mat)
+                span.note(total_iters=sum(r.iters for r in reports))
+            return reports, stats
+        return self._run_path_inner(problem, grid, spec, mode, warm_start,
+                                    score_bic, s_mat)
+
+    def _run_path_inner(self, problem: Problem, grid: list[float],
+                        spec: PenaltySpec, mode: str, warm_start: bool,
+                        score_bic: bool, s_mat):
         stats = None
         if mode == "batched":
             from .batch import batched_path_reports

@@ -48,6 +48,11 @@ class FitReport:
     penalty: str = "l1"         # penalty label ("l1", "scad:3.7",
                                 # "weighted_l1", ...); objective includes
                                 # this penalty's nonsmooth value
+    telemetry: dict | None = None   # obs!="off" only: host-boundary solve
+                                    # telemetry (dispatch vs execute wall
+                                    # split, analytic flop/word totals at
+                                    # the observed shape, mean ls trials
+                                    # per iteration); None when obs="off"
 
     def summary(self) -> str:
         dens = ""
@@ -123,6 +128,29 @@ class PathResult:
     @property
     def wall_time_s(self) -> float:
         return float(sum(r.wall_time_s for r in self.reports))
+
+    @property
+    def telemetry(self) -> dict:
+        """Convergence telemetry as a structured time series along the
+        path: one numpy array per field, indexed by grid point (the
+        host-boundary view — per-iteration state never leaves the
+        compiled solver loop)."""
+        reps = self.reports
+        return {
+            "lam1": np.array([r.lam1 for r in reps]),
+            "objective": np.array([r.objective for r in reps]),
+            "objective_smooth": np.array([r.objective_smooth for r in reps]),
+            "iters": np.array([r.iters for r in reps]),
+            "ls_total": np.array([r.ls_total for r in reps]),
+            "converged": np.array([r.converged for r in reps]),
+            "nnz_per_row": np.array([
+                np.nan if r.nnz_per_row is None else r.nnz_per_row
+                for r in reps]),
+            "block_density": np.array([
+                np.nan if r.block_density is None else r.block_density
+                for r in reps]),
+            "wall_time_s": np.array([r.wall_time_s for r in reps]),
+        }
 
     def best_bic(self) -> FitReport:
         """Report with the lowest pseudo-likelihood BIC along the path."""

@@ -25,6 +25,7 @@ requests and run each group as ONE compiled program:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 from typing import NamedTuple
 
@@ -46,6 +47,12 @@ class ConcordServeStats(NamedTuple):
     order: np.ndarray = None    # difficulty-sorted drain order (request
                                 # indices, hardest first within each
                                 # shape bucket)
+    queue_wait_s: np.ndarray = None  # per-request: drain start -> its
+                                     # group's compiled-program launch
+    solve_wall_s: np.ndarray = None  # per-request: its group's fit_batch
+                                     # wall (the request rode that program)
+    latency_s: np.ndarray = None     # per-request end-to-end =
+                                     # queue_wait_s + solve_wall_s
 
 
 def _difficulty_buckets(shapes, lam1s, bsz: int):
@@ -113,24 +120,57 @@ def serve_concord(args):
             for i in range(args.requests)]
     xs = np.stack(reqs)                          # one shape bucket
     lam1s = rng.uniform(0.12, 0.3, size=args.requests)
+    obs_mode = getattr(args, "obs", "off")
     config = SolverConfig(backend="reference", variant="obs",
-                          tol=args.tol, max_iters=args.max_iters)
+                          tol=args.tol, max_iters=args.max_iters,
+                          obs=obs_mode)
     bsz = max(1, args.batch)
+    tracer = registry = None
+    if obs_mode != "off":
+        from ..obs.metrics import get_registry
+        from ..obs.trace import get_tracer
+        tracer = get_tracer()
+        tracer.set_mode(obs_mode)
+        registry = get_registry()
 
     # batched drain: difficulty/shape-bucketed groups, tail-padded to bsz
-    # for compiled-program reuse; reports scatter back to input order
+    # for compiled-program reuse; reports scatter back to input order.
+    # Per-request latency splits into the time its group spent queued
+    # behind earlier groups (queue wait) and its group's solve wall.
     t0 = time.time()
+    drain0 = time.perf_counter()
     reports = [None] * args.requests
+    queue_wait = np.zeros(args.requests)
+    solve_wall = np.zeros(args.requests)
     group_shapes, order = [], []
     for group in _difficulty_buckets([x.shape for x in reqs], lam1s, bsz):
         order.extend(group)
         idx = group + [group[-1]] * (bsz - len(group))
         xg = jnp.asarray(xs[idx])
         group_shapes.append(tuple(xg.shape))
-        rep = fit_batch(x=xg, lam1=lam1s[idx],
-                        lam2=args.lam2, config=config)
+        g0 = time.perf_counter()
+        group_span = (tracer.span("serve.group", cat="serve",
+                                  requests=len(group), batch=bsz)
+                      if tracer is not None else contextlib.nullcontext())
+        with group_span:
+            rep = fit_batch(x=xg, lam1=lam1s[idx],
+                            lam2=args.lam2, config=config)
+        gw = time.perf_counter() - g0
         for i, r in zip(group, rep.reports):
             reports[i] = r
+            queue_wait[i] = g0 - drain0
+            solve_wall[i] = gw
+            if registry is not None:
+                registry.histogram("repro_serve_queue_wait_seconds"
+                                   ).observe(queue_wait[i])
+                registry.histogram("repro_serve_solve_wall_seconds"
+                                   ).observe(solve_wall[i])
+                registry.histogram("repro_serve_latency_seconds"
+                                   ).observe(queue_wait[i] + solve_wall[i])
+            if tracer is not None:
+                tracer.event("serve.request", cat="serve", request=i,
+                             queue_wait_s=float(queue_wait[i]),
+                             solve_wall_s=float(solve_wall[i]))
     t_batched = time.time() - t0
 
     # sequential baseline: one compiled solve per request
@@ -147,17 +187,26 @@ def serve_concord(args):
     om_batched = np.stack([np.asarray(r.omega) for r in reports])
     om_seq = np.stack([np.asarray(r.omega) for r in seq])
     gap = float(np.max(np.abs(om_batched - om_seq)))
+    latency = queue_wait + solve_wall
     print(f"served {args.requests} requests (p={args.p}, n={args.n}) in "
           f"micro-batches of {bsz}: batched {t_batched:.2f}s "
           f"({args.requests / t_batched:.2f} req/s) vs sequential "
           f"{t_sequential:.2f}s ({args.requests / t_sequential:.2f} req/s) "
           f"incl. compile; converged {n_conv}/{args.requests}; "
           f"max |Ω_batch - Ω_seq| {gap:.2e}")
+    print(f"request latency: p50 {np.quantile(latency, .5):.3f}s "
+          f"p99 {np.quantile(latency, .99):.3f}s "
+          f"(queue wait p50 {np.quantile(queue_wait, .5):.3f}s, "
+          f"solve wall p50 {np.quantile(solve_wall, .5):.3f}s)")
+    if registry is not None:
+        print(registry.to_prometheus())
     return ConcordServeStats(
         reports=reports, lam1s=lam1s, n_groups=len(group_shapes),
         group_shapes=group_shapes, t_batched=t_batched,
         t_sequential=t_sequential, max_gap=gap,
-        order=np.asarray(order, np.int64))
+        order=np.asarray(order, np.int64),
+        queue_wait_s=queue_wait, solve_wall_s=solve_wall,
+        latency_s=latency)
 
 
 def main(argv=None):
@@ -179,6 +228,10 @@ def main(argv=None):
     ap.add_argument("--lam2", type=float, default=0.05)
     ap.add_argument("--tol", type=float, default=1e-5)
     ap.add_argument("--max-iters", type=int, default=300)
+    ap.add_argument("--obs", default="off",
+                    choices=["off", "summary", "trace"],
+                    help="concord: observability level (spans + request "
+                         "latency histograms via repro.obs)")
     args = ap.parse_args(argv)
 
     if args.workload == "concord":

@@ -1,0 +1,413 @@
+"""Observability subsystem (``repro.obs``): tracer/metrics units, the
+exporter round-trips, estimator integration (bit-exactness at every obs
+level, zero extra compiles at ``obs="trace"``, lazy import at
+``obs="off"``), measured-vs-static comm reconciliation on 1 and 4
+devices, and the serve drain's queue-wait/solve-wall latency split."""
+import json
+import sys
+
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+from repro.obs.metrics import (Counter, Histogram, MetricsRegistry,
+                               record_solve_cost)
+from repro.obs.trace import Tracer, load_chrome, load_jsonl
+
+
+@pytest.fixture(autouse=True)
+def _reset_obs_globals():
+    """The tracer and registry are process-global singletons; leave them
+    off and empty so no test observes another's spans or counters."""
+    yield
+    tr = sys.modules.get("repro.obs.trace")
+    if tr is not None and tr._TRACER is not None:
+        tr._TRACER.set_mode("off")
+        tr._TRACER.clear()
+    mt = sys.modules.get("repro.obs.metrics")
+    if mt is not None and mt._REGISTRY is not None:
+        mt._REGISTRY.clear()
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_tracer_off_is_inert():
+    t = Tracer()
+    with t.span("solve", p=8) as s:
+        s.note(iters=3)
+    t.event("tick")
+    assert len(t) == 0 and t.snapshot() == ()
+
+
+def test_tracer_records_spans_events_and_notes():
+    t = Tracer(mode="summary")
+    with t.span("solve", cat="solver", p=8) as s:
+        s.note(iters=3)
+        t.event("checkpoint", step=1)
+    spans = t.snapshot()
+    assert [s.name for s in spans] == ["checkpoint", "solve"]
+    ev, sp = spans
+    assert ev.phase == "instant" and ev.duration == 0.0
+    assert sp.phase == "span" and sp.duration >= 0.0
+    assert sp.args == {"p": 8, "iters": 3} and ev.args == {"step": 1}
+
+
+def test_tracer_summary_filters_trace_level_spans():
+    t = Tracer(mode="summary")
+    with t.span("outer"):
+        with t.span("inner", level="trace"):
+            pass
+    assert [s.name for s in t.snapshot()] == ["outer"]
+    t.clear()
+    t.set_mode("trace")
+    with t.span("outer"):
+        with t.span("inner", level="trace"):
+            pass
+    assert sorted(s.name for s in t.snapshot()) == ["inner", "outer"]
+
+
+def test_tracer_ring_capacity_bounds_memory():
+    t = Tracer(mode="trace", capacity=4)
+    for i in range(10):
+        t.event("e", i=i)
+    spans = t.snapshot()
+    assert len(spans) == 4
+    assert [s.args["i"] for s in spans] == [6, 7, 8, 9]
+
+
+def test_tracer_scoped_restores_mode():
+    t = Tracer(mode="off")
+    with t.scoped("trace"):
+        assert t.mode == "trace"
+        t.event("inside")
+    assert t.mode == "off" and len(t) == 1
+
+
+def test_jsonl_roundtrip(tmp_path):
+    t = Tracer(mode="trace")
+    with t.span("solve", cat="solver", p=16) as s:
+        s.note(converged=True)
+    t.event("mark", cat="batch", level="trace", wave=2)
+    path = tmp_path / "trace.jsonl"
+    assert t.export_jsonl(path) == 2
+    back = load_jsonl(path)
+    for orig, rt in zip(t.snapshot(), back):
+        assert orig.to_json() == rt.to_json()
+
+
+def test_chrome_roundtrip(tmp_path):
+    t = Tracer(mode="trace")
+    with t.span("solve", cat="solver", p=16):
+        t.event("mark", level="trace", wave=2)
+    path = tmp_path / "trace.json"
+    assert t.export_chrome(path) == 2
+    doc = json.loads(path.read_text())
+    assert "traceEvents" in doc
+    back = load_chrome(path)
+    assert len(back) == 2
+    for orig, rt in zip(sorted(t.snapshot(), key=lambda s: s.t_start),
+                        sorted(back, key=lambda s: s.t_start)):
+        assert (orig.name, orig.cat, orig.phase,
+                orig.level) == (rt.name, rt.cat, rt.phase, rt.level)
+        # chrome timestamps are integer-microsecond; 1 us round-trip slop
+        assert abs(orig.t_start - rt.t_start) < 2e-6
+        assert abs(orig.duration - rt.duration) < 2e-6
+        assert {k: v for k, v in orig.args.items()} == rt.args
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_counter_monotone_and_gauge():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs", variant="cov")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("depth")
+    g.set(7)
+    assert g.value == 7.0
+    # get-or-create: same labels return the same object
+    assert reg.counter("reqs", variant="cov") is c
+    assert len(reg) == 2
+
+
+def test_registry_type_clash_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_histogram_quantiles_match_numpy_within_bucket_width():
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(mean=-6.0, sigma=1.5, size=5000)
+    h = Histogram("lat")
+    for v in samples:
+        h.observe(v)
+    assert h.total == len(samples)
+    for q in (0.5, 0.95, 0.99):
+        ref = float(np.quantile(samples, q))
+        got = h.quantile(q)
+        # interpolated inside an exponential bucket: within one bucket's
+        # relative width of the exact sample quantile
+        assert ref / h.growth <= got <= ref * h.growth, (q, got, ref)
+    # extremes follow the same contract (a lone sample in the edge
+    # bucket reads as the bucket midpoint, not the exact min/max)
+    assert h.min <= h.quantile(0.0) <= h.min * h.growth
+    assert h.max / h.growth <= h.quantile(1.0) <= h.max
+
+
+def test_histogram_single_sample_and_empty():
+    h = Histogram("lat")
+    assert np.isnan(h.quantile(0.5))
+    h.observe(0.125)
+    for q in (0.0, 0.5, 1.0):
+        assert h.quantile(q) == pytest.approx(0.125)
+
+
+def test_prometheus_text_exposition():
+    reg = MetricsRegistry()
+    reg.counter("repro_solves_total", variant="cov").inc(3)
+    reg.gauge("repro_queue_depth").set(2)
+    hist = reg.histogram("repro_solve_wall_seconds", variant="cov")
+    for v in (0.01, 0.02, 0.04):
+        hist.observe(v)
+    text = reg.to_prometheus()
+    assert "# TYPE repro_solves_total counter" in text
+    assert 'repro_solves_total{variant="cov"} 3' in text
+    assert "# TYPE repro_queue_depth gauge" in text
+    assert "# TYPE repro_solve_wall_seconds summary" in text
+    assert 'quantile="0.5"' in text
+    assert 'repro_solve_wall_seconds_count{variant="cov"} 3' in text
+    snap = reg.snapshot()
+    assert snap['repro_solves_total{variant="cov"}'] == 3
+    assert snap['repro_solve_wall_seconds{variant="cov"}']["count"] == 3
+
+
+def test_record_solve_cost_feeds_costmodel_counters():
+    reg = MetricsRegistry()
+    out = record_solve_cost(reg, variant="cov", p=64, n=128, iters=10,
+                            ls_total=14, density=0.2, wall_s=0.05)
+    assert out["flops"] > 0 and out["words"] >= 0
+    assert reg.counter("repro_solves_total", variant="cov").value == 1
+    assert reg.counter("repro_solve_iters_total", variant="cov").value == 10
+    # n=None (precomputed Gram): no Gram-formation flops, still positive
+    out2 = record_solve_cost(reg, variant="cov", p=64, n=None, iters=10,
+                             ls_total=14, density=0.2)
+    assert 0 < out2["flops"] < out["flops"]
+    # obs variant uses the other closed form
+    out3 = record_solve_cost(reg, variant="obs", p=64, n=128, iters=10,
+                             ls_total=14, density=0.2)
+    assert out3["flops"] > 0
+
+
+# ---------------------------------------------------------------------------
+# estimator integration
+# ---------------------------------------------------------------------------
+
+def _fit(obs, **cfg_overrides):
+    from repro.core import graphs
+    from repro.estimator import ConcordEstimator, SolverConfig
+
+    prob = graphs.make_problem("chain", 24, 64, seed=0)
+    cfg = dict(backend="reference", variant="cov", tol=1e-5, max_iters=60,
+               obs=obs)
+    cfg.update(cfg_overrides)
+    est = ConcordEstimator(lam1=0.2, lam2=0.05, config=SolverConfig(**cfg))
+    est.fit_cov(prob.s, n_samples=64)
+    return est.report_
+
+
+def test_obs_levels_are_bit_exact_and_carry_telemetry():
+    base = _fit("off")
+    assert base.telemetry is None
+    for obs in ("summary", "trace"):
+        rep = _fit(obs)
+        np.testing.assert_array_equal(
+            np.asarray(rep.omega), np.asarray(base.omega),
+            err_msg=f"obs={obs!r} changed the estimate")
+        assert rep.iters == base.iters and rep.ls_total == base.ls_total
+        tele = rep.telemetry
+        assert tele["obs"] == obs
+        assert tele["flops"] > 0 and tele["words"] >= 0
+        assert tele["dispatch_s"] >= 0 and tele["execute_s"] >= 0
+        assert "_pending_cost" not in tele
+
+
+def test_obs_config_validation():
+    from repro.estimator import SolverConfig
+    with pytest.raises(ValueError, match="obs"):
+        SolverConfig(obs="verbose")
+
+
+def test_obs_off_never_imports_the_obs_package():
+    run_with_devices("""
+import sys
+import numpy as np
+from repro.core import graphs
+from repro.estimator import ConcordEstimator, SolverConfig
+prob = graphs.make_problem("chain", 16, 40, seed=0)
+cfg = SolverConfig(backend="reference", variant="cov", tol=1e-4,
+                   max_iters=40, obs="off")
+ConcordEstimator(lam1=0.2, config=cfg).fit_cov(prob.s)
+loaded = [m for m in sys.modules if m.startswith("repro.obs")]
+assert not loaded, f"obs='off' pulled in {loaded}"
+print("OK")
+""", n_devices=1, timeout=300)
+
+
+def test_obs_trace_adds_zero_compiles(recompile_guard):
+    from repro.core import prox
+
+    _fit("trace")      # compile once (and pay the lazy obs import)
+    _fit("off")
+    with recompile_guard(solve=prox._solve_reference):
+        _fit("trace")
+        _fit("summary")
+        _fit("off")
+
+
+def test_fit_path_telemetry_and_span():
+    from repro.core import graphs
+    from repro.estimator import ConcordEstimator, SolverConfig
+    from repro.obs.trace import get_tracer
+
+    tracer = get_tracer()
+    tracer.clear()
+    prob = graphs.make_problem("chain", 20, 48, seed=0)
+    cfg = SolverConfig(backend="reference", variant="cov", tol=1e-4,
+                       max_iters=60, obs="summary")
+    est = ConcordEstimator(penalty="l1", config=cfg)
+    path = est.fit_path(s=prob.s, lam1_grid=[0.3, 0.2, 0.1],
+                        n_samples=48, score_bic=False)
+    tele = path.telemetry
+    assert set(tele) >= {"lam1", "iters", "ls_total", "converged",
+                         "objective", "wall_time_s"}
+    assert all(len(v) == 3 for v in tele.values())
+    assert np.all(tele["iters"] >= 1)
+    names = [s.name for s in tracer.snapshot()]
+    assert "fit_path" in names and "fit.reference" in names
+
+
+# ---------------------------------------------------------------------------
+# comm reconciliation: measured == static, exactly
+# ---------------------------------------------------------------------------
+
+def test_commwatch_reconciles_single_device_exactly():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm.grid import Grid1p5D
+    from repro.core import distributed as dist
+    from repro.obs.commwatch import CommWatch
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((40, 24))
+    s = jnp.asarray(x.T @ x / 40)
+    with CommWatch() as watch:
+        res = dist.fit_cov(s, 0.3, grid=Grid1p5D(1, 1, 1), max_iters=5)
+        jax.block_until_ready(res.omega)
+    reports = watch.reconcile()
+    assert reports, "no dispatches reconciled"
+    for rep in reports:
+        assert rep.ok, rep.render()
+        assert rep.rows
+        for r in rep.rows:
+            assert r.measured_count == r.predicted_count > 0
+
+
+@pytest.mark.slow
+def test_reconcile_4dev_measured_equals_static_cov_and_obs():
+    """THE acceptance assertion: on 4 devices, a traced solve's measured
+    per-(prim, axes) collective invocation counts AND payload bytes equal
+    the CA303 static comm_volume prediction exactly, for both the cov
+    and obs variants, including a replicated (c_omega=2) grid."""
+    run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.comm.grid import Grid1p5D
+from repro.core import distributed as dist
+from repro.obs.commwatch import CommWatch
+
+rng = np.random.default_rng(0)
+x = rng.standard_normal((48, 32))
+s = jnp.asarray(x.T @ x / 48)
+for variant, cx, co in [("cov", 1, 1), ("cov", 2, 2),
+                        ("obs", 1, 1), ("obs", 1, 2)]:
+    g = Grid1p5D(4, cx, co)
+    with CommWatch() as watch:
+        if variant == "cov":
+            res = dist.fit_cov(s, 0.3, grid=g, max_iters=6)
+        else:
+            res = dist.fit_obs(jnp.asarray(x), 0.3, grid=g, max_iters=6)
+        jax.block_until_ready(res.omega)
+    reports = watch.reconcile()
+    assert reports, (variant, cx, co)
+    for rep in reports:
+        assert rep.ok, (variant, cx, co, rep.render())
+        for r in rep.rows:
+            assert r.measured_count == r.predicted_count > 0
+        assert rep.measured_total == rep.predicted_total > 0
+        print(variant, cx, co, "OK", int(rep.measured_total), "bytes")
+print("OK")
+""", n_devices=4)
+
+
+@pytest.mark.slow
+def test_estimator_trace_mode_reconciles_on_4_devices():
+    """End-to-end through the estimator facade: ``obs="trace"`` on the
+    distributed backend lands the reconciliation on the report's
+    telemetry, every row exact."""
+    run_with_devices("""
+import numpy as np
+from repro.core import graphs
+from repro.estimator import ConcordEstimator, SolverConfig
+
+prob = graphs.make_problem("chain", 24, 56, seed=0)
+cfg = SolverConfig(backend="distributed", variant="cov", tol=1e-4,
+                   max_iters=8, obs="trace")
+est = ConcordEstimator(lam1=0.25, config=cfg)
+est.fit_cov(prob.s, n_samples=56)
+from fractions import Fraction
+tele = est.report_.telemetry
+assert tele is not None and tele["comm_reconcile_ok"] is True
+reps = tele["comm_reconcile"]
+assert reps and all(r["ok"] for r in reps)
+assert all(Fraction(r["measured_bytes_total"]) > 0 for r in reps)
+assert all(row["match"] for r in reps for row in r["rows"])
+print("OK")
+""", n_devices=4)
+
+
+# ---------------------------------------------------------------------------
+# serve drain latency split
+# ---------------------------------------------------------------------------
+
+def test_serve_obs_latency_split():
+    import argparse
+
+    from repro.launch.serve import serve_concord
+    from repro.obs.metrics import get_registry
+
+    get_registry().clear()
+    stats = serve_concord(argparse.Namespace(
+        requests=4, batch=2, p=16, n=40, lam2=0.05, tol=1e-4,
+        max_iters=40, seed=0, obs="summary"))
+    for arr in (stats.queue_wait_s, stats.solve_wall_s, stats.latency_s):
+        assert arr is not None and arr.shape == (4,)
+        assert np.all(arr >= 0)
+    np.testing.assert_allclose(stats.latency_s,
+                               stats.queue_wait_s + stats.solve_wall_s)
+    # groups launch one after another (reordered by predicted length),
+    # so at least one request waited behind another group's solve
+    assert stats.queue_wait_s.max() > 0
+    snap = get_registry().snapshot()
+    assert snap["repro_serve_latency_seconds"]["count"] == 4
+    assert snap["repro_serve_queue_wait_seconds"]["count"] == 4
+    assert snap["repro_serve_solve_wall_seconds"]["count"] == 4
