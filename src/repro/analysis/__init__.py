@@ -1,6 +1,6 @@
 """JAX-aware static analysis for the solver stack.
 
-Three engines over one rule registry (:mod:`repro.analysis.rules`):
+Four engines over one rule registry (:mod:`repro.analysis.rules`):
 
 * :mod:`repro.analysis.astpass` — CA1xx, pure stdlib-``ast`` source
   rules (host calls under trace, dtype literals in f64 modules,
@@ -12,7 +12,14 @@ Three engines over one rule registry (:mod:`repro.analysis.rules`):
   checks: the ordered ppermute/psum/all_gather trace of every entry is
   extracted from its jaxpr (ring schedules via ``axis_env``, no devices
   needed) and verified against declared ``COMM_CONTRACT``s, including
-  EXACT bytes-on-wire accounting vs ``core.costmodel.comm_volume``.
+  EXACT bytes-on-wire accounting vs ``core.costmodel.comm_volume``;
+* :mod:`repro.analysis.pallaspass` — CA4xx, Pallas kernel grid/BlockSpec
+  checks: every ``kernels.manifest.KERNEL_ENTRIES`` configuration's grid
+  is enumerated concretely and each index map evaluated at every grid
+  point (write races, coverage gaps, out-of-bounds blocks, narrow
+  accumulators, oracle-twin declarations, SMEM-table consistency); the
+  companion :mod:`repro.analysis.kernelfuzz` sanitizer differentially
+  fuzzes each kernel against its ``ref.py`` oracle in interpret mode.
 
 Run it as ``python -m repro.analysis`` (installed: ``repro-analyze``);
 see README "Static analysis".

@@ -1,19 +1,31 @@
 """``python -m repro.analysis`` (also installed as ``repro-analyze``) —
-run all three engines, gate on findings.
+run all four engines, gate on findings.
 
-Exit status: 0 = clean (after baseline), 1 = unsuppressed findings,
-2 = usage / internal error.  ``--format json`` (optionally with
-``--output``) emits the machine report CI uploads as an artifact; it
-includes the comm engine's extracted collective schedules and the
-static-vs-analytic volume table.
+Exit status: 0 = clean (after baseline), 1 = unsuppressed findings or
+kernel-fuzz failures, 2 = usage / internal error.  ``--format json``
+(optionally with ``--output``) emits the machine report CI uploads as an
+artifact; it includes the comm engine's extracted collective schedules,
+the pallas engine's per-config grid records (``kernel_grids``), and —
+with ``--fuzz-kernels`` — the differential sanitizer's case table
+(``kernel_fuzz``).
 
 ``--changed [BASE]`` restricts the AST engine to files touched since
 ``BASE`` (``git diff --name-only``, default HEAD) that lie under the
-scan targets, for fast pre-commit runs.  The jaxpr and comm engines ALWAYS run whole-program: they trace
-entry-point manifests, and an entry's jaxpr pulls in every layer it
-calls — there is no meaningful per-file subset of a traced program.
-Stale-baseline gating is skipped under ``--changed`` (a partial scan
-cannot tell a fixed finding from an unscanned one).
+scan targets, for fast pre-commit runs, and subsets the pallas engine's
+``KERNEL_ENTRIES`` to changed kernel modules (the whole registry when a
+shared kernel file — manifest/ops/ref — changed; the CA405
+module-coverage check stays whole-program either way).  The jaxpr and
+comm engines ALWAYS run whole-program: they trace entry-point manifests,
+and an entry's jaxpr pulls in every layer it calls — there is no
+meaningful per-file subset of a traced program.  Stale-baseline gating
+is skipped under ``--changed`` (a partial scan cannot tell a fixed
+finding from an unscanned one).
+
+``--fuzz-kernels`` additionally runs every registered kernel in
+interpret mode against its ``ref.py`` oracle across the manifest's
+parameter grid (seeded via ``--fuzz-seed``), enforcing each entry's
+declared tolerance class; any failed case fails the gate even with zero
+static findings.
 """
 from __future__ import annotations
 
@@ -23,7 +35,7 @@ import subprocess
 import sys
 from pathlib import Path
 
-from . import astpass, commpass, jaxprpass
+from . import astpass, commpass, jaxprpass, pallaspass
 from .baseline import load_baseline, split_by_baseline, write_baseline
 from .findings import sort_findings
 from .rules import DEFAULT_PROFILE, all_rules, profile_for_path
@@ -51,21 +63,34 @@ def iter_python_files(targets, root: Path):
 def changed_files(root: Path, base: str, targets=DEFAULT_TARGETS) -> list:
     """Python files ``git diff --name-only BASE`` reports under the scan
     targets (files outside them — e.g. tests/ fixture code that trips
-    rules on purpose — are excluded, matching the full-scan roots)."""
+    rules on purpose — are excluded, matching the full-scan roots).
+    ``targets=None`` skips the target filter and returns every changed
+    python file (the kernel-registry subsetting wants repo-wide paths)."""
     out = subprocess.run(
         ["git", "diff", "--name-only", base, "--"],
         cwd=root, capture_output=True, text=True, check=True).stdout
-    roots = [((root / t) if not Path(t).is_absolute() else Path(t)).resolve()
-             for t in targets]
+    roots = None if targets is None else [
+        ((root / t) if not Path(t).is_absolute() else Path(t)).resolve()
+        for t in targets]
     files = []
     for line in out.splitlines():
         f = root / line
         if not (line.endswith(".py") and f.is_file()):
             continue
         rf = f.resolve()
-        if any(r == rf or r in rf.parents for r in roots):
+        if roots is None or any(r == rf or r in rf.parents for r in roots):
             files.append(f)
     return files
+
+
+def subset_kernel_entries(entries, changed_rel: set) -> list:
+    """``--changed`` scoping for the pallas engine: keep entries whose
+    kernel module changed; a change to any shared kernel file
+    (manifest/ops/ref) invalidates the whole registry."""
+    from repro.kernels.manifest import SHARED_KERNEL_FILES
+    if any(p in changed_rel for p in SHARED_KERNEL_FILES):
+        return list(entries)
+    return [e for e in entries if e.get("path") in changed_rel]
 
 
 def run_ast_engine(targets, root: Path, *, files=None) -> list:
@@ -92,25 +117,62 @@ def run_comm_engine():
     return commpass.run_entries(load_entries(), DEFAULT_PROFILE)
 
 
+def run_pallas_engine(changed_rel=None):
+    """Returns (findings, grid_records).  ``changed_rel`` (a set of
+    repo-relative posix paths) subsets the per-entry checks under
+    ``--changed``; the CA405 module-coverage check always sees the full
+    registry."""
+    from repro.kernels.manifest import KERNEL_ENTRIES
+    entries = KERNEL_ENTRIES if changed_rel is None \
+        else subset_kernel_entries(KERNEL_ENTRIES, changed_rel)
+    return pallaspass.run_entries(entries, DEFAULT_PROFILE,
+                                  all_entries=KERNEL_ENTRIES)
+
+
+def run_kernel_fuzz(seed: int, changed_rel=None):
+    """Returns (failed_results, report_dict) from the differential
+    sanitizer over the (possibly ``--changed``-subset) registry."""
+    from repro.kernels.manifest import KERNEL_ENTRIES
+
+    from . import kernelfuzz
+    entries = KERNEL_ENTRIES if changed_rel is None \
+        else subset_kernel_entries(KERNEL_ENTRIES, changed_rel)
+    results = kernelfuzz.fuzz_entries(entries, seed=seed)
+    return kernelfuzz.failures(results), kernelfuzz.report(results,
+                                                           seed=seed)
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="JAX-aware static analysis for the repro solver stack "
                     "(AST rules CA1xx, jaxpr rules CA2xx, collective-"
-                    "schedule rules CA3xx).")
+                    "schedule rules CA3xx, Pallas kernel rules CA4xx).")
     ap.add_argument("targets", nargs="*", default=list(DEFAULT_TARGETS),
                     help="files/directories to scan with the AST engine "
                          f"(default: {' '.join(DEFAULT_TARGETS)})")
     ap.add_argument("--root", default=".",
                     help="repo root paths are resolved against (default: .)")
-    ap.add_argument("--engine", choices=("ast", "jaxpr", "comm", "all"),
+    ap.add_argument("--engine",
+                    choices=("ast", "jaxpr", "comm", "pallas", "all"),
                     default="all")
     ap.add_argument("--changed", nargs="?", const="HEAD", default=None,
                     metavar="BASE",
                     help="AST engine: only scan files changed since BASE "
-                         "(git diff --name-only; default HEAD). jaxpr/comm "
-                         "engines still run whole-program; stale-baseline "
-                         "gating is skipped")
+                         "(git diff --name-only; default HEAD); the pallas "
+                         "engine subsets KERNEL_ENTRIES to changed kernel "
+                         "modules. jaxpr/comm engines still run whole-"
+                         "program; stale-baseline gating is skipped")
+    ap.add_argument("--fuzz-kernels", action="store_true",
+                    help="also run the differential kernel sanitizer: "
+                         "every registered kernel in interpret mode vs "
+                         "its ref.py oracle across the manifest grid, "
+                         "enforcing declared tolerance classes (failures "
+                         "fail the gate)")
+    ap.add_argument("--fuzz-seed", type=int, default=0, metavar="N",
+                    help="base seed of the kernel sanitizer (default: 0; "
+                         "per-case seeds derive deterministically from "
+                         "it)")
     ap.add_argument("--format", choices=("human", "json"), default="human")
     ap.add_argument("--output", default=None,
                     help="write the report here as well as stdout")
@@ -125,7 +187,8 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def _render_report(new, suppressed, stale, fmt: str,
-                   comm_schedules=None) -> str:
+                   comm_schedules=None, kernel_grids=None,
+                   kernel_fuzz=None) -> str:
     if fmt == "json":
         report = {
             "findings": [f.to_json() for f in new],
@@ -139,6 +202,10 @@ def _render_report(new, suppressed, stale, fmt: str,
         }
         if comm_schedules is not None:
             report["comm_schedules"] = comm_schedules
+        if kernel_grids is not None:
+            report["kernel_grids"] = kernel_grids
+        if kernel_fuzz is not None:
+            report["kernel_fuzz"] = kernel_fuzz
         return json.dumps(report, indent=2)
     lines = [f.render() for f in new]
     if stale:
@@ -147,6 +214,18 @@ def _render_report(new, suppressed, stale, fmt: str,
                      f"{'y' if len(stale) == 1 else 'ies'} (no longer "
                      f"match anything — remove them):")
         lines.extend(f"  {e}" for e in stale)
+    if kernel_fuzz is not None:
+        counts = kernel_fuzz["counts"]
+        if counts["failures"]:
+            lines.append("")
+            lines.extend(c["entry"] and
+                         f"  {c['entry']} [{c['config']}] {c['output']} "
+                         f"({c['tolerance']}): {c['detail'] or 'failed'}"
+                         for c in kernel_fuzz["cases"] if not c["ok"])
+        lines.append("")
+        lines.append(f"kernel fuzz (seed {kernel_fuzz['seed']}): "
+                     f"{counts['cases']} case(s), "
+                     f"{counts['failures']} failure(s).")
     lines.append("")
     lines.append(f"{len(new)} finding{'s' if len(new) != 1 else ''}"
                  + (f", {len(suppressed)} baseline-suppressed"
@@ -165,7 +244,16 @@ def main(argv=None) -> int:
     root = Path(args.root).resolve()
     findings = []
     comm_schedules = None
+    kernel_grids = None
+    changed_rel = None
     try:
+        if args.changed is not None:
+            # repo-relative paths of ALL changed python files (unfiltered
+            # by targets): the kernel registry lives under src/ but its
+            # subsetting must not depend on the AST targets argument
+            changed_rel = {
+                f.resolve().relative_to(root).as_posix()
+                for f in changed_files(root, args.changed, None)}
         if args.engine in ("ast", "all"):
             files = None
             if args.changed is not None:
@@ -176,6 +264,9 @@ def main(argv=None) -> int:
         if args.engine in ("comm", "all"):
             comm_findings, comm_schedules = run_comm_engine()
             findings.extend(comm_findings)
+        if args.engine in ("pallas", "all"):
+            pallas_findings, kernel_grids = run_pallas_engine(changed_rel)
+            findings.extend(pallas_findings)
     except (FileNotFoundError, ImportError, AttributeError, ValueError,
             subprocess.CalledProcessError) as e:
         print(f"repro.analysis: error: {e}", file=sys.stderr)
@@ -189,14 +280,23 @@ def main(argv=None) -> int:
               f"{'s' if len(findings) != 1 else ''} to {baseline_path}")
         return 0
 
+    fuzz_failed, fuzz_report = [], None
+    if args.fuzz_kernels:
+        try:
+            fuzz_failed, fuzz_report = run_kernel_fuzz(args.fuzz_seed,
+                                                       changed_rel)
+        except (ImportError, AttributeError, ValueError) as e:
+            print(f"repro.analysis: error: {e}", file=sys.stderr)
+            return 2
+
     baseline = load_baseline(baseline_path)
     new, suppressed, stale = split_by_baseline(findings, baseline)
     if args.changed is not None:
         stale = []      # a partial scan cannot adjudicate staleness
     report = _render_report(new, suppressed, stale, args.format,
-                            comm_schedules)
+                            comm_schedules, kernel_grids, fuzz_report)
     print(report)
     if args.output:
         Path(args.output).parent.mkdir(parents=True, exist_ok=True)
         Path(args.output).write_text(report + "\n", encoding="utf-8")
-    return 1 if (new or stale) else 0
+    return 1 if (new or stale or fuzz_failed) else 0

@@ -14,6 +14,13 @@ Every check either engine can emit is declared here with a stable id:
     for deadlock signatures, permutation validity, declared
     ``COMM_CONTRACT``s and exact bytes-on-wire accounting against
     ``core.costmodel.comm_volume``.
+  * ``CA4xx`` — pallas engine (``pallaspass``): Pallas kernel
+    grid/BlockSpec contracts — every ``kernels.manifest.KERNEL_ENTRIES``
+    configuration's grid is enumerated concretely and each index map
+    evaluated at every grid point, checking output write races, coverage
+    gaps, out-of-bounds block indices, narrow accumulators in
+    f64-contract kernel bodies, oracle-twin declarations and
+    grid/BlockSpec/SMEM-table shape consistency.
 
 A :class:`Profile` is the set of rule ids active for a directory tree.
 ``src/repro`` runs the full ``default`` profile; ``benchmarks/`` /
@@ -36,7 +43,7 @@ from dataclasses import dataclass, field
 class Rule:
     id: str
     name: str
-    engine: str             # "ast" | "jaxpr" | "comm"
+    engine: str             # "ast" | "jaxpr" | "comm" | "pallas"
     description: str
 
 
@@ -46,7 +53,7 @@ _RULES: dict[str, Rule] = {}
 def register_rule(rule: Rule, *, overwrite: bool = False) -> Rule:
     if not overwrite and rule.id in _RULES:
         raise ValueError(f"rule {rule.id} already registered")
-    if rule.engine not in ("ast", "jaxpr", "comm"):
+    if rule.engine not in ("ast", "jaxpr", "comm", "pallas"):
         raise ValueError(f"unknown engine {rule.engine!r}")
     _RULES[rule.id] = rule
     return rule
@@ -192,6 +199,57 @@ register_rule(Rule(
     "compressed bf16/int8 wire format): the declared bytes-on-wire "
     "budget silently multiplies",
 ))
+register_rule(Rule(
+    "CA400", "kernel-entry-error", "pallas",
+    "a KERNEL_ENTRIES registration failed to build its layout or trace "
+    "its kernel body: the grid/BlockSpec checks did not run for that "
+    "configuration (always reported — a broken entry must not silently "
+    "skip its contracts)",
+))
+register_rule(Rule(
+    "CA401", "kernel-write-race", "pallas",
+    "two grid points map to the same output block along grid dims the "
+    "kernel does not declare as sequential accumulation (a parallel "
+    "write race), or a declared accumulation revisits the block "
+    "non-consecutively (the block is flushed when its index changes, so "
+    "the later visit clobbers the earlier partial sums — the "
+    "blocksparse duplicate-row scatter hazard)",
+))
+register_rule(Rule(
+    "CA402", "kernel-coverage-gap", "pallas",
+    "the union of output blocks written over the whole grid fails to "
+    "tile the output array: unwritten blocks ship whatever stale memory "
+    "the buffer held (e.g. a block-CSR row list missing a block-row)",
+))
+register_rule(Rule(
+    "CA403", "kernel-block-oob", "pallas",
+    "an input/output BlockSpec index map evaluates outside "
+    "[0, cdiv(dim, block)) at some grid point given the padded array "
+    "bounds: the kernel reads or writes past the operand (e.g. a "
+    "block-CSR col id addressing beyond the dense operand's block rows)",
+))
+register_rule(Rule(
+    "CA404", "kernel-narrow-accumulator", "pallas",
+    "the traced body of an f64-contract kernel narrows a float64 value "
+    "(convert_element_type to f32/f16/bf16, or a dot_general with a "
+    "narrow preferred_element_type over f64 operands): the solver's f64 "
+    "iteration contract must hold inside the kernel too",
+))
+register_rule(Rule(
+    "CA405", "kernel-missing-oracle", "pallas",
+    "a pallas_call site ships without a registered ref.py oracle twin, "
+    "or its KERNEL_ENTRIES declaration names a missing oracle / an "
+    "unknown tolerance class: every kernel must declare bit-exact or "
+    "fp-tolerant and be differentially testable against pure jnp",
+))
+register_rule(Rule(
+    "CA406", "kernel-spec-inconsistent", "pallas",
+    "grid/BlockSpec/SMEM scalar-table shape inconsistency: index-map "
+    "arity differs from the grid (+ scalar-prefetch) rank, block rank "
+    "differs from the operand rank, a block dim exceeds the operand "
+    "dim, or the SMEM table holds fewer rows than the grid's lane "
+    "indexing reads",
+))
 
 
 # ---------------------------------------------------------------------------
@@ -201,13 +259,14 @@ register_rule(Rule(
 AST_RULES = frozenset(r.id for r in all_rules() if r.engine == "ast")
 JAXPR_RULES = frozenset(r.id for r in all_rules() if r.engine == "jaxpr")
 COMM_RULES = frozenset(r.id for r in all_rules() if r.engine == "comm")
+PALLAS_RULES = frozenset(r.id for r in all_rules() if r.engine == "pallas")
 
 
 @dataclass(frozen=True)
 class Profile:
     """The rule subset + per-rule knobs active for one directory tree."""
     name: str
-    rules: frozenset = AST_RULES | JAXPR_RULES | COMM_RULES
+    rules: frozenset = AST_RULES | JAXPR_RULES | COMM_RULES | PALLAS_RULES
     # modules under the f64 accumulation contract (CA104), matched as
     # posix path suffixes
     f64_modules: tuple = ()
@@ -231,6 +290,7 @@ F64_CONTRACT_MODULES = (
     "repro/comm/matmul1p5d.py",
     "repro/comm/sparse1p5d.py",
     "repro/kernels/softthresh.py",
+    "repro/kernels/pathstep.py",
     "repro/kernels/blocksparse_matmul.py",
     "repro/kernels/ref.py",
     "repro/kernels/ops.py",
@@ -245,7 +305,7 @@ COLLECTIVE_LAYER = (
 
 DEFAULT_PROFILE = Profile(
     name="default",
-    rules=AST_RULES | JAXPR_RULES | COMM_RULES,
+    rules=AST_RULES | JAXPR_RULES | COMM_RULES | PALLAS_RULES,
     f64_modules=F64_CONTRACT_MODULES,
     collective_layer=COLLECTIVE_LAYER,
 )

@@ -95,6 +95,39 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 
+def kernel_layout(B: int, Hq: int, Hkv: int, Lq: int, Lkv: int, D: int,
+                  *, block_q: int = DEFAULT_BLOCK_Q,
+                  block_k: int = DEFAULT_BLOCK_K) -> dict:
+    """Grid + BlockSpec geometry of the flash-attention ``pallas_call``.
+
+    Shared by the wrapper below and the CA4xx kernel verifier (via
+    ``kernels.manifest``).  The out spec ignores the kv grid dim (dim 3,
+    the innermost one): the kernel revisits its output block across kv
+    tiles with VMEM scratch accumulators, declared to the verifier as a
+    sequential-accumulation dim.  The kv index maps carry ``group`` as a
+    bound default arg, so their non-default arity stays the grid rank.
+    """
+    group = Hq // Hkv
+    bq = min(block_q, Lq)
+    bk = min(block_k, Lkv)
+    gq, gk = pl.cdiv(Lq, bq), pl.cdiv(Lkv, bk)
+    return {
+        "grid": (B, Hq, gq, gk),
+        "in_specs": [
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        "out_specs": pl.BlockSpec(
+            (1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        "out_shapes": ((B, Hq, Lq, D),),
+        "bq": bq,
+        "bk": bk,
+    }
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "softcap", "scale",
@@ -111,10 +144,9 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
     """
     B, Hq, Lq, D = q.shape
     Hkv, Lkv = k.shape[1], k.shape[2]
-    group = Hq // Hkv
-    bq = min(block_q, Lq)
-    bk = min(block_k, Lkv)
-    gq, gk = pl.cdiv(Lq, bq), pl.cdiv(Lkv, bk)
+    lay = kernel_layout(B, Hq, Hkv, Lq, Lkv, D,
+                        block_q=block_q, block_k=block_k)
+    bq, bk = lay["bq"], lay["bk"]
     scale = scale if scale is not None else float(D) ** -0.5
     q_offset = Lkv - Lq
 
@@ -124,15 +156,9 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
 
     out = pl.pallas_call(
         kernel,
-        grid=(B, Hq, gq, gk),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, bk, D),
-                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
-            pl.BlockSpec((1, 1, bk, D),
-                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        grid=lay["grid"],
+        in_specs=lay["in_specs"],
+        out_specs=lay["out_specs"],
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 128), jnp.float32),

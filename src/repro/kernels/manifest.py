@@ -1,0 +1,474 @@
+"""Kernel verification manifest: the ``KERNEL_ENTRIES`` registry.
+
+Every ``pallas_call`` site in this package registers itself here with
+
+  * its concrete grid/BlockSpec geometry at a set of representative
+    configurations (aligned tiles, edge tiles, the prime-p full-tile
+    fallback, inf-guarded weight lanes), built from the SAME
+    ``kernel_layout()`` helper the kernel's own wrapper consumes — the
+    verifier checks exactly what ships;
+  * its ``ref.py`` oracle twin and a declared tolerance class
+    (``bit-exact`` or ``fp-tolerant``, mirroring the CA30x contract
+    pattern);
+  * a seeded differential-fuzz builder that runs the kernel in interpret
+    mode against the jitted oracle at each configuration.
+
+The static CA4xx engine (:mod:`repro.analysis.pallaspass`) enumerates
+each configuration's grid and evaluates every index map at every grid
+point; the differential sanitizer (:mod:`repro.analysis.kernelfuzz`)
+executes the fuzz builders and enforces the tolerance classes.
+
+Entry schema (one dict per kernel module)::
+
+    {
+      "name": "kernels.softthresh.fused_prox_stats",   # finding context
+      "path": "src/repro/kernels/softthresh.py",       # finding location
+      "oracle": "fused_prox_stats",   # attribute of kernels.ref (CA405)
+      "tolerance": "bit-exact",       # class of the PRIMARY output
+      "rtol": 1e-11, "atol": 1e-11,   # fp-tolerant comparison knobs
+      "f64_contract": True,           # CA404 traces the kernel at f64
+      "configs": ({"label": "aligned", ...}, ...),   # parameter grid
+      "layout": cfg -> KernelLayout,  # concrete geometry (CA401/2/3/6)
+      "fuzz": (cfg, np_rng) -> [(out_name, got, want, tol_class), ...],
+      "trace": optional () -> {"fn": callable, "args": tuple},  # CA404
+      "skip": ("CA4xx", ...),         # optional per-entry opt-outs
+    }
+
+``layout``/``fuzz``/``trace`` are thunks taking only manifest data, so
+importing this module never builds arrays or touches the backend.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+#: the tolerance classes a kernel may declare for its oracle twin:
+#: ``bit-exact`` outputs are compared with assert_array_equal, while
+#: ``fp-tolerant`` outputs use allclose at the entry's rtol/atol
+TOLERANCE_CLASSES = ("bit-exact", "fp-tolerant")
+
+#: kernel-package files shared by every entry — a git diff touching one
+#: of these invalidates the whole registry under ``--changed`` scoping
+SHARED_KERNEL_FILES = (
+    "src/repro/kernels/manifest.py",
+    "src/repro/kernels/ops.py",
+    "src/repro/kernels/ref.py",
+)
+
+
+@dataclass(frozen=True)
+class BlockArg:
+    """One ``pallas_call`` operand: logical array shape + BlockSpec.
+
+    ``spec.block_shape is None`` marks an SMEM scalar-table operand (no
+    index map; bounds come from ``KernelLayout.scalar_rows``)."""
+    name: str
+    shape: tuple
+    spec: object
+
+
+@dataclass(frozen=True)
+class KernelLayout:
+    """Concrete geometry of one ``pallas_call`` at one manifest config.
+
+    ``prefetch`` holds the scalar-prefetch arrays appended to every
+    index-map call (PrefetchScalarGridSpec semantics).  ``sequential``
+    maps an output position to the frozenset of grid dims the kernel
+    DECLARES as in-order accumulation over that output — revisiting an
+    output block along any other dim is a CA401 write race, and even a
+    declared revisit must be one contiguous run of grid steps (the
+    output tile is flushed when its block index changes).
+    ``scalar_rows`` maps an SMEM input position to the minimum leading
+    table extent the kernel body indexes (CA406)."""
+    grid: tuple
+    inputs: tuple
+    outputs: tuple
+    prefetch: tuple = ()
+    sequential: dict = field(default_factory=dict)
+    scalar_rows: dict = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# jitted oracles (jit wrapping is lazy: no backend touch at import)
+# ---------------------------------------------------------------------------
+
+def _jit_oracles():
+    import jax
+
+    from . import ref
+    return {
+        "fused_prox_stats": jax.jit(ref.fused_prox_stats,
+                                    static_argnames=("block",)),
+        "fused_path_step": jax.jit(ref.fused_path_step),
+        "blocksparse_matmul": jax.jit(ref.blocksparse_matmul,
+                                      static_argnames=("p",)),
+        "attention": jax.jit(ref.attention,
+                             static_argnames=("causal", "window",
+                                              "softcap", "scale")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# softthresh (fused prox + stats)
+# ---------------------------------------------------------------------------
+
+def _softthresh_layout(cfg) -> KernelLayout:
+    from . import softthresh as st
+    m, n = cfg["m"], cfg["n"]
+    weighted = bool(cfg.get("weighted"))
+    lay = st.kernel_layout(m, n, weighted=weighted,
+                           block=tuple(cfg["block"]))
+    gm, gn = lay["grid"]
+    inputs = [BlockArg("alpha", (1,), lay["in_specs"][0]),
+              BlockArg("z", (m, n), lay["in_specs"][1]),
+              BlockArg("diag_mask", (m, n), lay["in_specs"][2])]
+    if weighted:
+        inputs.append(BlockArg("weights", (m, n), lay["in_specs"][3]))
+    return KernelLayout(
+        grid=lay["grid"],
+        inputs=tuple(inputs),
+        outputs=(BlockArg("out", lay["out_shapes"][0], lay["out_specs"][0]),
+                 BlockArg("stats", lay["out_shapes"][1],
+                          lay["out_specs"][1])),
+        scalar_rows={0: 1},
+    )
+
+
+def _softthresh_problem(cfg, rng):
+    m, n = cfg["m"], cfg["n"]
+    z = rng.standard_normal((m, n))
+    pm = min(m, n)
+    idx = np.arange(pm)
+    z[idx, idx] = np.abs(z[idx, idx]) + 0.1     # positive diag for logdet
+    mask = np.zeros((m, n))
+    mask[idx, idx] = 1.0
+    weights = None
+    if cfg.get("weighted"):
+        w = np.abs(rng.standard_normal((m, n))) + 0.1
+        w[rng.random((m, n)) < 0.15] = np.inf   # structural exclusions
+        weights = w
+    return z, mask, weights
+
+
+def _softthresh_fuzz(cfg, rng):
+    import jax.numpy as jnp
+
+    from . import ops
+    z, mask, weights = _softthresh_problem(cfg, rng)
+    dtype = jnp.float64
+    za, ma = jnp.asarray(z, dtype), jnp.asarray(mask, dtype)
+    wa = None if weights is None else jnp.asarray(weights, dtype)
+    alpha = cfg.get("alpha", 0.3)
+    block = tuple(cfg["block"])
+    got = ops.fused_prox_stats(za, ma, alpha, weights=wa, block=block,
+                               interpret=True)
+    want = _jit_oracles()["fused_prox_stats"](za, ma, alpha, weights=wa,
+                                              block=block)
+    names = ("out", "logdet", "l1_offdiag", "sumsq", "min_diag",
+             "block_nnz")
+    # the elementwise outputs and the order-free reductions (min, exact
+    # counts) are bit-identical to the jitted oracle; the tile-summed
+    # scalars differ only by association order
+    classes = ("bit-exact", "fp-tolerant", "fp-tolerant", "fp-tolerant",
+               "bit-exact", "bit-exact")
+    return [(nm, g, w, cl)
+            for nm, g, w, cl in zip(names, got, want, classes)]
+
+
+def _softthresh_trace():
+    import jax.numpy as jnp
+
+    from . import softthresh as st
+    p = 8
+    z = jnp.linspace(-1.0, 1.0, p * p, dtype=jnp.float64).reshape(p, p)
+    dm = jnp.eye(p, dtype=jnp.float64)
+    return {"fn": lambda z_, dm_: st.fused_prox_stats(
+                z_, dm_, 0.1, block=(4, 4), interpret=True),
+            "args": (z, dm)}
+
+
+# ---------------------------------------------------------------------------
+# pathstep (fused path-step megakernel)
+# ---------------------------------------------------------------------------
+
+def _pathstep_layout(cfg) -> KernelLayout:
+    from . import pathstep as ps
+    c, p = cfg["c"], cfg["p"]
+    weighted = bool(cfg.get("weighted"))
+    lay = ps.kernel_layout(c, p, weighted=weighted, block=cfg["block"])
+    flat = (c * p, p)
+    inputs = [BlockArg("scal", (c, 3), lay["in_specs"][0]),
+              BlockArg("omega", flat, lay["in_specs"][1]),
+              BlockArg("w", flat, lay["in_specs"][2]),
+              BlockArg("w_t", flat, lay["in_specs"][3])]
+    if weighted:
+        inputs.append(BlockArg("weights", flat, lay["in_specs"][4]))
+    return KernelLayout(
+        grid=lay["grid"],
+        inputs=tuple(inputs),
+        outputs=(BlockArg("cand", lay["out_shapes"][0],
+                          lay["out_specs"][0]),
+                 BlockArg("stats", lay["out_shapes"][1],
+                          lay["out_specs"][1])),
+        scalar_rows={0: c},
+    )
+
+
+def _pathstep_problem(cfg, rng):
+    c, p = cfg["c"], cfg["p"]
+    om = 0.1 * rng.standard_normal((c, p, p))
+    idx = np.arange(p)
+    om[:, idx, idx] = np.abs(om[:, idx, idx]) + 1.0   # safe 1/omega diag
+    w = rng.standard_normal((c, p, p))
+    tau = 0.3 + 0.1 * np.arange(c)
+    lam1 = 0.05 + 0.02 * np.arange(c)
+    lam2 = np.full(c, 0.01)
+    weights = None
+    if cfg.get("weighted"):
+        wt = np.abs(rng.standard_normal((c, p, p))) + 0.1
+        wt[rng.random((c, p, p)) < 0.15] = np.inf
+        weights = wt
+        if cfg.get("zero_lam1_lane"):
+            lam1[0] = 0.0      # inf-guard: inf * 0 must still force zeros
+    return om, w, tau, lam1, lam2, weights
+
+
+def _pathstep_fuzz(cfg, rng):
+    import jax.numpy as jnp
+
+    from . import ops
+    om, w, tau, lam1, lam2, weights = _pathstep_problem(cfg, rng)
+    dtype = jnp.float64
+    oma, wa = jnp.asarray(om, dtype), jnp.asarray(w, dtype)
+    taua, l1a, l2a = (jnp.asarray(v, dtype) for v in (tau, lam1, lam2))
+    wta = None if weights is None else jnp.asarray(weights, dtype)
+    got = ops.fused_path_step(oma, wa, taua, l1a, l2a, weights=wta,
+                              block=cfg["block"], interpret=True)
+    want = _jit_oracles()["fused_path_step"](oma, wa, taua, l1a, l2a,
+                                             weights=wta)
+    # the candidate is bit-identical to the jitted oracle (same op order
+    # per element); the (C, 5) stats differ by tile summation order
+    return [("cand", got[0], want[0], "bit-exact"),
+            ("stats", got[1], want[1], "fp-tolerant")]
+
+
+def _pathstep_trace():
+    import jax.numpy as jnp
+
+    from . import pathstep as ps
+    c, p = 2, 8
+    om = (jnp.eye(p, dtype=jnp.float64)[None]
+          + 0.01 * jnp.arange(c * p * p, dtype=jnp.float64
+                              ).reshape(c, p, p) / (c * p * p))
+    w = om * 1.5
+    tau = jnp.full((c,), 0.5, jnp.float64)
+    lam = jnp.full((c,), 0.1, jnp.float64)
+    return {"fn": lambda om_, w_, tau_, lam_: ps.fused_path_step(
+                om_, w_, tau_, lam_, lam_, block=4, interpret=True),
+            "args": (om, w, tau, lam)}
+
+
+# ---------------------------------------------------------------------------
+# blocksparse_matmul (block-CSR x dense)
+# ---------------------------------------------------------------------------
+
+def _bsr_problem(cfg, rng):
+    from . import ref
+    p, bs = cfg["p"], cfg["bs"]
+    nbr = p // bs
+    a = rng.standard_normal((p, p))
+    keep = rng.random((nbr, nbr)) < cfg["density"]
+    for r in range(nbr):
+        for c in range(nbr):
+            if not keep[r, c]:
+                a[r * bs:(r + 1) * bs, c * bs:(c + 1) * bs] = 0.0
+    vals, rows, cols = ref.dense_to_block_csr(a, bs)
+    b = rng.standard_normal((p, cfg["m"]))
+    return a, vals, rows, cols, b
+
+
+def _blocksparse_layout(cfg) -> KernelLayout:
+    from . import blocksparse_matmul as bsmm
+    # the prefetch row/col ids are part of the geometry: derive them from
+    # the config's seeded problem, exactly as the fuzz harness does
+    _, vals, rows, cols, _ = _bsr_problem(
+        cfg, np.random.default_rng(cfg.get("seed", 0)))
+    nb, bs = vals.shape[0], cfg["bs"]
+    p, m = cfg["p"], cfg["m"]
+    lay = bsmm.kernel_layout(nb, bs, p, m, block_n=cfg["block_n"])
+    return KernelLayout(
+        grid=lay["grid"],
+        inputs=(BlockArg("values", (nb, bs, bs), lay["in_specs"][0]),
+                BlockArg("b", (p, m), lay["in_specs"][1])),
+        outputs=(BlockArg("out", lay["out_shapes"][0],
+                          lay["out_specs"]),),
+        prefetch=(rows, cols),
+        # the nnz sweep (grid dim 1) accumulates into out in CSR order:
+        # declared sequential, so only NON-contiguous row revisits race
+        sequential={0: frozenset({1})},
+    )
+
+
+def _blocksparse_fuzz(cfg, rng):
+    import jax.numpy as jnp
+
+    from . import ops
+    _, vals, rows, cols, b = _bsr_problem(cfg, rng)
+    dtype = jnp.float64
+    va, ba = jnp.asarray(vals, dtype), jnp.asarray(b, dtype)
+    ra, ca = jnp.asarray(rows), jnp.asarray(cols)
+    got = ops.blocksparse_matmul(va, ra, ca, ba, block_n=cfg["block_n"],
+                                 interpret=True)
+    want = _jit_oracles()["blocksparse_matmul"](va, ra, ca, ba,
+                                                p=cfg["p"])
+    # VMEM per-block accumulation vs the oracle's dense matmul: same
+    # values, different association order
+    return [("out", got, want, "fp-tolerant")]
+
+
+def _blocksparse_trace():
+    import jax.numpy as jnp
+
+    from . import blocksparse_matmul as bsmm
+    vals = jnp.arange(2 * 4 * 4, dtype=jnp.float64).reshape(2, 4, 4)
+    rows = jnp.asarray([0, 1], jnp.int32)
+    cols = jnp.asarray([1, 0], jnp.int32)
+    b = jnp.ones((8, 8), jnp.float64)
+    return {"fn": lambda v, b_: bsmm.blocksparse_matmul(
+                v, rows, cols, b_, block_n=4, interpret=True),
+            "args": (vals, b)}
+
+
+# ---------------------------------------------------------------------------
+# flash_attention (online-softmax attention)
+# ---------------------------------------------------------------------------
+
+def _flash_layout(cfg) -> KernelLayout:
+    from . import flash_attention as fa
+    B, Hq, Hkv = cfg["B"], cfg["Hq"], cfg["Hkv"]
+    Lq, Lkv, D = cfg["Lq"], cfg["Lkv"], cfg["D"]
+    lay = fa.kernel_layout(B, Hq, Hkv, Lq, Lkv, D,
+                           block_q=cfg["block_q"], block_k=cfg["block_k"])
+    return KernelLayout(
+        grid=lay["grid"],
+        inputs=(BlockArg("q", (B, Hq, Lq, D), lay["in_specs"][0]),
+                BlockArg("k", (B, Hkv, Lkv, D), lay["in_specs"][1]),
+                BlockArg("v", (B, Hkv, Lkv, D), lay["in_specs"][2])),
+        outputs=(BlockArg("out", lay["out_shapes"][0],
+                          lay["out_specs"]),),
+        # the kv sweep (grid dim 3, innermost) revisits the output block
+        # with VMEM scratch accumulators: declared sequential
+        sequential={0: frozenset({3})},
+    )
+
+
+def _flash_fuzz(cfg, rng):
+    import jax.numpy as jnp
+
+    from . import ops
+    B, Hq, Hkv = cfg["B"], cfg["Hq"], cfg["Hkv"]
+    Lq, Lkv, D = cfg["Lq"], cfg["Lkv"], cfg["D"]
+    q = jnp.asarray(rng.standard_normal((B, Hq, Lq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Lkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Lkv, D)), jnp.float32)
+    kw = dict(causal=cfg.get("causal", True), window=cfg.get("window"),
+              softcap=cfg.get("softcap"))
+    got = ops.flash_attention(q, k, v, block_q=cfg["block_q"],
+                              block_k=cfg["block_k"], interpret=True,
+                              **kw)
+    want = _jit_oracles()["attention"](q, k, v, **kw)
+    # online softmax vs materialized softmax: f32 accumulation noise
+    return [("out", got, want, "fp-tolerant")]
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+KERNEL_ENTRIES = [
+    {
+        "name": "kernels.softthresh.fused_prox_stats",
+        "path": "src/repro/kernels/softthresh.py",
+        "oracle": "fused_prox_stats",
+        "tolerance": "bit-exact",
+        "rtol": 1e-11,
+        "atol": 1e-11,
+        "f64_contract": True,
+        "configs": (
+            {"label": "aligned", "m": 32, "n": 32, "block": (16, 16)},
+            {"label": "edge-tile", "m": 40, "n": 24, "block": (16, 16)},
+            {"label": "prime-p", "m": 13, "n": 13, "block": (8, 8)},
+            {"label": "weighted-inf-alpha0", "m": 24, "n": 24,
+             "block": (16, 16), "weighted": True, "alpha": 0.0},
+        ),
+        "layout": _softthresh_layout,
+        "fuzz": _softthresh_fuzz,
+        "trace": _softthresh_trace,
+    },
+    {
+        "name": "kernels.pathstep.fused_path_step",
+        "path": "src/repro/kernels/pathstep.py",
+        "oracle": "fused_path_step",
+        "tolerance": "bit-exact",
+        "rtol": 1e-11,
+        "atol": 1e-11,
+        "f64_contract": True,
+        "configs": (
+            {"label": "aligned", "c": 2, "p": 16, "block": 8},
+            {"label": "prime-p-full-tile", "c": 2, "p": 13, "block": 8},
+            {"label": "odd-divisor-edge", "c": 1, "p": 12, "block": 8},
+            {"label": "weighted-inf-alpha0", "c": 2, "p": 8, "block": 4,
+             "weighted": True, "zero_lam1_lane": True},
+        ),
+        "layout": _pathstep_layout,
+        "fuzz": _pathstep_fuzz,
+        "trace": _pathstep_trace,
+    },
+    {
+        "name": "kernels.blocksparse_matmul.blocksparse_matmul",
+        "path": "src/repro/kernels/blocksparse_matmul.py",
+        "oracle": "blocksparse_matmul",
+        "tolerance": "fp-tolerant",
+        "rtol": 1e-10,
+        "atol": 1e-10,
+        "f64_contract": True,
+        "configs": (
+            {"label": "dense", "p": 16, "bs": 8, "m": 16, "block_n": 8,
+             "density": 1.0, "seed": 1},
+            {"label": "partial", "p": 32, "bs": 8, "m": 16, "block_n": 8,
+             "density": 0.4, "seed": 2},
+            {"label": "empty-rows", "p": 16, "bs": 4, "m": 8,
+             "block_n": 8, "density": 0.0, "seed": 3},
+            {"label": "edge-n", "p": 16, "bs": 8, "m": 12, "block_n": 8,
+             "density": 0.7, "seed": 4},
+        ),
+        "layout": _blocksparse_layout,
+        "fuzz": _blocksparse_fuzz,
+        "trace": _blocksparse_trace,
+    },
+    {
+        "name": "kernels.flash_attention.flash_attention",
+        "path": "src/repro/kernels/flash_attention.py",
+        "oracle": "attention",
+        "tolerance": "fp-tolerant",
+        "rtol": 2e-3,
+        "atol": 2e-3,
+        # the attention kernel's f32 accumulator is its own contract
+        # (mirrors the CA104 flash exemption): CA404 does not apply
+        "f64_contract": False,
+        "configs": (
+            {"label": "causal-gqa", "B": 1, "Hq": 2, "Hkv": 1, "Lq": 32,
+             "Lkv": 32, "D": 16, "block_q": 16, "block_k": 16,
+             "causal": True},
+            {"label": "window-softcap-edge", "B": 1, "Hq": 2, "Hkv": 2,
+             "Lq": 40, "Lkv": 40, "D": 16, "block_q": 16, "block_k": 16,
+             "causal": False, "window": 16, "softcap": 10.0},
+            {"label": "decode-tail", "B": 1, "Hq": 2, "Hkv": 1, "Lq": 8,
+             "Lkv": 40, "D": 16, "block_q": 8, "block_k": 16,
+             "causal": True},
+        ),
+        "layout": _flash_layout,
+        "fuzz": _flash_fuzz,
+    },
+]

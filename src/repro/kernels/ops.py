@@ -34,6 +34,14 @@ def set_interpret(value: bool | None) -> None:
     _INTERPRET_OVERRIDE = value
 
 
+def reset_interpret() -> None:
+    """Drop any pinned override: equivalent to ``set_interpret(None)``.
+
+    Tests use the autouse conftest guard built on this so a test that
+    pins interpret mode can never leak the pin into later tests."""
+    set_interpret(None)
+
+
 def interpret_default() -> bool:
     """Interpret unless overridden or actually running on TPU."""
     if _INTERPRET_OVERRIDE is not None:

@@ -123,6 +123,39 @@ def _kernel_weighted(scal_ref, om_ref, w_ref, wt_ref, wts_ref, out_ref,
     _write_stats(parts, stats_ref)
 
 
+def kernel_layout(c_lanes: int, p: int, *, weighted: bool = False,
+                  block: int = DEFAULT_BLOCK) -> dict:
+    """Grid + BlockSpec geometry of the path-step ``pallas_call``.
+
+    Shared by the wrapper below and the CA4xx kernel verifier (via
+    ``kernels.manifest``).  ``bs`` is the resolved tile edge (the prime-p
+    full-tile fallback of :func:`_block_edge` included) and ``gpm`` the
+    per-lane block count; the SMEM scalar table rides first in
+    ``in_specs``, matching the call's operand order.
+    """
+    bs = _block_edge(p, block)
+    gpm = p // bs
+    gm, gn = c_lanes * gpm, gpm
+    tile = pl.BlockSpec((bs, bs), lambda i, j: (i, j))
+    # the transposed-W operand: within lane i // gpm, swap block coords
+    tile_t = pl.BlockSpec(
+        (bs, bs), lambda i, j: ((i // gpm) * gpm + j, i % gpm))
+    in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM), tile, tile, tile_t]
+    if weighted:
+        in_specs.append(tile)
+    return {
+        "grid": (gm, gn),
+        "in_specs": in_specs,
+        "out_specs": [
+            pl.BlockSpec((bs, bs), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1, STATS_LANES), lambda i, j: (i, j, 0)),
+        ],
+        "out_shapes": ((c_lanes * p, p), (gm, gn, STATS_LANES)),
+        "bs": bs,
+        "gpm": gpm,
+    }
+
+
 @partial(jax.jit, static_argnames=("block", "interpret"))
 def fused_path_step(omega: jax.Array, w: jax.Array, tau, lam1, lam2,
                     *, weights=None, block: int = DEFAULT_BLOCK,
@@ -138,9 +171,10 @@ def fused_path_step(omega: jax.Array, w: jax.Array, tau, lam1, lam2,
     """
     c_lanes, p, _ = omega.shape
     dtype = omega.dtype
-    bs = _block_edge(p, block)
-    gpm = p // bs
-    gm, gn = c_lanes * gpm, gpm
+    lay = kernel_layout(c_lanes, p, weighted=weights is not None,
+                        block=block)
+    bs, gpm = lay["bs"], lay["gpm"]
+    gm, gn = lay["grid"]
     scal = jnp.stack([
         jnp.broadcast_to(jnp.asarray(tau, dtype), (c_lanes,)),
         jnp.broadcast_to(jnp.asarray(tau * lam1, dtype), (c_lanes,)),
@@ -148,27 +182,17 @@ def fused_path_step(omega: jax.Array, w: jax.Array, tau, lam1, lam2,
     ], axis=1)
     om2 = omega.reshape(c_lanes * p, p)
     w2 = w.reshape(c_lanes * p, p)
-    tile = pl.BlockSpec((bs, bs), lambda i, j: (i, j))
-    # the transposed-W operand: within lane i // gpm, swap block coords
-    tile_t = pl.BlockSpec(
-        (bs, bs), lambda i, j: ((i // gpm) * gpm + j, i % gpm))
     stats_dtype = jnp.promote_types(dtype, STATS_MIN_DTYPE)
-    out_specs = [
-        pl.BlockSpec((bs, bs), lambda i, j: (i, j)),
-        pl.BlockSpec((1, 1, STATS_LANES), lambda i, j: (i, j, 0)),
-    ]
     out_shape = [
-        jax.ShapeDtypeStruct((c_lanes * p, p), dtype),
-        jax.ShapeDtypeStruct((gm, gn, STATS_LANES), stats_dtype),
+        jax.ShapeDtypeStruct(lay["out_shapes"][0], dtype),
+        jax.ShapeDtypeStruct(lay["out_shapes"][1], stats_dtype),
     ]
-    kw = dict(grid=(gm, gn), out_specs=out_specs, out_shape=out_shape,
+    kw = dict(grid=lay["grid"], in_specs=lay["in_specs"],
+              out_specs=lay["out_specs"], out_shape=out_shape,
               interpret=interpret)
     if weights is None:
         cand, stats = pl.pallas_call(
-            partial(_kernel, bs=bs, gpm=gpm),
-            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), tile, tile,
-                      tile_t],
-            **kw)(scal, om2, w2, w2)
+            partial(_kernel, bs=bs, gpm=gpm), **kw)(scal, om2, w2, w2)
     else:
         wts = jnp.asarray(weights, dtype)
         if wts.shape != omega.shape:
@@ -176,8 +200,6 @@ def fused_path_step(omega: jax.Array, w: jax.Array, tau, lam1, lam2,
                              f"lane-stacked iterate shape {omega.shape}")
         cand, stats = pl.pallas_call(
             partial(_kernel_weighted, bs=bs, gpm=gpm),
-            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), tile, tile,
-                      tile_t, tile],
             **kw)(scal, om2, w2, w2, wts.reshape(c_lanes * p, p))
     per_lane = stats.reshape(c_lanes, gpm, gn, STATS_LANES).sum(axis=(1, 2))
     return cand.reshape(c_lanes, p, p), per_lane[:, :N_STATS]

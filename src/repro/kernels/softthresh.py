@@ -94,6 +94,35 @@ def _kernel_weighted(alpha_ref, z_ref, mask_ref, w_ref, out_ref, stats_ref,
     _write_stats(out, m, valid, stats_ref)
 
 
+def kernel_layout(m: int, n: int, *, weighted: bool = False,
+                  block=DEFAULT_BLOCK) -> dict:
+    """Grid + BlockSpec geometry of the fused-prox ``pallas_call``.
+
+    The single source the wrapper below AND the CA4xx kernel verifier
+    (``repro.analysis.pallaspass``, via ``kernels.manifest``) share: the
+    verifier enumerates ``grid`` and evaluates every index map returned
+    here, so a layout edit is checked exactly as it ships.  ``in_specs``
+    lists the SMEM alpha table first, matching the operand order of the
+    call; ``out_shapes`` are the logical (unpadded) output array shapes.
+    """
+    bm = min(block[0], m)
+    bn = min(block[1], n)
+    gm, gn = pl.cdiv(m, bm), pl.cdiv(n, bn)
+    tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM), tile, tile]
+    if weighted:
+        in_specs.append(tile)
+    return {
+        "grid": (gm, gn),
+        "in_specs": in_specs,
+        "out_specs": [
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1, STATS_LANES), lambda i, j: (i, j, 0)),
+        ],
+        "out_shapes": ((m, n), (gm, gn, STATS_LANES)),
+    }
+
+
 @partial(jax.jit, static_argnames=("block", "interpret"))
 def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha,
                      *, weights=None, block=DEFAULT_BLOCK,
@@ -109,28 +138,19 @@ def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha,
     ``alpha * weights`` elementwise (the weighted-l1/adaptive-lasso lane);
     ``None`` keeps the scalar-broadcast fast path."""
     m, n = z.shape
-    bm = min(block[0], m)
-    bn = min(block[1], n)
-    gm, gn = pl.cdiv(m, bm), pl.cdiv(n, bn)
+    lay = kernel_layout(m, n, weighted=weights is not None, block=block)
     alpha_arr = jnp.asarray(alpha, z.dtype).reshape(1)
-    tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
-    out_specs = [
-        pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        pl.BlockSpec((1, 1, STATS_LANES), lambda i, j: (i, j, 0)),
-    ]
     stats_dtype = jnp.promote_types(z.dtype, STATS_MIN_DTYPE)
     out_shape = [
-        jax.ShapeDtypeStruct((m, n), z.dtype),
-        jax.ShapeDtypeStruct((gm, gn, STATS_LANES), stats_dtype),
+        jax.ShapeDtypeStruct(lay["out_shapes"][0], z.dtype),
+        jax.ShapeDtypeStruct(lay["out_shapes"][1], stats_dtype),
     ]
+    kw = dict(grid=lay["grid"], in_specs=lay["in_specs"],
+              out_specs=lay["out_specs"], out_shape=out_shape,
+              interpret=interpret)
     if weights is None:
         out, stats = pl.pallas_call(
-            partial(_kernel, nrows=m, ncols=n),
-            grid=(gm, gn),
-            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), tile, tile],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            interpret=interpret,
+            partial(_kernel, nrows=m, ncols=n), **kw,
         )(alpha_arr, z, diag_mask)
     else:
         w = jnp.asarray(weights, z.dtype)
@@ -139,13 +159,7 @@ def fused_prox_stats(z: jax.Array, diag_mask: jax.Array, alpha,
                 f"weights shape {w.shape} must match the iterate shape "
                 f"{z.shape}")
         out, stats = pl.pallas_call(
-            partial(_kernel_weighted, nrows=m, ncols=n),
-            grid=(gm, gn),
-            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), tile, tile,
-                      tile],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            interpret=interpret,
+            partial(_kernel_weighted, nrows=m, ncols=n), **kw,
         )(alpha_arr, z, diag_mask, w)
     logdet = jnp.sum(stats[..., 0])
     l1 = jnp.sum(stats[..., 1])

@@ -34,6 +34,18 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True)
+def _interpret_override_guard():
+    """Restore the process-wide Pallas interpret override after every
+    test so a ``kernels.ops.set_interpret(...)`` call inside one test can
+    never leak into the next (the override is module-global state)."""
+    from repro.kernels import ops
+
+    prev = ops._INTERPRET_OVERRIDE
+    yield
+    ops.set_interpret(prev)
+
+
 @pytest.fixture
 def recompile_guard():
     """Context-manager factory asserting a region compiles NOTHING new on

@@ -17,7 +17,8 @@ import json
 
 import pytest
 
-from repro.analysis import astpass, baseline, cli, commpass, jaxprpass
+from repro.analysis import (astpass, baseline, cli, commpass, jaxprpass,
+                            pallaspass)
 from repro.analysis.findings import Finding, sort_findings
 from repro.analysis.rules import (DEFAULT_PROFILE, SCRIPTS_PROFILE,
                                   all_rules, get_rule, profile_for_path)
@@ -366,6 +367,130 @@ def _trip_f64_on_compressed_wire():
         comm=lambda: {"contract": contract, "params": {}}))
 
 
+# -- pallas fixtures --------------------------------------------------------
+# CA40x rules trip on fixture KERNEL_ENTRIES-shaped dicts whose layouts
+# are built from the REAL blocksparse kernel_layout() with hand-crafted
+# prefetch row/col tables — the scatter-style output map is where every
+# grid pathology (races, gaps, OOB ids) is easiest to inject honestly.
+
+def _kernel_entry(name, layout, **kw):
+    e = {"name": name, "path": "src/repro/kernels/blocksparse_matmul.py",
+         "oracle": "blocksparse_matmul", "tolerance": "fp-tolerant",
+         "configs": ({"label": "fixture"},), "layout": layout}
+    e.update(kw)
+    return e
+
+
+def _pallas_findings(entry):
+    findings, _ = pallaspass.run_entry(entry, DEFAULT_PROFILE)
+    return findings
+
+
+def _bsr_fixture_layout(rows, cols, *, p=16, bs=8, m=8, block_n=8,
+                        declare_seq=True):
+    """The real blocksparse geometry with fixture row/col id tables."""
+    import numpy as np
+
+    from repro.kernels import blocksparse_matmul as bsmm
+    from repro.kernels.manifest import BlockArg, KernelLayout
+
+    nb = len(rows)
+    lay = bsmm.kernel_layout(nb, bs, p, m, block_n=block_n)
+    return KernelLayout(
+        grid=lay["grid"],
+        inputs=(BlockArg("values", (nb, bs, bs), lay["in_specs"][0]),
+                BlockArg("b", (p, m), lay["in_specs"][1])),
+        outputs=(BlockArg("out", lay["out_shapes"][0], lay["out_specs"]),),
+        prefetch=(np.asarray(rows), np.asarray(cols)),
+        sequential={0: frozenset({1})} if declare_seq else {},
+    )
+
+
+@trips("CA400")
+def _trip_broken_kernel_entry():
+    def boom(cfg):
+        raise RuntimeError("prefetch tables unavailable")
+    return _pallas_findings(_kernel_entry("test.broken_kernel", boom))
+
+
+@trips("CA401")
+def _trip_non_contiguous_row_revisit():
+    """Block-row 0 is written at grid steps 0 and 2 with step 1 writing
+    row 1 in between: the declared-sequential accumulation is flushed
+    and the second visit clobbers it."""
+    return _pallas_findings(_kernel_entry(
+        "test.row_revisit",
+        lambda cfg: _bsr_fixture_layout([0, 1, 0], [0, 1, 1])))
+
+
+def _trip_undeclared_write_race():
+    """Same duplicate scatter ids but with NO sequential declaration:
+    plain overlapping writes."""
+    return _pallas_findings(_kernel_entry(
+        "test.undeclared_race",
+        lambda cfg: _bsr_fixture_layout([0, 0], [0, 1], p=8,
+                                        declare_seq=False)))
+
+
+@trips("CA402")
+def _trip_output_coverage_gap():
+    """Both nnz blocks land in block-row 0 of a 2-block-row output:
+    block-row 1 ships whatever was in memory."""
+    return _pallas_findings(_kernel_entry(
+        "test.coverage_gap",
+        lambda cfg: _bsr_fixture_layout([0, 0], [0, 1])))
+
+
+@trips("CA403")
+def _trip_out_of_bounds_block_col():
+    """col id 5 indexes past the 2-block-row dense operand."""
+    return _pallas_findings(_kernel_entry(
+        "test.oob_col",
+        lambda cfg: _bsr_fixture_layout([0, 1], [5, 0])))
+
+
+@trips("CA404")
+def _trip_narrow_accumulator_in_f64_kernel():
+    import jax.numpy as jnp
+
+    def trace():
+        x = jnp.ones((4, 4), jnp.float64)
+        return {"fn": lambda v: (v.astype(jnp.float32) @
+                                 v.astype(jnp.float32).T
+                                 ).astype(jnp.float64),
+                "args": (x,)}
+
+    return _pallas_findings(_kernel_entry(
+        "test.narrow_accumulator", lambda cfg: _bsr_fixture_layout([0], [0]),
+        configs=(), f64_contract=True, trace=trace))
+
+
+@trips("CA405")
+def _trip_missing_oracle_twin():
+    return _pallas_findings(_kernel_entry(
+        "test.missing_oracle", lambda cfg: _bsr_fixture_layout([0, 1], [0, 1]),
+        configs=(), oracle="no_such_oracle", tolerance="vibes"))
+
+
+@trips("CA406")
+def _trip_smem_table_too_short():
+    """The SMEM scalar table advertises fewer rows than the grid's lane
+    indexing reads."""
+    import dataclasses
+
+    from repro.kernels import manifest
+
+    def layout(cfg):
+        lay = manifest._softthresh_layout(
+            {"m": 32, "n": 32, "block": (16, 16)})
+        return dataclasses.replace(lay, scalar_rows={0: 5})
+
+    return _pallas_findings(_kernel_entry(
+        "test.smem_short", layout,
+        path="src/repro/kernels/softthresh.py",
+        oracle="fused_prox_stats", tolerance="bit-exact"))
+
+
 # ---------------------------------------------------------------------------
 # the registry contract: every rule has a fixture, every fixture trips
 # ---------------------------------------------------------------------------
@@ -417,6 +542,60 @@ def test_ca304_flags_both_redundancy_shapes():
     assert len(msgs) == 2
     assert any("already" in m for m in msgs)
     assert any("compose" in m for m in msgs)
+
+
+def test_ca401_distinguishes_race_from_revisit_clobber():
+    """The two write-hazard shapes produce distinct diagnoses: duplicate
+    scatter ids with no sequential declaration are a RACE; declared but
+    non-contiguous duplicates are a flush-then-clobber."""
+    revisit = [f for f in _TRIPS["CA401"]() if f.rule == "CA401"]
+    assert len(revisit) == 1
+    assert "NON-consecutively" in revisit[0].message
+    assert "clobbers" in revisit[0].message
+
+    race = [f for f in _trip_undeclared_write_race() if f.rule == "CA401"]
+    assert len(race) == 1
+    assert "race" in race[0].message
+    assert "NOT declare" in race[0].message
+
+
+def test_ca402_names_the_missing_blocks():
+    hits = [f for f in _TRIPS["CA402"]() if f.rule == "CA402"]
+    assert len(hits) == 1
+    assert "(1, 0)" in hits[0].message       # the unwritten block-row
+    assert "stale" in hits[0].message
+
+
+def test_ca403_reports_the_offending_grid_point():
+    hits = [f for f in _TRIPS["CA403"]() if f.rule == "CA403"]
+    assert len(hits) == 1
+    assert "block index 5" in hits[0].message
+    assert "[0, 2)" in hits[0].message
+
+
+def test_ca405_module_coverage_catches_unregistered_kernels():
+    """An empty registry must flag every pallas_call-bearing module."""
+    hits = pallaspass.check_module_coverage([])
+    flagged = {f.path for f in hits}
+    assert "src/repro/kernels/softthresh.py" in flagged
+    assert "src/repro/kernels/blocksparse_matmul.py" in flagged
+    assert all(f.rule == "CA405" for f in hits)
+
+
+def test_shipped_kernel_registry_is_clean():
+    """The real KERNEL_ENTRIES must pass every CA4xx check — and the
+    grid records must cover every registered entry/config."""
+    from repro.kernels.manifest import KERNEL_ENTRIES
+
+    findings, records = pallaspass.run_entries(KERNEL_ENTRIES,
+                                               DEFAULT_PROFILE)
+    assert findings == []
+    assert [r["entry"] for r in records] == [e["name"]
+                                             for e in KERNEL_ENTRIES]
+    for rec, entry in zip(records, KERNEL_ENTRIES):
+        assert [c["config"] for c in rec["configs"]] == \
+            [c["label"] for c in entry["configs"]]
+        assert all(c["points"] >= 1 for c in rec["configs"])
 
 
 # ---------------------------------------------------------------------------
@@ -677,6 +856,39 @@ def test_cli_changed_mode_scans_only_touched_files(tmp_path, capsys):
     # full scan still sees the pre-existing finding too
     assert cli.main(argv) == 1
     assert "matops.py" in capsys.readouterr().out
+
+
+def test_changed_mode_subsets_kernel_entries():
+    """--changed scoping of the pallas registry: a changed kernel module
+    keeps only its entry, a non-kernel file keeps none, and a shared
+    kernel file (manifest/ops/ref) keeps the whole registry."""
+    from repro.kernels.manifest import KERNEL_ENTRIES
+
+    only = cli.subset_kernel_entries(
+        KERNEL_ENTRIES, {"src/repro/kernels/flash_attention.py"})
+    assert [e["name"] for e in only] == \
+        ["kernels.flash_attention.flash_attention"]
+    assert cli.subset_kernel_entries(
+        KERNEL_ENTRIES, {"src/repro/core/prox.py"}) == []
+    assert cli.subset_kernel_entries(
+        KERNEL_ENTRIES, {"src/repro/kernels/ref.py"}) == \
+        list(KERNEL_ENTRIES)
+
+
+def test_cli_json_report_includes_kernel_grids(tmp_path, capsys):
+    """--engine pallas emits the per-config grid records CI uploads."""
+    report = tmp_path / "pallas.json"
+    rc = cli.main(["--engine", "pallas", "--root", REPO, "--format",
+                   "json", "--output", str(report)])
+    assert rc == 0
+    capsys.readouterr()
+    data = json.loads(report.read_text(encoding="utf-8"))
+    assert data["counts"]["findings"] == 0
+    grids = {r["entry"]: r for r in data["kernel_grids"]}
+    soft = grids["kernels.softthresh.fused_prox_stats"]
+    assert soft["tolerance"] == "bit-exact"
+    labels = {c["config"] for c in soft["configs"]}
+    assert {"aligned", "edge-tile", "prime-p"} <= labels
 
 
 def test_cli_json_report_includes_comm_schedules(tmp_path, capsys):

@@ -1,0 +1,163 @@
+"""Differential kernel sanitizer: every registered kernel vs its oracle.
+
+The pytest face of ``repro-analyze --fuzz-kernels``: each
+(entry, config) pair in ``kernels.manifest.KERNEL_ENTRIES`` runs the
+kernel in interpret mode against its jitted ``ref.py`` oracle with
+deterministic per-case seeding, and the declared tolerance class is
+ENFORCED — the manifest's edge-tile, prime-p and inf-guarded-weight
+configurations all go through here.  Meta-tests prove the harness has
+teeth: a one-ulp perturbation must fail the bit-exact class (and pass
+fp-tolerant), a crashed builder must surface as a failed case rather
+than an error, and per-case seeding must replay bit-identically.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis import cli, kernelfuzz
+from repro.kernels.manifest import KERNEL_ENTRIES
+
+from conftest import REPO
+
+CASES = [(e, c) for e in KERNEL_ENTRIES for c in e["configs"]]
+CASE_IDS = [f"{e['name'].split('.')[1]}-{c['label']}" for e, c in CASES]
+
+
+@pytest.mark.parametrize("entry,cfg", CASES, ids=CASE_IDS)
+def test_kernel_matches_oracle_at_declared_tolerance(entry, cfg):
+    results = kernelfuzz.run_case(entry, cfg, seed=0)
+    assert results, "fuzz builder compared no outputs"
+    bad = kernelfuzz.failures(results)
+    assert not bad, "\n".join(r.render() for r in bad)
+    # a bit-exact entry must actually exercise the bit-exact comparator
+    # on at least one output (per-output classes may relax the rest)
+    if entry["tolerance"] == "bit-exact":
+        assert any(r.tolerance == "bit-exact" for r in results)
+
+
+# ---------------------------------------------------------------------------
+# the harness has teeth
+# ---------------------------------------------------------------------------
+
+def test_bit_exact_class_fails_on_one_ulp():
+    entry = {"name": "test.meta", "rtol": 1e-9, "atol": 1e-9}
+    want = np.linspace(-1.0, 1.0, 16)
+    got = want.copy()
+    got[3] = np.nextafter(got[3], np.inf)        # one flipped ulp
+    r = kernelfuzz._compare(entry, "cfg", "out", got, want, "bit-exact")
+    assert not r.ok
+    assert "1 element(s)" in r.detail and "bit-exact" in r.detail
+    # the same perturbation is inside any honest fp tolerance
+    assert kernelfuzz._compare(entry, "cfg", "out", got, want,
+                               "fp-tolerant").ok
+    clean = kernelfuzz._compare(entry, "cfg", "out", want, want,
+                                "bit-exact")
+    assert clean.ok and clean.max_abs_diff == 0.0
+
+
+def test_fp_tolerant_class_fails_outside_declared_tolerance():
+    entry = {"name": "test.meta", "rtol": 1e-12, "atol": 1e-12}
+    want = np.ones(8)
+    got = want + 1e-6
+    r = kernelfuzz._compare(entry, "cfg", "out", got, want, "fp-tolerant")
+    assert not r.ok and "rtol" in r.detail
+    assert r.max_abs_diff == pytest.approx(1e-6)
+
+
+def test_unknown_tolerance_and_shape_dtype_mismatches_fail():
+    entry = {"name": "test.meta"}
+    bad = kernelfuzz._compare(entry, "c", "o", np.ones(3), np.ones(3),
+                              "close-enough")
+    assert not bad.ok and "unknown tolerance class" in bad.detail
+    mis = kernelfuzz._compare(entry, "c", "o", np.ones(3), np.ones(4),
+                              "bit-exact")
+    assert not mis.ok and "shape/dtype mismatch" in mis.detail
+    dt = kernelfuzz._compare(entry, "c", "o", np.ones(3, np.float32),
+                             np.ones(3), "fp-tolerant")
+    assert not dt.ok and "shape/dtype mismatch" in dt.detail
+
+
+def test_crashed_builder_surfaces_as_failed_case():
+    entry = {"name": "test.crash", "fuzz": lambda cfg, rng: 1 // 0}
+    [r] = kernelfuzz.run_case(entry, {"label": "boom"}, seed=0)
+    assert not r.ok and r.output == "<error>"
+    assert "fuzz builder raised" in r.detail
+    assert "ZeroDivisionError" in r.detail
+
+
+def test_empty_builder_is_a_failure_not_a_pass():
+    entry = {"name": "test.empty", "fuzz": lambda cfg, rng: []}
+    [r] = kernelfuzz.run_case(entry, {"label": "none"}, seed=0)
+    assert not r.ok and r.output == "<empty>"
+
+
+def test_case_seeding_is_deterministic_and_distinct():
+    a = kernelfuzz.case_rng(0, "kernels.x.f", "aligned").standard_normal(8)
+    b = kernelfuzz.case_rng(0, "kernels.x.f", "aligned").standard_normal(8)
+    np.testing.assert_array_equal(a, b)
+    c = kernelfuzz.case_rng(0, "kernels.x.f", "edge").standard_normal(8)
+    d = kernelfuzz.case_rng(1, "kernels.x.f", "aligned").standard_normal(8)
+    assert not np.array_equal(a, c)
+    assert not np.array_equal(a, d)
+
+
+def test_report_counts_and_case_table():
+    results = [
+        kernelfuzz.FuzzResult("e", "c", "out", "bit-exact", True),
+        kernelfuzz.FuzzResult("e", "c", "out2", "fp-tolerant", False,
+                              0.5, "outside tolerance"),
+    ]
+    rep = kernelfuzz.report(results, seed=7)
+    assert rep["seed"] == 7
+    assert rep["counts"] == {"cases": 2, "failures": 1}
+    assert rep["cases"][1]["detail"] == "outside tolerance"
+    assert [r.output for r in kernelfuzz.failures(results)] == ["out2"]
+
+
+# ---------------------------------------------------------------------------
+# the CLI gate
+# ---------------------------------------------------------------------------
+
+def _fake_registry(perturb: bool):
+    """A one-entry registry whose fuzz builder optionally flips an ulp."""
+    def fake_fuzz(cfg, rng):
+        want = rng.standard_normal(4)
+        got = want.copy()
+        if perturb:
+            got[0] = np.nextafter(got[0], np.inf)
+        return [("out", got, want, "bit-exact")]
+
+    return [{"name": "kernels.fake.k",
+             "path": "src/repro/kernels/fake.py",
+             "oracle": "fused_prox_stats", "tolerance": "bit-exact",
+             "configs": ({"label": "only"},), "fuzz": fake_fuzz}]
+
+
+def test_cli_fuzz_failure_gates_even_with_zero_findings(
+        tmp_path, capsys, monkeypatch):
+    import json
+
+    import repro.kernels.manifest as manifest
+
+    monkeypatch.setattr(manifest, "KERNEL_ENTRIES", _fake_registry(True))
+    report = tmp_path / "fuzz.json"
+    rc = cli.main(["src/repro/analysis", "--engine", "ast", "--root", REPO,
+                   "--fuzz-kernels", "--format", "json",
+                   "--output", str(report)])
+    capsys.readouterr()
+    assert rc == 1
+    data = json.loads(report.read_text(encoding="utf-8"))
+    assert data["counts"]["findings"] == 0        # static side is clean
+    assert data["kernel_fuzz"]["counts"] == {"cases": 1, "failures": 1}
+    case = data["kernel_fuzz"]["cases"][0]
+    assert case["entry"] == "kernels.fake.k" and not case["ok"]
+
+
+def test_cli_fuzz_pass_and_seed_passthrough(capsys, monkeypatch):
+    import repro.kernels.manifest as manifest
+
+    monkeypatch.setattr(manifest, "KERNEL_ENTRIES", _fake_registry(False))
+    rc = cli.main(["src/repro/analysis", "--engine", "ast", "--root", REPO,
+                   "--fuzz-kernels", "--fuzz-seed", "3"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "kernel fuzz (seed 3): 1 case(s), 0 failure(s)." in out

@@ -77,6 +77,71 @@ def test_blocksparse_dense_roundtrip(rng):
     np.testing.assert_allclose(np.asarray(back), a, rtol=1e-6)
 
 
+def test_blocksparse_rejects_non_contiguous_row_revisit():
+    """row_idx [0, 1, 0] revisits block-row 0 after writing block-row 1:
+    the kernel's sequential accumulation would flush and then clobber
+    block-row 0, so the wrapper must refuse at trace time (the CA401
+    revisit hazard, caught before any wrong numbers ship)."""
+    vals = jnp.ones((3, 4, 4), jnp.float32)
+    rows = jnp.asarray([0, 1, 0], jnp.int32)
+    cols = jnp.asarray([0, 1, 1], jnp.int32)
+    b = jnp.ones((8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="non-contiguously"):
+        ops.blocksparse_matmul(vals, rows, cols, b)
+
+
+def test_blocksparse_contiguous_duplicate_rows_accumulate(rng):
+    """Duplicate row ids in one contiguous CSR run are the accumulation
+    path, not a hazard: the result must match the dense product."""
+    bs, p, m = 4, 8, 8
+    a = rng.standard_normal((p, p)).astype(np.float32)
+    a[bs:, :bs] = 0.0          # block (1, 0) empty -> rows [0, 0, 1]
+    vals, rows, cols = ref.dense_to_block_csr(a, bs)
+    np.testing.assert_array_equal(np.asarray(rows), [0, 0, 1])
+    b = rng.standard_normal((p, m)).astype(np.float32)
+    out = ops.blocksparse_matmul(jnp.asarray(vals), jnp.asarray(rows),
+                                 jnp.asarray(cols), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_blocksparse_validation_skips_traced_row_idx(rng):
+    """Under jit the row table is a tracer: the host-side contiguity
+    check must stand aside (the static CA401 pass owns that case) and
+    tracing must succeed."""
+    import jax
+
+    bs, p, m = 4, 8, 8
+    a = rng.standard_normal((p, p)).astype(np.float32)
+    vals, rows, cols = ref.dense_to_block_csr(a, bs)
+    b = rng.standard_normal((p, m)).astype(np.float32)
+
+    @jax.jit
+    def run(v, r, c, bb):
+        return ops.blocksparse_matmul(v, r, c, bb, interpret=True)
+
+    out = run(jnp.asarray(vals), jnp.asarray(rows), jnp.asarray(cols),
+              jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_interpret_override_cannot_leak_part1():
+    """Pins the module-global interpret override; the autouse conftest
+    guard must restore it before part2 (file order is run order)."""
+    ops.set_interpret(True)
+    assert ops.interpret_default() is True
+
+
+def test_interpret_override_cannot_leak_part2():
+    assert ops._INTERPRET_OVERRIDE is None      # part1's pin was undone
+    ops.set_interpret(False)
+    ops.reset_interpret()
+    assert ops._INTERPRET_OVERRIDE is None
+    with pytest.raises(TypeError):
+        ops.set_interpret("yes")
+
+
 FLASH_CASES = [
     # B, Hq, Hkv, Lq, Lkv, D, causal, window, softcap
     (2, 4, 2, 128, 128, 64, True, None, None),
